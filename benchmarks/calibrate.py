@@ -1,0 +1,84 @@
+"""Measure the single-thread cost constants that drive the simulator.
+
+Runs the paper's synthetic benchmark (entries = {id:int64, vals:float32[k]},
+k ~ Poisson(5), values uniform [0,100)) through the real writer on this
+machine and extracts per-byte seal cost, per-commit critical-section cost,
+per-page commit cost and the compression ratio.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import asdict
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (
+    ColumnBatch, Collection, DevNullSink, Leaf, ParallelWriter, Schema,
+    SequentialWriter, WriteOptions,
+)
+
+from .simulate import Costs
+
+EVENT_SCHEMA = Schema([
+    Leaf("id", "int64"),
+    Collection("vals", Leaf("_0", "float32")),
+])
+
+
+def synth_batch(rng: np.random.Generator, n: int, id0: int = 0) -> ColumnBatch:
+    sizes = rng.poisson(5, n).astype(np.int64)
+    vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
+    return ColumnBatch.from_arrays(
+        EVENT_SCHEMA, n,
+        {"id": np.arange(id0, id0 + n), "vals": sizes, "vals._0": vals},
+    )
+
+
+def write_entries_devnull(n_entries: int, options: WriteOptions,
+                          batch_entries: int = 100_000, parallel: bool = False):
+    """-> (wall_s, stats) writing n_entries of synthetic data to /dev/null."""
+    rng = np.random.default_rng(0)
+    sink = DevNullSink()
+    w = (ParallelWriter if parallel else SequentialWriter)(
+        EVENT_SCHEMA, sink, options)
+    fill = w.create_fill_context() if parallel else w
+    t0 = time.perf_counter()
+    done = 0
+    while done < n_entries:
+        n = min(batch_entries, n_entries - done)
+        fill.fill_batch(synth_batch(rng, n, id0=done))
+        done += n
+    if parallel:
+        fill.close()
+    w.close()
+    return time.perf_counter() - t0, w.stats
+
+
+def calibrate(n_entries: int = 500_000, codec: str = "zlib",
+              cluster_bytes: int = 8 << 20) -> Costs:
+    opts = WriteOptions(codec=codec, level=1, cluster_bytes=cluster_bytes)
+    wall, stats = write_entries_devnull(n_entries, opts)
+    seal_s = stats.seal_ns / 1e9
+    # the critical section = lock-held time (reserve + metadata + write)
+    commit_s = stats.lock.held_ns / 1e9 / max(stats.clusters, 1)
+    # unbuffered: per-page critical section
+    opts_u = WriteOptions(codec=codec, level=1, cluster_bytes=cluster_bytes,
+                          buffered=False)
+    wall_u, stats_u = write_entries_devnull(n_entries, opts_u, parallel=True)
+    page_commit_s = (stats_u.lock.held_ns / 1e9) / max(stats_u.pages, 1)
+    return Costs(
+        seal_s_per_byte=seal_s / max(stats.uncompressed_bytes, 1),
+        commit_s=commit_s,
+        page_commit_s=page_commit_s,
+        compression_ratio=stats.compressed_bytes / max(stats.uncompressed_bytes, 1),
+        cluster_bytes=cluster_bytes,
+        pages_per_cluster=max(1, round(stats.pages / max(stats.clusters, 1))),
+    )
+
+
+if __name__ == "__main__":
+    c = calibrate()
+    for k, v in asdict(c).items():
+        print(f"{k}: {v}")

@@ -1,0 +1,77 @@
+"""§Perf hillclimbing driver: baseline vs variant dry-runs per cell.
+
+For a chosen (arch, shape) cell, runs the dry-run for the paper-faithful
+baseline and each requested variant, and reports the three roofline terms
+side by side — the measurement half of the hypothesis → change → measure →
+validate loop recorded in EXPERIMENTS.md §Perf.
+
+Run:
+  PYTHONPATH=src python -m benchmarks.perf_pass \
+      --arch smollm-360m --shape train_4k \
+      --variant chunked-attn --variant dp-wide
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch import dryrun
+from repro.launch.hlo_analysis import PEAK_FLOPS
+
+
+def term_row(rec):
+    r = rec["roofline"]
+    t_dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    useful = rec["model_flops_per_device"] / PEAK_FLOPS
+    return {
+        "compute_s": r["compute_s"],
+        "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"],
+        "dominant": r["dominant"],
+        "roofline_frac": useful / t_dom if t_dom else None,
+        "temp_gb": (rec["memory"]["temp_bytes"] or 0) / 2**30,
+    }
+
+
+def compare(arch: str, shape: str, variants, multi_pod=False, force=False):
+    rows = {}
+    base = dryrun.run_one(arch, shape, multi_pod, force=force)
+    assert base["status"] == "ok", base
+    rows["baseline"] = term_row(base)
+    for v in variants:
+        rec = dryrun.run_one(arch, shape, multi_pod, force=force, variant=v)
+        rows[v] = (term_row(rec) if rec["status"] == "ok"
+                   else {"error": rec.get("error", rec["status"])})
+    return rows
+
+
+def print_table(arch, shape, rows):
+    print(f"\n=== {arch} x {shape} ===")
+    print(f"{'variant':<16s}"
+          f"{'compute_s':>11s}{'memory_s':>11s}{'coll_s':>9s}"
+          f"{'dominant':>11s}{'frac':>7s}{'temp GiB':>9s}")
+    for name, r in rows.items():
+        if "error" in r:
+            print(f"{name:<16s}  ERROR: {r['error'][:80]}")
+            continue
+        print(f"{name:<16s}{r['compute_s']:11.4f}{r['memory_s']:11.4f}"
+              f"{r['collective_s']:9.4f}{r['dominant']:>11s}"
+              f"{r['roofline_frac']:7.3f}{r['temp_gb']:9.1f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    rows = compare(args.arch, args.shape, args.variant, args.multi_pod,
+                   args.force)
+    print_table(args.arch, args.shape, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline reporter: dry-run JSONs -> the §Roofline table.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS(6·N·D / 6·N_active·D), useful fraction of compiled
+compute, and the roofline fraction (useful compute time / dominant term).
+
+Also ranks cells to pick the three hillclimb targets: worst roofline
+fraction, most collective-bound, most representative of the paper's
+technique (the train cell with the highest checkpoint-relevant state).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+DRYRUN = Path(__file__).parent / "results" / "dryrun"
+
+from repro.launch.hlo_analysis import PEAK_FLOPS
+
+_IDEAL_CACHE: Dict[tuple, float] = {}
+
+
+def _ideal_bytes(rec: dict) -> Optional[float]:
+    """Irreducible decode bytes/device: params + cache read once."""
+    key = (rec["arch"], rec["shape"], rec["n_chips"])
+    if key in _IDEAL_CACHE:
+        return _IDEAL_CACHE[key]
+    try:
+        import jax
+        import numpy as np
+        from repro.configs import SHAPES_BY_NAME, get_arch
+        from repro.models.registry import build
+        bundle = build(get_arch(rec["arch"]))
+        cell = SHAPES_BY_NAME[rec["shape"]]
+        pb = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(bundle.param_shapes()))
+        cb = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(
+                     jax.eval_shape(lambda: bundle.init_cache(
+                         cell.global_batch, cell.seq_len))))
+        val = (pb + cb) / rec["n_chips"]
+    except Exception:
+        val = None
+    _IDEAL_CACHE[key] = val
+    return val
+
+
+def load(mesh: str = "singlepod") -> List[dict]:
+    out = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def roofline_fraction(rec: dict) -> Optional[float]:
+    """Fraction of the dominant roofline actually doing irreducible work.
+
+    Train/prefill (compute-meaningful): useful-model-compute time /
+    dominant-term time.  Decode (bandwidth-bound by nature): irreducible
+    bytes (params + cache read once) / compiled bytes — how close the
+    step is to the memory-bandwidth roofline.
+    """
+    if rec.get("status") != "ok":
+        return None
+    r = rec["roofline"]
+    if rec["shape"].startswith(("decode", "long")):
+        ideal = rec.get("ideal_bytes_per_device") or _ideal_bytes(rec)
+        if ideal and rec.get("hlo_bytes"):
+            return min(1.0, ideal / rec["hlo_bytes"])
+        # fall back to compute fraction
+    t_dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    t_useful = rec["model_flops_per_device"] / PEAK_FLOPS
+    return t_useful / t_dom if t_dom else None
+
+
+def table(mesh: str = "singlepod") -> str:
+    rows = []
+    head = (f"| arch | shape | compute_s | memory_s | collective_s | "
+            f"dominant | useful_frac | roofline_frac |")
+    sep = "|" + "---|" * 8
+    rows.append(head)
+    rows.append(sep)
+    for rec in load(mesh):
+        if rec["status"] == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"{rec['reason'].split(':')[0]} | — | — |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | | | |")
+            continue
+        r = rec["roofline"]
+        rf = roofline_fraction(rec)
+        uf = rec.get("useful_fraction")
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {uf:.3f} | {rf:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb_cells(mesh: str = "singlepod") -> Dict[str, dict]:
+    recs = [r for r in load(mesh) if r.get("status") == "ok"]
+    by_frac = sorted(recs, key=lambda r: roofline_fraction(r) or 1.0)
+    worst = by_frac[0]
+
+    def coll_share(r):
+        rr = r["roofline"]
+        tot = rr["compute_s"] + rr["memory_s"] + rr["collective_s"]
+        if max(rr["compute_s"], rr["memory_s"], rr["collective_s"]) < 0.01:
+            return 0.0  # degenerate cell (e.g. B=1 decode): not meaningful
+        return rr["collective_s"] / tot if tot else 0.0
+
+    most_coll = max(recs, key=coll_share)
+    # most representative of the paper's technique: the largest train cell
+    # (checkpoint state = the paper's workload; deepseek-67b train is the
+    # flagship) — the train cell with the largest model_flops
+    train = [r for r in recs if r["shape"] == "train_4k"]
+    flagship = max(train, key=lambda r: r["model_flops"])
+    return {"worst_roofline": worst, "most_collective_bound": most_coll,
+            "paper_flagship": flagship}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod",
+                    choices=["singlepod", "multipod"])
+    args = ap.parse_args()
+    print(table(args.mesh))
+    print()
+    picks = pick_hillclimb_cells(args.mesh)
+    for label, rec in picks.items():
+        print(f"{label}: {rec['arch']} x {rec['shape']} "
+              f"(dominant={rec['roofline']['dominant']}, "
+              f"roofline_frac={roofline_fraction(rec):.3f})")
+
+
+if __name__ == "__main__":
+    main()

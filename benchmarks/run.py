@@ -1,0 +1,96 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows summarizing each benchmark
+(us_per_call = microseconds per relevant unit; derived = the headline
+metric compared against the paper).
+
+  fig2  weak scaling to /dev/null       (paper Fig. 2)
+  fig3  SSD device limits               (paper Fig. 3)
+  fig4  HDD device limits               (paper Fig. 4)
+  fig5  AGC skimming strategies         (paper Fig. 5)
+  roofline  dry-run summary             (EXPERIMENTS §Roofline; requires
+            benchmarks/results/dryrun/*.json from repro.launch.dryrun)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import fig2_devnull, fig3_ssd, fig4_hdd, fig5_skim, roofline
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--entries", type=int, default=None)
+    args = ap.parse_args()
+    entries = args.entries or (100_000 if args.quick else 200_000)
+    events = 3_000 if args.quick else 8_000
+
+    rows = []
+
+    print("\n################ fig2: /dev/null weak scaling ################")
+    f2 = fig2_devnull.run(entries)
+    one = next(r for r in f2["measured"]
+               if r["config"] == "buffered" and r["threads"] == 1)
+    us_per_entry = one["wall_s"] / entries * 1e6
+    rows.append(("fig2_devnull", f"{us_per_entry:.3f}",
+                 f"buffered_64t_speedup={f2['speedup_64t']['buffered']:.1f}x"
+                 f"_paper=45.4x;lock_ratio={f2['lock_ratio']:.0f}x_paper~90x"))
+
+    print("\n################ fig3: SSD ################")
+    f3 = fig3_ssd.run()
+    rows.append(("fig3_ssd", f"{us_per_entry:.3f}",
+                 f"peak_frac_of_771MBs={f3['peak_fraction_of_limit']:.2f}"
+                 f"_paper=0.91"))
+
+    print("\n################ fig4: HDD ################")
+    f4 = fig4_hdd.run()
+    rows.append(("fig4_hdd", f"{us_per_entry:.3f}",
+                 f"uncompressed_2t_frac={f4['uncompressed_at_2t_frac']:.2f}"
+                 f"_paper~0.83"))
+
+    print("\n################ fig5: AGC skimming ################")
+    f5 = fig5_skim.run(events)
+    par1 = next(r for r in f5["measured"]["runs"]
+                if r["strategy"] == "parallel" and r["threads"] == 1)
+    us_per_event_in = par1["wall_s"] / (events * 9 * 4) * 1e6
+    sp = f5["projected"]["parallel"]["speedup"]
+    p128 = sp.get(128, sp.get("128"))
+    rows.append(("fig5_skim", f"{us_per_event_in:.3f}",
+                 f"parallel_128t_projected={p128}x_paper=42.7x"))
+
+    print("\n################ roofline (dry-run) ################")
+    try:
+        recs = roofline.load("singlepod")
+        ok = [r for r in recs if r.get("status") == "ok"]
+        if ok:
+            fracs = [roofline.roofline_fraction(r) for r in ok]
+            best = max(fracs)
+            worst = min(fracs)
+            picks = roofline.pick_hillclimb_cells()
+            rows.append(("roofline", f"{len(ok)}",
+                         f"cells_ok={len(ok)};frac_best={best:.3f};"
+                         f"frac_worst={worst:.3f}"))
+            print(f"{len(ok)} cells; roofline fraction "
+                  f"{worst:.3f}..{best:.3f}")
+            for label, rec in picks.items():
+                print(f"  {label}: {rec['arch']} x {rec['shape']}")
+        else:
+            rows.append(("roofline", "0", "run_repro.launch.dryrun_first"))
+    except Exception as e:
+        rows.append(("roofline", "0", f"unavailable:{type(e).__name__}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Calibrated discrete-event simulator of the parallel-writing protocol.
+
+This container has ONE core, so thread-scaling curves cannot be measured
+directly.  What CAN be measured for real (benchmarks/fig2_devnull.py):
+
+  * per-thread serialization+compression cost (seal time / byte),
+  * the critical-section cost per commit (lock-held time),
+  * per-page commit cost (unbuffered mode),
+  * lock acquisition / contention counts (the paper's futex diagnosis),
+  * device bandwidth model parameters (paper's fio numbers).
+
+This simulator replays the exact writer protocol — per-thread cluster
+preparation, a single mutex for reserve+metadata(+write), optional
+fallocate and write-outside-lock — over N cores with those measured
+constants, reproducing the SHAPE of the paper's Figs. 2-4 (weak scaling,
+lock-contention collapse of the unbuffered mode, device-bandwidth
+plateaus).  Every calibration constant is recorded next to the results.
+
+Model:
+  * n_threads threads on n_cores cores; compute (seal/compress) time
+    scales by core oversubscription factor max(1, n_threads/n_cores);
+  * one mutex: commits serialize; FIFO service;
+  * device: unlimited (/dev/null) or a shared channel with bandwidth bw
+    (bw_prealloc when fallocated) — writes serialize at the device;
+  * buffered: 1 commit per cluster; unbuffered: 1 lock per page (commit
+    cost per page) + metadata commit per cluster.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class Costs:
+    """Calibrated single-thread costs (seconds, bytes)."""
+
+    seal_s_per_byte: float          # serialization+compression / uncompressed byte
+    commit_s: float                 # critical section per cluster (metadata+reserve)
+    page_commit_s: float            # critical section per page (unbuffered)
+    compression_ratio: float        # compressed/uncompressed
+    cluster_bytes: int              # uncompressed bytes per cluster
+    pages_per_cluster: int
+    # futex wake + context switch per CONTENDED acquisition: this is the
+    # mechanism behind the paper's 27,000-futex unbuffered collapse (§6.1)
+    handoff_s: float = 10e-6
+
+
+@dataclass(frozen=True)
+class Device:
+    bw: Optional[float] = None      # bytes/s, None = infinite (/dev/null)
+    bw_prealloc: Optional[float] = None
+
+
+@dataclass
+class SimResult:
+    wall_s: float
+    uncompressed_bytes: int
+    compressed_bytes: int
+    lock_acquisitions: int
+    lock_wait_s: float
+    lock_held_s: float
+    device_busy_s: float
+
+    @property
+    def bandwidth_compressed(self) -> float:
+        return self.compressed_bytes / self.wall_s
+
+    @property
+    def bandwidth_uncompressed(self) -> float:
+        return self.uncompressed_bytes / self.wall_s
+
+
+def simulate(
+    n_threads: int,
+    clusters_per_thread: int,
+    costs: Costs,
+    device: Device = Device(),
+    n_cores: int = 64,
+    buffered: bool = True,
+    fallocate: bool = False,
+    write_outside_lock: bool = False,
+    independent_writers: bool = False,
+) -> SimResult:
+    """Event-driven replay of the writer protocol."""
+    slow = max(1.0, n_threads / n_cores)   # core oversubscription
+    seal_s = costs.seal_s_per_byte * costs.cluster_bytes * slow
+    comp_bytes = int(costs.cluster_bytes * costs.compression_ratio)
+    bw = (device.bw_prealloc if (fallocate and device.bw_prealloc)
+          else device.bw)
+
+    # lock + device as busy-until resources
+    lock_free_at = [0.0] * (n_threads if independent_writers else 1)
+    dev_free_at = 0.0
+    lock_acq = 0
+    lock_wait = 0.0
+    lock_held = 0.0
+    dev_busy = 0.0
+    done_at = 0.0
+
+    units_per_cluster = 1 if buffered else costs.pages_per_cluster
+    unit_commit_s = costs.commit_s if buffered else costs.page_commit_s
+    unit_bytes = comp_bytes // units_per_cluster
+
+    # per-thread timeline; process threads round-robin by next event time
+    pq = [(0.0, t, 0, 0) for t in range(n_threads)]  # (time, thread, cluster, unit)
+    heapq.heapify(pq)
+    sealed_at: Dict[int, float] = {}
+
+    while pq:
+        t_now, th, cl, unit = heapq.heappop(pq)
+        if cl >= clusters_per_thread:
+            done_at = max(done_at, t_now)
+            continue
+        if unit == 0:
+            # seal the cluster (no lock) then start committing units
+            t_sealed = t_now + seal_s
+            heapq.heappush(pq, (t_sealed, th, cl, 1))
+            continue
+        # commit one unit: acquire lock -> reserve+meta (+ write inside)
+        li = th if independent_writers else 0
+        contended = lock_free_at[li] > t_now
+        start = max(t_now, lock_free_at[li])
+        lock_wait += start - t_now
+        lock_acq += 1
+        held = unit_commit_s + (costs.handoff_s if contended else 0.0)
+        write_s = 0.0
+        if bw is not None:
+            write_s = unit_bytes / bw
+        if write_outside_lock or bw is None:
+            # /dev/null write cost is ~0; opt-2 moves write out of the lock
+            lock_free_at[li] = start + held
+            lock_held += held
+            end = start + held
+            if bw is not None:
+                dstart = max(end, dev_free_at)
+                dev_free_at = dstart + write_s
+                dev_busy += write_s
+                end = dstart + write_s
+        else:
+            dstart = max(start + held, dev_free_at)
+            dev_free_at = dstart + write_s
+            dev_busy += write_s
+            end = dstart + write_s
+            lock_free_at[li] = end
+            lock_held += end - start
+        if unit < units_per_cluster:
+            heapq.heappush(pq, (end, th, cl, unit + 1))
+        else:
+            heapq.heappush(pq, (end, th, cl + 1, 0))
+
+    total_unc = n_threads * clusters_per_thread * costs.cluster_bytes
+    total_comp = n_threads * clusters_per_thread * comp_bytes
+    return SimResult(
+        wall_s=done_at,
+        uncompressed_bytes=total_unc,
+        compressed_bytes=total_comp,
+        lock_acquisitions=lock_acq,
+        lock_wait_s=lock_wait,
+        lock_held_s=lock_held,
+        device_busy_s=dev_busy,
+    )

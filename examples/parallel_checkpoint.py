@@ -1,0 +1,58 @@
+"""Parallel single-file checkpointing demo (the paper's technique on
+training state).
+
+Saves a ~200MB model with 1/2/4/8 writer threads into one file each,
+reports wall time, lock counts and critical-section share, verifies all
+restore identically, and demonstrates elastic restore (file written by 8
+writers restored and re-sharded without any merge step).
+
+Run:  PYTHONPATH=src python examples/parallel_checkpoint.py
+"""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import load_checkpoint, save_checkpoint
+from repro.core import RNTJReader
+
+rng = np.random.default_rng(0)
+tree = {
+    f"layer_{i}": {
+        "w": jnp.asarray(rng.normal(size=(512, 2048)).astype(np.float32)),
+        "b": jnp.zeros((2048,), jnp.float32),
+    }
+    for i in range(48)
+}
+nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+print(f"state: {nbytes/2**20:.0f} MiB")
+
+work = tempfile.mkdtemp(prefix="repro_ckpt_")
+print(f"\n{'writers':>8s} {'time':>8s} {'MB/s':>8s} {'locks':>7s} "
+      f"{'lock-held':>10s} {'clusters':>9s}")
+paths = {}
+for n in (1, 2, 4, 8):
+    p = os.path.join(work, f"ckpt_w{n}.rntj")
+    t0 = time.perf_counter()
+    stats = save_checkpoint(p, tree, n_writers=n, row_block_bytes=2 << 20)
+    dt = time.perf_counter() - t0
+    paths[n] = p
+    held_frac = stats["lock_held_ms"] / (dt * 1e3)
+    print(f"{n:8d} {dt:7.2f}s {nbytes/2**20/dt:8.1f} "
+          f"{stats['lock_acquisitions']:7d} {held_frac:9.1%} "
+          f"{stats['clusters']:9d}")
+
+print("\nverifying all layouts restore identically...")
+ref, _ = load_checkpoint(paths[1], target_tree=tree)
+for n, p in paths.items():
+    got, _ = load_checkpoint(p, target_tree=tree)
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK: single self-describing file per run, no merge step, "
+      "restore is writer-count-agnostic (elastic).")
+print(f"workdir: {work}")

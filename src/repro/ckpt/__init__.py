@@ -1,0 +1,8 @@
+"""Parallel single-file distributed checkpointing (the paper's technique
+applied to training state)."""
+
+from .checkpoint import CKPT_SCHEMA, load_checkpoint, save_checkpoint
+from .manager import CheckpointManager
+
+__all__ = ["CKPT_SCHEMA", "load_checkpoint", "save_checkpoint",
+           "CheckpointManager"]

@@ -1,0 +1,51 @@
+"""repro.core — parallel writing of nested data in columnar formats.
+
+The paper's contribution (Hahnfeld, Blomer, Kollegger 2024) as a library:
+nested schemas decomposed into offset+leaf columns, pages as units of
+compression, relocatable clusters as units of writing, and a multithreaded
+single-file writer whose only synchronization is a short reserve+metadata
+critical section.
+"""
+
+from .schema import (
+    Schema,
+    Field,
+    Leaf,
+    Collection,
+    Record,
+    ColumnSpec,
+    ColumnBatch,
+    KIND_LEAF,
+    KIND_OFFSET,
+    decompose_entry,
+    recompose_entries,
+)
+from .writer import (
+    WriteOptions,
+    SequentialWriter,
+    ParallelWriter,
+    FillContext,
+    write_entries,
+)
+from .reader import RNTJReader
+from .merge import BufferMerger, merge_files
+from .container import (
+    Sink,
+    FileSink,
+    DevNullSink,
+    MemorySink,
+    ThrottledSink,
+    open_sink,
+)
+from .stats import WriterStats, CountingLock
+from . import compression, encoding, metadata, pages, cluster
+
+__all__ = [
+    "Schema", "Field", "Leaf", "Collection", "Record", "ColumnSpec",
+    "ColumnBatch", "KIND_LEAF", "KIND_OFFSET", "decompose_entry",
+    "recompose_entries", "WriteOptions", "SequentialWriter", "ParallelWriter",
+    "FillContext", "write_entries", "RNTJReader", "BufferMerger",
+    "merge_files", "Sink", "FileSink", "DevNullSink", "MemorySink",
+    "ThrottledSink", "open_sink", "WriterStats", "CountingLock",
+    "compression", "encoding", "metadata", "pages", "cluster",
+]

@@ -1,0 +1,204 @@
+"""Clusters: the (default) unit of writing (paper §4, §5).
+
+A cluster holds all pages of a consecutive range of entries.  Offset
+columns are accumulated as *sizes* and integrated to **cluster-relative**
+offsets at seal time, which makes the sealed byte blob relocatable: it can
+be committed at any file offset without content changes — the property
+that lets serialization and compression run with no synchronization.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import compression as comp
+from .encoding import sizes_to_offsets
+from .pages import PageDesc, build_page, elements_per_page
+from .schema import KIND_OFFSET, OFFSET_DTYPE, ColumnBatch, Schema, decompose_entry
+
+
+@dataclass
+class SealedCluster:
+    """A serialized+compressed cluster, ready to commit anywhere.
+
+    ``pages[i]`` descriptors carry cluster-relative offsets into ``blob``.
+    """
+
+    blob: bytes
+    n_entries: int
+    n_elements: List[int]          # per column
+    pages: List[PageDesc]          # cluster-relative offsets
+    uncompressed_bytes: int
+    seal_ns: int = 0
+
+    @property
+    def size(self) -> int:
+        return len(self.blob)
+
+    def rebase(self, base: int) -> List[PageDesc]:
+        return [p.rebase(base) for p in self.pages]
+
+
+class ClusterBuilder:
+    """Accumulates decomposed entries and seals them into a cluster.
+
+    Also supports *page draining* for the unbuffered (page-granular) writer
+    mode: whenever a column holds a full page of elements it can be built
+    and handed out immediately.
+    """
+
+    def __init__(self, schema: Schema, page_size: int, codec: int, level: int = -1,
+                 checksum: bool = True):
+        self.schema = schema
+        self.page_size = page_size
+        self.codec = codec
+        self.level = level
+        self.checksum = checksum
+        self._chunks: List[List[np.ndarray]] = [[] for _ in schema.columns]
+        # cluster-relative running end-offset per offset column
+        self._acc_offset = [0] * schema.n_columns
+        self._n_elements = [0] * schema.n_columns
+        self.n_entries = 0
+        self.uncompressed_bytes = 0
+        self._page_elems = [
+            elements_per_page(c, page_size) for c in schema.columns
+        ]
+        # unbuffered mode: elements already drained into standalone pages
+        self._drained: List[int] = [0] * schema.n_columns
+
+    # -- filling -----------------------------------------------------------
+
+    def fill(self, entry: Dict) -> None:
+        arrays = decompose_entry(self.schema, entry)
+        self._append_arrays(arrays, 1)
+
+    def fill_batch(self, batch: ColumnBatch) -> None:
+        if batch.schema.n_columns != self.schema.n_columns:
+            raise ValueError("batch schema does not match writer schema")
+        arrays = [batch.data[c.index] for c in self.schema.columns]
+        self._append_arrays(arrays, batch.n_entries)
+
+    def _append_arrays(self, arrays: Sequence[np.ndarray], n_entries: int) -> None:
+        for col in self.schema.columns:
+            a = arrays[col.index]
+            if col.kind == KIND_OFFSET:
+                # sizes -> cluster-relative end offsets, continuing the
+                # running sum of this cluster
+                offs = sizes_to_offsets(a) + self._acc_offset[col.index]
+                if len(offs):
+                    self._acc_offset[col.index] = int(offs[-1])
+                a = offs
+            if len(a):
+                self._chunks[col.index].append(a)
+                self._n_elements[col.index] += len(a)
+                self.uncompressed_bytes += a.nbytes
+        self.n_entries += n_entries
+
+    @property
+    def is_empty(self) -> bool:
+        return self.n_entries == 0
+
+    # -- sealing (buffered mode) --------------------------------------------
+
+    def _column_elements(self, idx: int) -> np.ndarray:
+        chunks = self._chunks[idx]
+        if not chunks:
+            col = self.schema.columns[idx]
+            dt = OFFSET_DTYPE if col.kind == KIND_OFFSET else col.dtype
+            return np.empty(0, dtype=dt)
+        if len(chunks) == 1:
+            return chunks[0]
+        return np.concatenate(chunks)
+
+    def seal(self) -> SealedCluster:
+        """Serialize + compress all pages.  No lock required (paper §4.1)."""
+        t0 = time.perf_counter_ns()
+        parts: List[bytes] = []
+        descs: List[PageDesc] = []
+        pos = 0
+        for col in self.schema.columns:
+            elems = self._column_elements(col.index)
+            per = self._page_elems[col.index]
+            for start in range(0, len(elems), per):
+                payload, desc = build_page(
+                    col, elems[start : start + per], self.codec, self.level,
+                    self.checksum,
+                )
+                desc.offset = pos
+                pos += desc.size
+                parts.append(payload)
+                descs.append(desc)
+        sealed = SealedCluster(
+            blob=b"".join(parts),
+            n_entries=self.n_entries,
+            n_elements=list(self._n_elements),
+            pages=descs,
+            uncompressed_bytes=self.uncompressed_bytes,
+            seal_ns=time.perf_counter_ns() - t0,
+        )
+        self._reset()
+        return sealed
+
+    # -- page draining (unbuffered mode) -------------------------------------
+
+    def drain_full_pages(self) -> List[Tuple[bytes, PageDesc]]:
+        """Build pages for every column that holds >= one full page.
+
+        Used by the page-granular ("unbuffered") writer: compressed pages
+        are written out immediately, only their descriptors are retained
+        until the cluster is finalized (paper §5).
+        """
+        out: List[Tuple[bytes, PageDesc]] = []
+        for col in self.schema.columns:
+            per = self._page_elems[col.index]
+            pending = self._n_elements[col.index] - self._drained[col.index]
+            if pending < per:
+                continue
+            elems = self._column_elements(col.index)
+            self._chunks[col.index] = [elems]  # canonicalize
+            start = self._drained[col.index]
+            while pending >= per:
+                payload, desc = build_page(
+                    col, elems[start : start + per], self.codec, self.level,
+                    self.checksum,
+                )
+                out.append((payload, desc))
+                start += per
+                pending -= per
+            self._drained[col.index] = start
+        return out
+
+    def drain_rest(self) -> List[Tuple[bytes, PageDesc]]:
+        """Build the final partial pages (cluster finalization)."""
+        out: List[Tuple[bytes, PageDesc]] = []
+        for col in self.schema.columns:
+            elems = self._column_elements(col.index)
+            start = self._drained[col.index]
+            per = self._page_elems[col.index]
+            while start < len(elems):
+                payload, desc = build_page(
+                    col, elems[start : start + per], self.codec, self.level,
+                    self.checksum,
+                )
+                out.append((payload, desc))
+                start += desc.n_elements
+            self._drained[col.index] = start
+        return out
+
+    def finish_unbuffered(self) -> Tuple[int, List[int], int]:
+        """Return (n_entries, per-column n_elements, uncompressed) and reset."""
+        res = (self.n_entries, list(self._n_elements), self.uncompressed_bytes)
+        self._reset()
+        return res
+
+    def _reset(self) -> None:
+        self._chunks = [[] for _ in self.schema.columns]
+        self._acc_offset = [0] * self.schema.n_columns
+        self._n_elements = [0] * self.schema.n_columns
+        self._drained = [0] * self.schema.n_columns
+        self.n_entries = 0
+        self.uncompressed_bytes = 0

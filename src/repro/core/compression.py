@@ -1,0 +1,77 @@
+"""Entropy-coder codecs for pages.
+
+ROOT supports DEFLATE, LZMA, LZ4 and Zstandard (paper §3).  This container
+has the Python stdlib only, so we provide DEFLATE (zlib), LZMA and BZ2 plus
+an explicit ``none`` fast path; codec ids 4 (lz4) and 5 (zstd) are reserved
+so files written elsewhere with those codecs keep stable ids.
+
+``zlib``/``lzma``/``bz2`` all release the GIL while (de)compressing buffers,
+which is what lets the paper's thread-parallel compression model work in
+Python too: serialization+compression of a unit of writing runs with no
+synchronization (paper §4.1).
+"""
+
+from __future__ import annotations
+
+import bz2
+import lzma
+import zlib
+from typing import Callable, Dict, Tuple
+
+CODEC_NONE = 0
+CODEC_ZLIB = 1
+CODEC_LZMA = 2
+CODEC_BZ2 = 3
+CODEC_LZ4 = 4  # reserved (not installed here)
+CODEC_ZSTD = 5  # reserved (not installed here)
+
+_NAMES: Dict[str, int] = {
+    "none": CODEC_NONE,
+    "zlib": CODEC_ZLIB,
+    "deflate": CODEC_ZLIB,
+    "lzma": CODEC_LZMA,
+    "bz2": CODEC_BZ2,
+}
+
+DEFAULT_LEVEL = {CODEC_ZLIB: 1, CODEC_LZMA: 0, CODEC_BZ2: 1}
+
+
+def codec_id(name_or_id) -> int:
+    if isinstance(name_or_id, int):
+        return name_or_id
+    try:
+        return _NAMES[name_or_id.lower()]
+    except KeyError:
+        raise ValueError(f"unknown codec {name_or_id!r}") from None
+
+
+def compress(data: bytes, codec: int, level: int = -1) -> bytes:
+    if codec == CODEC_NONE:
+        return data
+    if level < 0:
+        level = DEFAULT_LEVEL[codec]
+    if codec == CODEC_ZLIB:
+        return zlib.compress(data, level)
+    if codec == CODEC_LZMA:
+        return lzma.compress(data, preset=level)
+    if codec == CODEC_BZ2:
+        return bz2.compress(data, max(1, level))
+    raise ValueError(f"codec {codec} not available in this build")
+
+
+def decompress(data: bytes, codec: int, uncompressed_size: int) -> bytes:
+    if codec == CODEC_NONE:
+        return data
+    if codec == CODEC_ZLIB:
+        out = zlib.decompress(data)
+    elif codec == CODEC_LZMA:
+        out = lzma.decompress(data)
+    elif codec == CODEC_BZ2:
+        out = bz2.decompress(data)
+    else:
+        raise ValueError(f"codec {codec} not available in this build")
+    if len(out) != uncompressed_size:
+        raise IOError(
+            f"decompressed size mismatch: {len(out)} != {uncompressed_size}"
+        )
+    return out

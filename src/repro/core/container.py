@@ -1,0 +1,219 @@
+"""Container sinks: where reserved extents of the file live.
+
+The container format provides exactly the operation the paper needs
+(§4.2): *reserve a byte extent of known size* (requires synchronization —
+done by the writer's critical section) and *write bytes at an offset*
+(no synchronization needed; ``pwrite`` is positioned and thread-safe).
+
+Sinks:
+  * :class:`FileSink`      — a real file, ``os.pwrite`` + optional fallocate.
+  * :class:`DevNullSink`   — infinitely fast storage (paper Fig. 2).
+  * :class:`ThrottledSink` — bandwidth-limited wrapper to emulate the SSD /
+    HDD of Figs. 3–4 on this container (token-bucket on write completion).
+  * :class:`MemorySink`    — in-memory file for the TBufferMerger analog.
+"""
+
+from __future__ import annotations
+
+import errno
+import os
+import threading
+import time
+from typing import Optional
+
+from .stats import IOStats
+
+
+class Sink:
+    """Abstract positioned-write sink with an end-of-file cursor."""
+
+    def __init__(self) -> None:
+        self.io = IOStats()
+        self._end = 0
+
+    # The end-of-file cursor.  NOT thread safe: the caller must hold the
+    # writer's critical-section lock while reserving (paper §4.2).
+    def reserve(self, size: int) -> int:
+        off = self._end
+        self._end += size
+        return off
+
+    @property
+    def size(self) -> int:
+        return self._end
+
+    def pwrite(self, offset: int, data: bytes) -> None:
+        raise NotImplementedError
+
+    def pread(self, offset: int, size: int) -> bytes:
+        raise NotImplementedError
+
+    def fallocate(self, offset: int, size: int) -> None:  # opt-1 hook
+        self.io.fallocate_calls += 1
+
+    def fsync(self) -> None:
+        self.io.fsync_calls += 1
+
+    def close(self) -> None:
+        pass
+
+    def readable(self) -> bool:
+        return False
+
+
+class FileSink(Sink):
+    def __init__(self, path: str, create: bool = True):
+        super().__init__()
+        self.path = path
+        flags = os.O_RDWR | (os.O_CREAT | os.O_TRUNC if create else 0)
+        self.fd = os.open(path, flags, 0o644)
+        if not create:
+            self._end = os.fstat(self.fd).st_size
+
+    def pwrite(self, offset: int, data: bytes) -> None:
+        view = memoryview(data)
+        pos = 0
+        while pos < len(view):
+            n = os.pwrite(self.fd, view[pos:], offset + pos)
+            pos += n
+            self.io.write_calls += 1
+        self.io.bytes_written += len(view)
+
+    def pread(self, offset: int, size: int) -> bytes:
+        out = bytearray()
+        while len(out) < size:
+            chunk = os.pread(self.fd, size - len(out), offset + len(out))
+            if not chunk:
+                raise EOFError(f"short read at {offset}+{len(out)} of {self.path}")
+            out += chunk
+        return bytes(out)
+
+    def fallocate(self, offset: int, size: int) -> None:
+        super().fallocate(offset, size)
+        if size <= 0:
+            return
+        try:
+            os.posix_fallocate(self.fd, offset, size)
+        except OSError as e:  # pragma: no cover - fs dependent
+            if e.errno not in (errno.EOPNOTSUPP, errno.EINVAL, errno.ENOSYS):
+                raise
+
+    def fsync(self) -> None:
+        super().fsync()
+        os.fsync(self.fd)
+
+    def close(self) -> None:
+        if self.fd >= 0:
+            os.close(self.fd)
+            self.fd = -1
+
+    def readable(self) -> bool:
+        return True
+
+
+class DevNullSink(Sink):
+    """Tracks the file layout but discards bytes — the paper's /dev/null
+    configuration isolates the software stack from storage bandwidth."""
+
+    def pwrite(self, offset: int, data: bytes) -> None:
+        self.io.write_calls += 1
+        self.io.bytes_written += len(data)
+
+    def pread(self, offset: int, size: int) -> bytes:
+        raise IOError("DevNullSink is write-only")
+
+
+class MemorySink(Sink):
+    def __init__(self) -> None:
+        super().__init__()
+        self.buf = bytearray()
+        self._buf_lock = threading.Lock()
+
+    def pwrite(self, offset: int, data: bytes) -> None:
+        with self._buf_lock:
+            need = offset + len(data)
+            if len(self.buf) < need:
+                self.buf.extend(b"\x00" * (need - len(self.buf)))
+            self.buf[offset : offset + len(data)] = data
+        self.io.write_calls += 1
+        self.io.bytes_written += len(data)
+
+    def pread(self, offset: int, size: int) -> bytes:
+        return bytes(self.buf[offset : offset + size])
+
+    def readable(self) -> bool:
+        return True
+
+
+class ThrottledSink(Sink):
+    """Wraps another sink and enforces a byte bandwidth on writes.
+
+    Used to emulate the fio-measured device limits of the paper's SSD
+    (771 / 1075 MB/s) and HDD (217 MB/s) on this container.  When
+    ``fallocated`` extents are written, the effective bandwidth is
+    ``bw_prealloc`` (the paper's Fig. 3 dashed line), otherwise ``bw``.
+    """
+
+    def __init__(self, inner: Sink, bw: float, bw_prealloc: Optional[float] = None):
+        super().__init__()
+        self.inner = inner
+        self.bw = bw
+        self.bw_prealloc = bw_prealloc if bw_prealloc is not None else bw
+        self._tlock = threading.Lock()
+        self._busy_until = time.perf_counter()
+        self._prealloc: list = []  # (start, end) fallocated extents
+
+    def reserve(self, size: int) -> int:
+        return self.inner.reserve(size)
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def _is_prealloc(self, offset: int, size: int) -> bool:
+        for s, e in self._prealloc:
+            if offset >= s and offset + size <= e:
+                return True
+        return False
+
+    def pwrite(self, offset: int, data: bytes) -> None:
+        bw = self.bw_prealloc if self._is_prealloc(offset, len(data)) else self.bw
+        cost = len(data) / bw
+        # The device is a single shared resource: model it as a busy-until
+        # timestamp; each write extends it and the caller sleeps until its
+        # own completion time (writes from many threads serialize at the
+        # device, like a request queue).
+        with self._tlock:
+            now = time.perf_counter()
+            start = max(now, self._busy_until)
+            done = start + cost
+            self._busy_until = done
+        self.inner.pwrite(offset, data)
+        delay = done - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        self.io.write_calls += 1
+        self.io.bytes_written += len(data)
+
+    def pread(self, offset: int, size: int) -> bytes:
+        return self.inner.pread(offset, size)
+
+    def fallocate(self, offset: int, size: int) -> None:
+        super().fallocate(offset, size)
+        with self._tlock:
+            self._prealloc.append((offset, offset + size))
+        self.inner.fallocate(offset, size)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def readable(self) -> bool:
+        return self.inner.readable()
+
+
+def open_sink(path: str, create: bool = True) -> Sink:
+    if path in ("/dev/null", "devnull", "null:"):
+        return DevNullSink()
+    if path == "mem:":
+        return MemorySink()
+    return FileSink(path, create=create)

@@ -1,0 +1,130 @@
+"""Column preconditioning encodings (numpy reference implementations).
+
+These mirror RNTuple's on-disk column encodings: *split* (byte-plane
+shuffle) for multi-byte primitives and *delta + zigzag + split* for offset
+columns.  Preconditioning radically improves the entropy coder's ratio on
+monotonic offset columns and on floats with correlated exponents.
+
+The numpy functions here are the canonical host implementations; the Pallas
+kernels in ``repro.kernels.{byteshuffle,delta_zigzag,offsets_scan}`` are the
+TPU-side ports and are property-tested to be bit-identical against these
+(via ``repro.kernels.ref`` which re-exports the same math in jnp).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .schema import ENC_DELTA_ZIGZAG_SPLIT, ENC_NONE, ENC_SPLIT
+
+# ---------------------------------------------------------------------------
+# split (byte-plane shuffle)
+
+
+def split_encode(arr: np.ndarray) -> bytes:
+    """Byte-plane split: [b0 of all elems][b1 of all elems]...
+
+    Little-endian byte planes of a contiguous primitive array.
+    """
+    a = np.ascontiguousarray(arr)
+    if a.dtype.byteorder == ">":  # normalize to little-endian
+        a = a.astype(a.dtype.newbyteorder("<"))
+    nbytes = a.dtype.itemsize
+    planes = a.view(np.uint8).reshape(-1, nbytes)
+    return planes.T.tobytes()
+
+
+def split_decode(buf: bytes, dtype: np.dtype, n: int) -> np.ndarray:
+    dtype = np.dtype(dtype)
+    nbytes = dtype.itemsize
+    planes = np.frombuffer(buf, dtype=np.uint8, count=n * nbytes).reshape(nbytes, n)
+    return np.ascontiguousarray(planes.T).reshape(-1).view(dtype)[:n].copy()
+
+
+# ---------------------------------------------------------------------------
+# delta + zigzag (for int64 offset columns)
+
+
+def zigzag_encode(x: np.ndarray) -> np.ndarray:
+    """Map signed -> unsigned: 0,-1,1,-2,2 ... -> 0,1,2,3,4."""
+    x = x.astype(np.int64, copy=False)
+    return ((x << np.int64(1)) ^ (x >> np.int64(63))).view(np.uint64)
+
+
+def zigzag_decode(u: np.ndarray) -> np.ndarray:
+    u = u.view(np.uint64) if u.dtype != np.uint64 else u
+    return ((u >> np.uint64(1)).astype(np.int64)) ^ -(u & np.uint64(1)).astype(np.int64)
+
+
+def delta_encode(x: np.ndarray, first_reference: int = 0) -> np.ndarray:
+    """x[i] - x[i-1], with x[-1] := first_reference."""
+    x = x.astype(np.int64, copy=False)
+    d = np.empty_like(x)
+    if len(x):
+        d[0] = x[0] - first_reference
+        np.subtract(x[1:], x[:-1], out=d[1:])
+    return d
+
+
+def delta_decode(d: np.ndarray, first_reference: int = 0) -> np.ndarray:
+    d = d.astype(np.int64, copy=False)
+    out = np.cumsum(d, dtype=np.int64)
+    if first_reference:
+        out = out + np.int64(first_reference)
+    return out
+
+
+def dzs_encode(arr: np.ndarray, first_reference: int = 0) -> bytes:
+    """delta -> zigzag -> split; the offset-column encoding."""
+    return split_encode(zigzag_encode(delta_encode(arr, first_reference)))
+
+
+def dzs_decode(buf: bytes, n: int, first_reference: int = 0) -> np.ndarray:
+    u = split_decode(buf, np.dtype(np.uint64), n)
+    return delta_decode(zigzag_decode(u), first_reference)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+
+
+def precondition(arr: np.ndarray, encoding: str) -> bytes:
+    if encoding == ENC_NONE:
+        return np.ascontiguousarray(arr).tobytes()
+    if encoding == ENC_SPLIT:
+        return split_encode(arr)
+    if encoding == ENC_DELTA_ZIGZAG_SPLIT:
+        return dzs_encode(arr)
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def unprecondition(buf: bytes, encoding: str, dtype: np.dtype, n: int) -> np.ndarray:
+    dtype = np.dtype(dtype)
+    if encoding == ENC_NONE:
+        return np.frombuffer(buf, dtype=dtype, count=n).copy()
+    if encoding == ENC_SPLIT:
+        return split_decode(buf, dtype, n)
+    if encoding == ENC_DELTA_ZIGZAG_SPLIT:
+        assert dtype == np.dtype(np.int64)
+        return dzs_decode(buf, n)
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def sizes_to_offsets(sizes: np.ndarray) -> np.ndarray:
+    """Collection sizes -> cluster-relative *end* offsets (inclusive scan).
+
+    This is the on-disk form of an offset column: ``offsets[j]`` is the end
+    of collection ``j`` within the cluster; the start is ``offsets[j-1]``
+    (or 0).  Being cluster-relative is what makes a sealed cluster
+    relocatable (paper §5).
+    """
+    return np.cumsum(sizes.astype(np.int64, copy=False), dtype=np.int64)
+
+
+def offsets_to_sizes(offsets: np.ndarray) -> np.ndarray:
+    o = offsets.astype(np.int64, copy=False)
+    s = np.empty_like(o)
+    if len(o):
+        s[0] = o[0]
+        np.subtract(o[1:], o[:-1], out=s[1:])
+    return s

@@ -1,0 +1,223 @@
+"""On-disk metadata: envelopes, page list, footer, anchor.
+
+Layout (RNT-J, a faithful simplification of RNTuple-in-TFile):
+
+    file := header_env { cluster blobs / pages } pagelist_env footer_env anchor
+
+* header envelope   — schema + write options (self-describing)
+* page list envelope— per committed cluster, in entry order: entry range,
+  per-column element counts, and every page descriptor (paper §3's "page
+  list" + "column ranges": the element offset of each column in a cluster
+  is the running sum of the per-cluster element counts, in cluster order)
+* footer envelope   — cluster summaries + locator of the page list
+* anchor            — fixed 64-byte trailer at EOF locating header+footer
+
+Metadata is appended **in commit order** under the writer's critical
+section, so the resulting file is indistinguishable from one written
+sequentially (paper §4.3).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .pages import PageDesc
+from .schema import Schema
+
+MAGIC = b"RNTJ"
+VERSION = 1
+
+ENV_HEADER = 1
+ENV_PAGELIST = 2
+ENV_FOOTER = 3
+
+_ENV_HDR = struct.Struct("<4sHxxQ")  # magic, type, pad, payload_len
+_ENV_MAGIC = b"RJEV"
+
+_ANCHOR = struct.Struct("<4sIQQQQQQI4x")  # magic, ver, hdr(off,size), ftr(off,size), n_entries, n_clusters, crc
+ANCHOR_SIZE = _ANCHOR.size  # 64 bytes
+
+# page descriptor record on disk
+_PAGE_REC = np.dtype(
+    [
+        ("column", "<u4"),
+        ("codec", "<u1"),
+        ("_pad", "V3"),
+        ("n_elements", "<u8"),
+        ("offset", "<u8"),
+        ("size", "<u8"),
+        ("uncompressed_size", "<u8"),
+        ("checksum", "<u4"),
+        ("_pad2", "V4"),
+    ]
+)
+
+
+def wrap_envelope(env_type: int, payload: bytes) -> bytes:
+    hdr = _ENV_HDR.pack(_ENV_MAGIC, env_type, len(payload))
+    crc = struct.pack("<I", zlib.crc32(payload))
+    return hdr + payload + crc
+
+
+def unwrap_envelope(buf: bytes, expect_type: int) -> bytes:
+    magic, etype, plen = _ENV_HDR.unpack_from(buf, 0)
+    if magic != _ENV_MAGIC:
+        raise IOError("bad envelope magic")
+    if etype != expect_type:
+        raise IOError(f"envelope type {etype}, expected {expect_type}")
+    payload = buf[_ENV_HDR.size : _ENV_HDR.size + plen]
+    (crc,) = struct.unpack_from("<I", buf, _ENV_HDR.size + plen)
+    if zlib.crc32(payload) != crc:
+        raise IOError("envelope checksum mismatch")
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# header
+
+
+def build_header(schema: Schema, options: dict) -> bytes:
+    payload = json.dumps(
+        {"version": VERSION, "schema": json.loads(schema.to_json()), "options": options},
+        separators=(",", ":"),
+    ).encode()
+    return wrap_envelope(ENV_HEADER, payload)
+
+
+def parse_header(buf: bytes) -> Tuple[Schema, dict]:
+    d = json.loads(unwrap_envelope(buf, ENV_HEADER))
+    return Schema.from_json(json.dumps(d["schema"])), d.get("options", {})
+
+
+# ---------------------------------------------------------------------------
+# cluster metadata (in-memory while writing; page list envelope on close)
+
+
+@dataclass
+class ClusterMeta:
+    """Metadata of one committed cluster (absolute page offsets)."""
+
+    first_entry: int
+    n_entries: int
+    n_elements: List[int]            # per column
+    pages: List[PageDesc]
+    byte_offset: int = 0             # cluster blob start (buffered mode)
+    byte_size: int = 0
+
+
+def build_pagelist(clusters: List[ClusterMeta], n_columns: int) -> bytes:
+    chunks: List[bytes] = [struct.pack("<IQ", len(clusters), n_columns)]
+    for cm in clusters:
+        chunks.append(
+            struct.pack(
+                "<QQQQI", cm.first_entry, cm.n_entries, cm.byte_offset,
+                cm.byte_size, len(cm.pages),
+            )
+        )
+        chunks.append(np.asarray(cm.n_elements, dtype="<u8").tobytes())
+        rec = np.zeros(len(cm.pages), dtype=_PAGE_REC)
+        for i, p in enumerate(cm.pages):
+            rec[i] = (p.column, p.codec, b"", p.n_elements, p.offset, p.size,
+                      p.uncompressed_size, p.checksum, b"")
+        chunks.append(rec.tobytes())
+    return wrap_envelope(ENV_PAGELIST, b"".join(chunks))
+
+
+def parse_pagelist(buf: bytes) -> List[ClusterMeta]:
+    payload = unwrap_envelope(buf, ENV_PAGELIST)
+    pos = 0
+    n_clusters, n_columns = struct.unpack_from("<IQ", payload, pos)
+    pos += 12
+    out: List[ClusterMeta] = []
+    for _ in range(n_clusters):
+        first_entry, n_entries, boff, bsize, n_pages = struct.unpack_from(
+            "<QQQQI", payload, pos
+        )
+        pos += 36
+        n_elements = np.frombuffer(payload, dtype="<u8", count=n_columns, offset=pos)
+        pos += 8 * n_columns
+        rec = np.frombuffer(payload, dtype=_PAGE_REC, count=n_pages, offset=pos)
+        pos += _PAGE_REC.itemsize * n_pages
+        pages = [
+            PageDesc(
+                column=int(r["column"]),
+                n_elements=int(r["n_elements"]),
+                offset=int(r["offset"]),
+                size=int(r["size"]),
+                uncompressed_size=int(r["uncompressed_size"]),
+                checksum=int(r["checksum"]),
+                codec=int(r["codec"]),
+            )
+            for r in rec
+        ]
+        out.append(
+            ClusterMeta(first_entry, n_entries, [int(x) for x in n_elements],
+                        pages, boff, bsize)
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# footer + anchor
+
+
+def build_footer(
+    n_entries: int,
+    n_clusters: int,
+    pagelist_loc: Tuple[int, int],
+    extra: Optional[dict] = None,
+) -> bytes:
+    payload = json.dumps(
+        {
+            "n_entries": n_entries,
+            "n_clusters": n_clusters,
+            "pagelist": list(pagelist_loc),
+            "extra": extra or {},
+        },
+        separators=(",", ":"),
+    ).encode()
+    return wrap_envelope(ENV_FOOTER, payload)
+
+
+def parse_footer(buf: bytes) -> dict:
+    return json.loads(unwrap_envelope(buf, ENV_FOOTER))
+
+
+def build_anchor(
+    header_loc: Tuple[int, int],
+    footer_loc: Tuple[int, int],
+    n_entries: int,
+    n_clusters: int,
+) -> bytes:
+    body = _ANCHOR.pack(
+        MAGIC, VERSION, header_loc[0], header_loc[1], footer_loc[0],
+        footer_loc[1], n_entries, n_clusters, 0,
+    )
+    crc = zlib.crc32(body[:-8])
+    return _ANCHOR.pack(
+        MAGIC, VERSION, header_loc[0], header_loc[1], footer_loc[0],
+        footer_loc[1], n_entries, n_clusters, crc,
+    )
+
+
+def parse_anchor(buf: bytes) -> dict:
+    magic, ver, hoff, hsize, foff, fsize, n_entries, n_clusters, crc = _ANCHOR.unpack(buf)
+    if magic != MAGIC:
+        raise IOError("not an RNT-J file (bad anchor magic)")
+    if ver != VERSION:
+        raise IOError(f"unsupported RNT-J version {ver}")
+    body = _ANCHOR.pack(magic, ver, hoff, hsize, foff, fsize, n_entries, n_clusters, 0)
+    if zlib.crc32(body[:-8]) != crc:
+        raise IOError("anchor checksum mismatch")
+    return {
+        "header": (hoff, hsize),
+        "footer": (foff, fsize),
+        "n_entries": n_entries,
+        "n_clusters": n_clusters,
+    }

@@ -1,0 +1,93 @@
+"""Pages: the unit of compression (paper §3).
+
+Elements of a column are written consecutively into pages; a page is
+preconditioned (encoding.py) and compressed (compression.py) as one block.
+RNTuple targets 64 KiB of uncompressed elements per page by default
+(paper §6.1) — we keep that default.
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from . import compression as comp
+from .encoding import precondition, unprecondition
+from .schema import ColumnSpec
+
+DEFAULT_PAGE_SIZE = 64 * 1024
+
+
+@dataclass
+class PageDesc:
+    """Descriptor of one page; lives in the page list (paper §3).
+
+    ``offset`` is cluster-relative while the cluster is sealed-but-uncommitted
+    (that is the relocatability property), and absolute once committed.
+    """
+
+    column: int
+    n_elements: int
+    offset: int
+    size: int                # compressed bytes
+    uncompressed_size: int
+    checksum: int
+    codec: int
+
+    def rebase(self, base: int) -> "PageDesc":
+        return PageDesc(
+            self.column,
+            self.n_elements,
+            self.offset + base,
+            self.size,
+            self.uncompressed_size,
+            self.checksum,
+            self.codec,
+        )
+
+
+def build_page(
+    col: ColumnSpec,
+    elements: np.ndarray,
+    codec: int,
+    level: int = -1,
+    checksum: bool = True,
+) -> (bytes, PageDesc):
+    """Precondition + compress one page of elements.
+
+    Runs with NO synchronization — this is the paper's §4.1 observation that
+    serialization and compression parallelize perfectly once the unit of
+    writing is relocatable.
+    """
+    raw = precondition(elements, col.encoding)
+    # Like ROOT, fall back to storing uncompressed when compression does
+    # not shrink the page.
+    payload = comp.compress(raw, codec, level)
+    used_codec = codec
+    if len(payload) >= len(raw):
+        payload, used_codec = raw, comp.CODEC_NONE
+    crc = zlib.crc32(payload) if checksum else 0
+    desc = PageDesc(
+        column=col.index,
+        n_elements=int(len(elements)),
+        offset=-1,
+        size=len(payload),
+        uncompressed_size=len(raw),
+        checksum=crc,
+        codec=used_codec,
+    )
+    return payload, desc
+
+
+def read_page(buf: bytes, desc: PageDesc, col: ColumnSpec, verify: bool = True) -> np.ndarray:
+    if verify and desc.checksum and zlib.crc32(buf) != desc.checksum:
+        raise IOError(f"page checksum mismatch (column {col.path!r})")
+    raw = comp.decompress(buf, desc.codec, desc.uncompressed_size)
+    return unprecondition(raw, col.encoding, col.dtype, desc.n_elements)
+
+
+def elements_per_page(col: ColumnSpec, page_size: int = DEFAULT_PAGE_SIZE) -> int:
+    return max(1, page_size // col.itemsize)

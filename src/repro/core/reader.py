@@ -1,0 +1,160 @@
+"""RNT-J reader.
+
+Knows nothing about parallel writing: it reads the anchor, footer, page
+list and header and iterates clusters in entry order — which, by the
+commit protocol, is exactly the sequential-equivalent order (paper §4.3).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .container import FileSink, Sink
+from .metadata import (
+    ANCHOR_SIZE,
+    ClusterMeta,
+    parse_anchor,
+    parse_footer,
+    parse_header,
+    parse_pagelist,
+)
+from .pages import read_page
+from .schema import KIND_OFFSET, ColumnSpec, Schema, recompose_entries
+
+
+class RNTJReader:
+    def __init__(self, sink_or_path, verify_checksums: bool = True):
+        if isinstance(sink_or_path, str):
+            self.sink: Sink = FileSink(sink_or_path, create=False)
+        else:
+            self.sink = sink_or_path
+        if not self.sink.readable():
+            raise IOError("sink is not readable")
+        self.verify = verify_checksums
+        size = self.sink.size
+        anchor = parse_anchor(self.sink.pread(size - ANCHOR_SIZE, ANCHOR_SIZE))
+        hoff, hsize = anchor["header"]
+        foff, fsize = anchor["footer"]
+        self.schema, self.options = parse_header(self.sink.pread(hoff, hsize))
+        footer = parse_footer(self.sink.pread(foff, fsize))
+        pl_off, pl_size = footer["pagelist"]
+        self.clusters: List[ClusterMeta] = parse_pagelist(
+            self.sink.pread(pl_off, pl_size)
+        )
+        self.n_entries = int(footer["n_entries"])
+        # column ranges: first element index of each column per cluster
+        # (paper §3) — the running sums of per-cluster element counts.
+        self.column_ranges = np.zeros(
+            (len(self.clusters), self.schema.n_columns), dtype=np.int64
+        )
+        acc = np.zeros(self.schema.n_columns, dtype=np.int64)
+        for i, cm in enumerate(self.clusters):
+            self.column_ranges[i] = acc
+            acc += np.asarray(cm.n_elements, dtype=np.int64)
+        self.total_elements = acc
+
+    # -- cluster-level access ------------------------------------------------
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.clusters)
+
+    def read_cluster(
+        self, cluster_index: int, columns: Optional[Sequence[int]] = None
+    ) -> Dict[int, np.ndarray]:
+        """Read the element arrays of a cluster.
+
+        Offset columns keep their on-disk cluster-relative form (ends of
+        each collection within the cluster).
+        """
+        cm = self.clusters[cluster_index]
+        want = set(columns) if columns is not None else None
+        parts: Dict[int, List[np.ndarray]] = {}
+        for desc in cm.pages:
+            if want is not None and desc.column not in want:
+                continue
+            col = self.schema.columns[desc.column]
+            buf = self.sink.pread(desc.offset, desc.size)
+            parts.setdefault(desc.column, []).append(
+                read_page(buf, desc, col, self.verify)
+            )
+        out: Dict[int, np.ndarray] = {}
+        targets = want if want is not None else range(self.schema.n_columns)
+        for ci in targets:
+            col = self.schema.columns[ci]
+            chunks = parts.get(ci, [])
+            if chunks:
+                out[ci] = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+            else:
+                out[ci] = np.empty(0, dtype=col.dtype)
+        return out
+
+    def cluster_entry_range(self, cluster_index: int) -> Tuple[int, int]:
+        cm = self.clusters[cluster_index]
+        return cm.first_entry, cm.first_entry + cm.n_entries
+
+    # -- entry-level access ----------------------------------------------------
+
+    def iter_cluster_entries(
+        self, cluster_index: int, fields: Optional[Sequence[str]] = None
+    ) -> List[Dict]:
+        cm = self.clusters[cluster_index]
+        schema = self.schema if fields is None else self.schema.project(fields)
+        if fields is None:
+            cols = self.read_cluster(cluster_index)
+            arrays = [cols[i] for i in range(self.schema.n_columns)]
+        else:
+            # map projected columns back to file columns (horizontal skim)
+            file_idx = [self.schema.column_of_path[c.path] for c in schema.columns]
+            cols = self.read_cluster(cluster_index, file_idx)
+            arrays = [cols[i] for i in file_idx]
+        return recompose_entries(schema, arrays, cm.n_entries)
+
+    def iter_entries(self, fields: Optional[Sequence[str]] = None) -> Iterator[Dict]:
+        for i in range(self.n_clusters):
+            yield from self.iter_cluster_entries(i, fields)
+
+    # -- whole-column access (analysis-style reads) ------------------------------
+
+    def read_column(self, path: str) -> np.ndarray:
+        """Concatenate a column across clusters.
+
+        Offset columns are globalized: cluster-relative offsets are shifted
+        by the running element count of their *child* column — giving the
+        usual global offsets array.
+        """
+        ci = self.schema.column_of_path[path]
+        col = self.schema.columns[ci]
+        chunks = []
+        if col.kind == KIND_OFFSET:
+            children = [
+                k for k, p in enumerate(self.schema.parent) if p == ci
+            ]
+            child = children[0] if children else None
+            base = 0
+            for i in range(self.n_clusters):
+                arr = self.read_cluster(i, [ci])[ci].astype(np.int64)
+                chunks.append(arr + base)
+                if child is not None:
+                    base += self.clusters[i].n_elements[child]
+                elif len(arr):
+                    base += int(arr[-1])
+        else:
+            for i in range(self.n_clusters):
+                chunks.append(self.read_cluster(i, [ci])[ci])
+        return (
+            np.concatenate(chunks)
+            if chunks
+            else np.empty(0, dtype=col.dtype)
+        )
+
+    def close(self) -> None:
+        self.sink.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,11 @@
+"""Distribution substrate: sharding rules, collectives, pipeline parallel."""
+
+from .sharding import (
+    AxisRules, axis_rules, auto_param_sharding, current_rules, replicated,
+    shard, DEFAULT_RULES,
+)
+
+__all__ = [
+    "AxisRules", "axis_rules", "auto_param_sharding", "current_rules",
+    "replicated", "shard", "DEFAULT_RULES",
+]

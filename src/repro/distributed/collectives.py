@@ -1,0 +1,47 @@
+"""Collective helpers: hierarchical reductions and overlap-friendly
+variants for shard_map code paths.
+
+GSPMD inserts collectives automatically for pjit code; these explicit
+helpers are used by shard_map regions (pipeline parallelism, the perf-pass
+experiments) and encode the multi-pod hierarchy: reduce-scatter inside the
+pod (cheap ICI), all-reduce across pods only on the already-reduced
+shard (the pod axis carries 1/16th of the bytes).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def hierarchical_psum(x: jax.Array, pod_axis: str = "pod",
+                      data_axis: str = "data") -> jax.Array:
+    """psum over (pod, data) as scatter(data) -> psum(pod) -> gather(data).
+
+    Equivalent to lax.psum(x, (pod_axis, data_axis)) but the cross-pod hop
+    moves 1/|data| of the bytes: the standard hierarchical trick for
+    gradient reduction at multi-pod scale.
+    """
+    n_data = lax.axis_size(data_axis)
+    scat = lax.psum_scatter(x, data_axis, scatter_dimension=0, tiled=True)
+    red = lax.psum(scat, pod_axis)
+    return lax.all_gather(red, data_axis, axis=0, tiled=True)
+
+
+def reduce_scatter_grads(tree, axis: str):
+    """ZeRO-style: every host ends with its shard of the summed gradient."""
+    return jax.tree_util.tree_map(
+        lambda g: lax.psum_scatter(g, axis, scatter_dimension=0, tiled=True)
+        if g.ndim and g.shape[0] % lax.axis_size(axis) == 0
+        else lax.psum(g, axis),
+        tree,
+    )
+
+
+def ring_permute(x: jax.Array, axis: str, shift: int = 1) -> jax.Array:
+    n = lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return lax.ppermute(x, axis, perm)

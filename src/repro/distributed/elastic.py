@@ -1,0 +1,54 @@
+"""Elastic scaling: restart a run on a different mesh shape.
+
+The pieces that make this work are deliberately boring:
+  * checkpoints are mesh-agnostic (single self-describing file; clusters
+    re-partition freely — tests/test_checkpoint.py::test_elastic_restart...),
+  * the loader cursor is logical (entry index), not host-indexed,
+  * param shardings are derived from (shape, mesh) at load time by
+    ``auto_param_sharding``, never stored.
+
+``replan`` computes the new mesh + shardings after a resize and reports
+what changes (per-device memory, dp degree); the train launcher calls it
+on restart.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .sharding import auto_param_sharding
+
+
+@dataclass
+class ElasticPlan:
+    mesh: object
+    param_shardings: object
+    dp_degree: int
+    per_device_param_bytes: int
+
+    def describe(self) -> str:
+        return (f"mesh={dict(self.mesh.shape)} dp={self.dp_degree} "
+                f"params/device={self.per_device_param_bytes/2**20:.1f} MiB")
+
+
+def replan(param_shapes, mesh) -> ElasticPlan:
+    shardings = auto_param_sharding(param_shapes, mesh)
+    total = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(param_shapes)
+    )
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.axis_names]))
+    return ElasticPlan(mesh, shardings, dp, total // max(n_dev, 1))
+
+
+def validate_batch_divisibility(global_batch: int, plan: ElasticPlan) -> Tuple[bool, str]:
+    if global_batch % plan.dp_degree:
+        return False, (f"global_batch {global_batch} not divisible by new "
+                       f"dp degree {plan.dp_degree}; adjust accumulation")
+    return True, ""

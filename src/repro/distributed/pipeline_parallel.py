@@ -1,0 +1,100 @@
+"""Pipeline parallelism: GPipe-style microbatching over a mesh axis.
+
+``pipelined`` runs a homogeneous layer stack as P pipeline stages over the
+``stage`` mesh axis inside one shard_map: every stage holds n_layers/P
+layers; microbatches stream through with ``ppermute`` boundary transfers.
+The classic rotation trick runs stages for (M + P - 1) ticks, each device
+computing on the microbatch currently resident — bubble fraction
+(P-1)/(M+P-1).
+
+The production configs default to FSDP+TP (every assigned model fits), but
+this module is wired into the step builders via ``pp_stages`` and carries
+the multi-pod story where a model would NOT fit one pod's HBM: stage the
+layer stack across pods ("pod" becomes the stage axis) so each pod holds
+1/P of the parameters, trading bubble for memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipelined(
+    layer_fn: Callable,       # (layer_params, x) -> x
+    mesh: Mesh,
+    stage_axis: str,
+    n_microbatches: int,
+):
+    """Build a pipelined stack applier.
+
+    Returns ``apply(stacked_params, x)`` where ``stacked_params`` leaves
+    have leading dim n_layers (n_layers % n_stages == 0) and ``x`` is
+    (batch, ...) with batch % n_microbatches == 0.
+    """
+    n_stages = mesh.shape[stage_axis]
+
+    def stage_body(params_stage, x_stage):
+        """Runs inside shard_map: params_stage has this stage's layers."""
+        my_stage = lax.axis_index(stage_axis)
+        m = n_microbatches
+        mb = x_stage.reshape((m, x_stage.shape[0] // m) + x_stage.shape[1:])
+        n_ticks = m + n_stages - 1
+        outputs = jnp.zeros_like(mb)
+
+        def run_layers(x):
+            def body(x, lp):
+                return layer_fn(lp, x), None
+            x, _ = lax.scan(body, x, params_stage)
+            return x
+
+        def tick(carry, t):
+            buf, outputs = carry
+            # which microbatch is entering stage 0 this tick
+            feed = jnp.where(t < m, t, 0)
+            x_in = jnp.where(my_stage == 0,
+                             mb[feed],
+                             buf)
+            active = (t - my_stage >= 0) & (t - my_stage < m)
+            y = run_layers(x_in)
+            y = jnp.where(active, y, x_in)
+            # pass to next stage; last stage's output wraps to 0 (ignored)
+            nxt = lax.ppermute(
+                y, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            out_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+            write = (my_stage == n_stages - 1) & (t >= n_stages - 1)
+            outputs = lax.cond(
+                write,
+                lambda o: o.at[out_idx].set(y),
+                lambda o: o,
+                outputs,
+            )
+            return (nxt, outputs), None
+
+        buf0 = jnp.zeros_like(mb[0])
+        (_, outputs), _ = lax.scan(tick, (buf0, outputs),
+                                   jnp.arange(n_ticks))
+        # stack per-stage results; only the last stage's slot is real
+        return outputs.reshape(x_stage.shape)[None]
+
+    def apply(stacked_params, x):
+        param_specs = jax.tree_util.tree_map(
+            lambda _: P(stage_axis), stacked_params)
+        fn = shard_map(
+            stage_body, mesh=mesh,
+            in_specs=(param_specs, P()),
+            out_specs=P(stage_axis),
+            check_rep=False,
+        )
+        per_stage = fn(stacked_params, x)   # (n_stages, batch, ...)
+        return per_stage[-1]
+
+    return apply

@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (MaxText-style) + FSDP auto param sharding.
+
+Models annotate activations with *logical* axes via :func:`shard`:
+
+    x = shard(x, "dp", "sp", None)        # (batch, seq, d_model)
+
+A :class:`AxisRules` context maps logical names to mesh axes.  The mapping
+is *divisibility-checked per tensor*: if a dimension is not divisible by
+the mapped mesh-axis size the constraint silently degrades to replication
+for that dim.  That single rule makes every assigned architecture compile
+on the production mesh (e.g. gemma's 8 heads or smollm's 15 heads cannot
+shard over model=16 and fall back to replicated attention, while their
+MLP/vocab dims still shard).
+
+Parameters are sharded by :func:`auto_param_sharding` — ZeRO-3/FSDP style:
+for each >=2-D weight, the largest dim shards over the fsdp axes and the
+next largest over the tensor-parallel axis, both divisibility-guarded.
+Stacked scan-over-layers params skip their leading layer dim.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+AxisName = Union[str, None, Tuple[str, ...]]
+
+# default logical -> mesh mapping for the production mesh
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "dp": ("pod", "data"),      # batch
+    "fsdp": ("pod", "data"),    # parameter sharding
+    "sp": ("model",),           # sequence (activations between blocks)
+    "tp": ("model",),           # heads / d_ff / vocab / experts
+    "tp_kv": ("model",),        # kv heads (falls back per-tensor)
+    "sp_kv": ("model",),        # kv-cache sequence: shards iff tp_kv fell back
+    "ep": ("model",),           # experts
+    "ep2": ("model",),          # MoE capacity dim: shards iff ep fell back
+    "sp_attn": ("model",),      # attention q-sequence: iff heads fell back
+}
+
+
+class AxisRules:
+    def __init__(self, mesh: Mesh, mapping: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.mesh = mesh
+        mapping = dict(mapping or DEFAULT_RULES)
+        # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+        self.mapping = {
+            k: tuple(a for a in v if a in mesh.axis_names)
+            for k, v in mapping.items()
+        }
+
+    def axis_size(self, logical: str) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.mapping.get(logical, ())] or [1]))
+
+    def spec(self, logical_axes: Sequence[AxisName], shape: Sequence[int]) -> P:
+        parts = []
+        used: set = set()
+        for dim, name in zip(shape, logical_axes):
+            if name is None:
+                parts.append(None)
+                continue
+            names = (name,) if isinstance(name, str) else name
+            mesh_axes: Tuple[str, ...] = ()
+            for n in names:
+                mesh_axes += self.mapping.get(n, ())
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            size = int(np.prod([self.mesh.shape[a] for a in mesh_axes] or [1]))
+            if size > 1 and dim % size == 0:
+                parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+                used.update(mesh_axes)
+            else:
+                parts.append(None)  # divisibility fallback -> replicate
+        return P(*parts)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, *logical_axes: AxisName) -> jax.Array:
+    """Apply a logical sharding constraint (no-op outside an AxisRules ctx).
+
+    If every requested axis degrades to None (divisibility fallback), the
+    constraint is SKIPPED entirely: ``with_sharding_constraint(x, P())``
+    would *force* replication, actively pessimizing GSPMD's own choice —
+    leave the tensor unconstrained instead.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    spec = rules.spec(logical_axes, x.shape)
+    if all(p is None for p in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# FSDP auto sharding of parameter pytrees
+
+
+def _leaf_spec(
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    fsdp_axes: Tuple[str, ...],
+    tp_axis: Optional[str],
+    stacked: bool,
+) -> P:
+    parts: list = [None] * len(shape)
+    dims = list(range(len(shape)))
+    if stacked and len(shape) >= 3:
+        dims = dims[1:]  # never shard the scan/layer dim
+    if not dims or len(shape) < 2:
+        return P(*parts)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp_axes] or [1]))
+    tp_size = int(mesh.shape[tp_axis]) if tp_axis and tp_axis in mesh.axis_names else 1
+    order = sorted(dims, key=lambda d: -shape[d])
+    # largest shardable dim -> fsdp
+    fsdp_dim = next((d for d in order if fsdp_size > 1 and shape[d] % fsdp_size == 0), None)
+    if fsdp_dim is not None:
+        parts[fsdp_dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    # next largest shardable dim -> tp
+    tp_dim = next(
+        (d for d in order
+         if d != fsdp_dim and tp_size > 1 and shape[d] % tp_size == 0),
+        None,
+    )
+    if tp_dim is not None:
+        parts[tp_dim] = tp_axis
+    return P(*parts)
+
+
+def auto_param_sharding(
+    params_shapes,
+    mesh: Mesh,
+    fsdp_axes: Optional[Tuple[str, ...]] = None,
+    tp_axis: str = "model",
+):
+    """NamedSharding pytree for a parameter pytree (of ShapeDtypeStructs)."""
+    if fsdp_axes is None:
+        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(path, leaf):
+        stacked = any(
+            getattr(k, "key", None) in ("layers", "groups")
+            for k in path
+        )
+        spec = _leaf_spec(tuple(leaf.shape), mesh, fsdp_axes, tp_axis, stacked)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree
+    )

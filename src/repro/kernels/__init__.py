@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Columnar-encoding kernels (the paper's serialization path, DESIGN.md §3.3):
+``offsets_scan``, ``byteshuffle``, ``delta_zigzag``.
+
+Model kernels: ``flash_attention``, ``decode_attention``, ``rwkv6_scan``,
+``mamba2_ssd``.
+
+Use via :mod:`repro.kernels.ops`; oracles live in :mod:`repro.kernels.ref`.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: byte-plane split ("byteshuffle") encoding.
+
+RNTuple's split encoding (our ``encoding.ENC_SPLIT``) stores byte plane j
+of every element consecutively, which makes float/int pages dramatically
+more compressible (paper §3).  As a layout transform it is bandwidth-bound:
+the kernel tiles the (N, itemsize) byte matrix through VMEM and writes the
+(itemsize, N) transpose.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+
+
+def _shuffle_kernel(x_ref, o_ref):
+    # x block: (BN, itemsize) uint8 -> out block (itemsize, BN)
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def byteshuffle(
+    planes: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = False
+) -> jax.Array:
+    """(N, itemsize) uint8 -> (itemsize, N) uint8 (byte planes)."""
+    n, itemsize = planes.shape
+    pad = (-n) % block
+    x = jnp.pad(planes, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _shuffle_kernel,
+        out_shape=jax.ShapeDtypeStruct((itemsize, x.shape[0]), jnp.uint8),
+        grid=(x.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block, itemsize), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((itemsize, block), lambda i: (0, i)),
+        interpret=interpret,
+    )(x)
+    return out[:, :n]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: single-token KV-cache attention (decode).
+
+One new query token per sequence attends to a long KV cache.  The cache is
+streamed through VMEM in blocks along the sequence axis with online-softmax
+accumulation; per-sequence valid ``length`` and optional sliding-window
+masking make it usable for both dense decode (decode_32k) and SWA decode
+(long_500k on mixtral-style models).
+
+This kernel is memory-bound by design (arithmetic intensity ~2 flops/byte);
+its role is to stream the cache at HBM bandwidth — see EXPERIMENTS §Roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, window: Optional[int], block_k: int, n_kv_blocks: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (D,)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (BK, D)
+    length = len_ref[0]
+
+    pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    valid = pos < length
+    if window is not None:
+        valid &= pos >= length - window
+
+    s = jnp.dot(k, q * scale, preferred_element_type=jnp.float32)  # (BK,)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32
+    )
+    m_ref[0] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,                  # (B, H, D)
+    k: jax.Array,                  # (B, G, S, D)
+    v: jax.Array,                  # (B, G, S, D)
+    length: Optional[jax.Array] = None,   # (B,) valid cache lengths
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    _, g, s, _ = k.shape
+    q_per_kv = h // g
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    block_k = min(block_k, s)
+    pad_k = (-s) % block_k
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = kp.shape[2] // block_k
+    if length is None:
+        length = jnp.full((b,), s, jnp.int32)
+    length = length.astype(jnp.int32).reshape(b, 1)
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=scale,
+        window=window,
+        block_k=block_k,
+        n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, ik: (b_, 0)),
+            pl.BlockSpec((1, 1, d), lambda b_, h_, ik: (b_, h_, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h_, ik, q_per_kv=q_per_kv: (b_, h_ // q_per_kv, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h_, ik, q_per_kv=q_per_kv: (b_, h_ // q_per_kv, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h_, ik: (b_, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, kp, vp)
+    return out

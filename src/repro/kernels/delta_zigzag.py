@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: delta + zigzag preconditioning of offset columns.
+
+RNTuple's offset columns are stored delta-encoded (paper §3 / our
+``encoding.ENC_DELTA_ZIGZAG_SPLIT``): element i becomes
+``zigzag(x[i] - x[i-1])`` with the first element absolute.  The previous
+block's last element is carried across grid steps in SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 4096
+
+
+def _dz_kernel(x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[0] = jnp.zeros((), x_ref.dtype)
+
+    x = x_ref[...]
+    prev = jnp.concatenate([carry_ref[0][None], x[:-1]])
+    d = x - prev
+    bits = x.dtype.itemsize * 8 - 1
+    z = (d << 1) ^ (d >> bits)
+    o_ref[...] = z.astype(o_ref.dtype)
+    carry_ref[0] = x[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_zigzag(
+    x: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = False
+) -> jax.Array:
+    (n,) = x.shape
+    out_dtype = jnp.uint32 if x.dtype == jnp.int32 else jnp.uint64
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad))
+    out = pl.pallas_call(
+        _dz_kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, out_dtype),
+        grid=(xp.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        scratch_shapes=[pltpu.SMEM((1,), x.dtype)],
+        interpret=interpret,
+    )(xp)
+    return out[:n]

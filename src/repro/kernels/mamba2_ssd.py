@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+Per (batch, head) recurrence with *scalar* decay (the SSD restriction that
+buys the matmul form):
+
+    H_t = e^{a_t} H_{t-1} + B_t^T x_t        H: (N, P)
+    y_t = C_t H_t (+ D x_t, applied by the wrapper)
+
+Chunked SSD (Dao & Gu 2024), with ca = inclusive cumsum of log-decay within
+the chunk:
+
+    y   = (e^{ca} C) H_0                         (state term, matmul)
+        + [(C B^T) . L] x                        (intra-chunk, L[t,s]=e^{ca_t-ca_s}, s<=t)
+    H_C = e^{ca_{C-1}} H_0 + (e^{ca_{C-1}-ca} B)^T x
+
+All exponents are <= 0, numerically safe.  Inter-chunk state flows through
+VMEM scratch across sequential grid steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, o_ref, hout_ref, h_ref,
+                *, chunk: int, n_chunks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (C, P)
+    la = la_ref[0, 0].astype(jnp.float32)    # (C,)
+    B = b_ref[0].astype(jnp.float32)         # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)        # (C, N)
+    H = h_ref[...]                           # (N, P)
+
+    ca = jnp.cumsum(la)                      # (C,)
+    # state term
+    y_state = jnp.dot(Cm * jnp.exp(ca)[:, None], H,
+                      preferred_element_type=jnp.float32)
+    # intra-chunk
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(s_idx <= t_idx, jnp.exp(ca[:, None] - ca[None, :]), 0.0)
+    G = jnp.dot(Cm, B.T, preferred_element_type=jnp.float32) * L
+    y = y_state + jnp.dot(G, x, preferred_element_type=jnp.float32)
+    # inter-chunk state update
+    decay_out = jnp.exp(ca[-1])
+    b_scaled = B * jnp.exp(ca[-1] - ca)[:, None]
+    h_ref[...] = decay_out * H + jnp.dot(
+        b_scaled.T, x, preferred_element_type=jnp.float32
+    )
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    @pl.when(it == n_chunks - 1)
+    def _():
+        hout_ref[0, 0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(
+    x: jax.Array,        # (B, H, T, P)
+    log_a: jax.Array,    # (B, H, T)
+    Bm: jax.Array,       # (B, T, N)
+    Cm: jax.Array,       # (B, T, N)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    b, h, t, p = x.shape
+    n = Bm.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nt = t // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nt)
+    out, state = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, t, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ),
+        grid=(b, h, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, it: (b_, h_, it)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, it: (b_, it, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, it: (b_, it, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, it: (b_, h_, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, log_a, Bm, Cm)
+    return out, state

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: collection sizes -> cluster-relative end offsets.
+
+The offset-column construction (inclusive prefix sum) is the central
+nested-data transform of the paper's format (§3): every variable-length
+collection's sizes are integrated into cluster-relative offsets at seal
+time.  On TPU this runs as a single-pass blocked scan: the grid is
+sequential on a TensorCore, so the running carry lives in SMEM scratch and
+flows across block invocations; each block computes its local cumsum in
+VMEM and adds the carry.
+
+This is also exactly the primitive a *distributed* writer needs to turn
+per-host cluster sizes into file extents (DESIGN.md §3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 4096
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[0] = jnp.zeros((), x_ref.dtype)
+
+    local = jnp.cumsum(x_ref[...])
+    o_ref[...] = local + carry_ref[0]
+    carry_ref[0] = carry_ref[0] + local[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def offsets_scan(
+    lengths: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = False
+) -> jax.Array:
+    """Inclusive scan over a 1-D array of collection sizes."""
+    (n,) = lengths.shape
+    pad = (-n) % block
+    x = jnp.pad(lengths, (0, pad))
+    out = pl.pallas_call(
+        _scan_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(x.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        scratch_shapes=[pltpu.SMEM((1,), x.dtype)],
+        interpret=interpret,
+    )(x)
+    return out[:n]

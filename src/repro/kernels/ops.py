@@ -1,0 +1,101 @@
+"""Public kernel entry points with backend dispatch.
+
+On TPU the Pallas kernels run compiled; everywhere else (this CPU
+container, tests) they run through ``interpret=True`` or fall back to the
+``ref`` oracles.  Model code calls these wrappers only.
+
+``use_pallas``: None = auto (pallas on TPU, ref elsewhere), True = force
+pallas (interpret on CPU), False = force ref.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import ref
+from .byteshuffle import byteshuffle as _byteshuffle
+from .decode_attention import decode_attention as _decode_attention
+from .delta_zigzag import delta_zigzag as _delta_zigzag
+from .flash_attention import flash_attention as _flash_attention
+from .mamba2_ssd import mamba2_ssd as _mamba2_ssd
+from .offsets_scan import offsets_scan as _offsets_scan
+from .rwkv6_scan import rwkv6_scan as _rwkv6_scan
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(use_pallas: Optional[bool]):
+    """-> (run_pallas, interpret)"""
+    if use_pallas is None:
+        return (_on_tpu(), False)
+    return (use_pallas, not _on_tpu())
+
+
+def offsets_scan(lengths, use_pallas: Optional[bool] = None, **kw):
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _offsets_scan(lengths, interpret=interp, **kw)
+    return ref.offsets_scan_ref(lengths)
+
+
+def delta_zigzag(x, use_pallas: Optional[bool] = None, **kw):
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _delta_zigzag(x, interpret=interp, **kw)
+    return ref.delta_zigzag_ref(x)
+
+
+def byteshuffle(planes, use_pallas: Optional[bool] = None, **kw):
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _byteshuffle(planes, interpret=interp, **kw)
+    return ref.byteshuffle_ref(planes)
+
+
+def flash_attention(q, k, v, causal=True, window=None, scale=None,
+                    use_pallas: Optional[bool] = None, impl: str = "ref", **kw):
+    """impl: "ref" (naive softmax — the paper-faithful baseline shape) or
+    "chunked" (online-softmax scan over kv blocks — the §Perf variant)."""
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _flash_attention(q, k, v, causal=causal, window=window,
+                                scale=scale, interpret=interp, **kw)
+    if impl == "chunked":
+        return ref.flash_attention_chunked(q, k, v, causal=causal,
+                                           window=window, scale=scale)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+
+
+def decode_attention(q, k, v, length=None, window=None, scale=None,
+                     use_pallas: Optional[bool] = None, **kw):
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _decode_attention(q, k, v, length=length, window=window,
+                                 scale=scale, interpret=interp, **kw)
+    return ref.decode_attention_ref(q, k, v, length=length, window=window,
+                                    scale=scale)
+
+
+def rwkv6(r, k, v, w, u, use_pallas: Optional[bool] = None, **kw):
+    """-> (out (B,H,T,Dv), final_state (B,H,Dk,Dv))."""
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _rwkv6_scan(r, k, v, w, u, interpret=interp, **kw)
+    return ref.rwkv6_ref(r, k, v, w, u)
+
+
+def mamba2(x, log_a, Bm, Cm, use_pallas: Optional[bool] = None, **kw):
+    """-> (out (B,H,T,P) without D-skip, final_state (B,H,N,P))."""
+    run, interp = _resolve(use_pallas)
+    if run:
+        return _mamba2_ssd(x, log_a, Bm, Cm, interpret=interp, **kw)
+    D0 = jax.numpy.zeros((x.shape[1],), x.dtype)
+    return ref.mamba2_ref(x, log_a, Bm, Cm, D0)

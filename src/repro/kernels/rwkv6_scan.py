@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: RWKV-6 (Finch) wkv recurrence, chunked form.
+
+Recurrence per (batch, head), state S in R^{Dk x Dv}:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Data-dependent per-channel decay w_t makes this the hard case for
+parallelization (vs Mamba-2's scalar decay).  The chunked formulation
+processes T in chunks of C: the inter-chunk state S flows sequentially in
+VMEM scratch across grid steps, while *within* a chunk the output is
+computed in matmul form:
+
+    o_t = (r_t . W_{t-1}) S_0  +  sum_{s<t} [sum_c r_tc k_sc e^{cw_{t-1,c}-cw_{s,c}}] v_s
+          + (r_t . u . k_t) v_t
+
+The pairwise per-channel decay ratio e^{cw[t-1]-cw[s]} is computed as a
+masked (C, C, Dk) tensor — exponent <= 0 whenever s < t so it is
+numerically safe for any decay magnitude (the naive q'=r*e^{cw},
+k'=k*e^{-cw} factorization overflows for strong decay).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 32
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, s_ref,
+                  *, chunk: int, n_chunks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)     # (C, Dk)
+    k = k_ref[0, 0].astype(jnp.float32)     # (C, Dk)
+    v = v_ref[0, 0].astype(jnp.float32)     # (C, Dv)
+    w = w_ref[0, 0].astype(jnp.float32)     # (C, Dk) decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)        # (Dk,)
+    S = s_ref[...]                          # (Dk, Dv)
+
+    lw = jnp.log(w)
+    cw = jnp.cumsum(lw, axis=0)             # (C, Dk) inclusive
+
+    # state contribution: o_state[t] = (r_t * W_{t-1}) S0, W_{t-1}=e^{cw[t-1]}
+    w_prev = jnp.exp(jnp.concatenate([jnp.zeros_like(cw[:1]), cw[:-1]], axis=0))
+    o_state = jnp.dot(r * w_prev, S, preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[t,s] = sum_c r[t,c] k[s,c] e^{cw[t-1,c]-cw[s,c]} (s<t)
+    cw_prev = jnp.concatenate([jnp.zeros_like(cw[:1]), cw[:-1]], axis=0)
+    expo = cw_prev[:, None, :] - cw[None, :, :]          # (C, C, Dk)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = s_idx < t_idx
+    ratio = jnp.where(strict[:, :, None], jnp.exp(expo), 0.0)
+    A = jnp.einsum("tc,sc,tsc->ts", r, k, ratio)
+    A += jnp.where(s_idx == t_idx, jnp.dot(r * u[None, :], k.T), 0.0)
+    o = o_state + jnp.dot(A, v, preferred_element_type=jnp.float32)
+
+    # inter-chunk state: S_C = e^{cw[C-1]} . S0 + sum_s e^{cw[C-1]-cw[s]} k_s^T v_s
+    w_all = jnp.exp(cw[-1])                                # (Dk,)
+    k_scaled = k * jnp.exp(cw[-1][None, :] - cw)           # (C, Dk), expo <= 0
+    s_ref[...] = w_all[:, None] * S + jnp.dot(
+        k_scaled.T, v, preferred_element_type=jnp.float32
+    )
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    @pl.when(it == n_chunks - 1)
+    def _():
+        sout_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,    # (B, H, T, Dk)
+    k: jax.Array,
+    v: jax.Array,    # (B, H, T, Dv)
+    w: jax.Array,    # (B, H, T, Dk)
+    u: jax.Array,    # (H, Dk)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nt = t // chunk
+    kernel = functools.partial(_rwkv6_kernel, chunk=chunk, n_chunks=nt)
+    spec = pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, it: (b_, h_, it, 0))
+    vspec = pl.BlockSpec((1, 1, chunk, dv), lambda b_, h_, it: (b_, h_, it, 0))
+    out, state = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
+        ),
+        grid=(b, h, nt),
+        in_specs=[
+            spec, spec, vspec, spec,
+            pl.BlockSpec((1, dk), lambda b_, h_, it: (h_, 0)),
+        ],
+        out_specs=(
+            vspec,
+            pl.BlockSpec((1, 1, dk, dv), lambda b_, h_, it: (b_, h_, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out, state

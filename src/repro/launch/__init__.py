@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve entries."""
+
+from .mesh import describe, make_local_mesh, make_production_mesh
+
+__all__ = ["describe", "make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,322 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step for train_4k,
+prefill_step for prefill_32k, serve_step for decode cells) against
+ShapeDtypeStruct inputs — no allocation — compiles it for the production
+mesh, and records:
+
+  * memory_analysis()  — per-device bytes: proves the cell fits
+  * cost_analysis()    — HLO FLOPs / bytes for the §Roofline terms
+  * collective traffic — parsed from the optimized HLO (hlo_analysis)
+
+Results are written incrementally to benchmarks/results/dryrun/ as JSON so
+the full 40-cell x 2-mesh sweep can resume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_arch
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import describe, make_production_mesh
+from repro.models.registry import build
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); D = tokens/step.
+
+    For decode cells D = global_batch tokens (one step).
+    """
+    bundle = build(cfg)
+    shapes = jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    routed = 0
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "experts" in keys:
+            routed += n
+    n_params = total
+    if cfg.moe is not None:
+        active = total - routed + routed * cfg.moe.top_k / cfg.moe.n_experts
+    else:
+        active = n_params
+    d_tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6 if cell.kind == "train" else 2
+    return mult * active * d_tokens
+
+
+VARIANTS = {
+    # §Perf variants: config / step-builder deltas applied on top of the
+    # paper-faithful baseline.  Results land in ...__<variant>.json.
+    None: {},
+    "chunked-attn": {"cfg": {"attn_impl": "chunked"}},
+    "no-remat": {"cfg": {"remat": False}},
+    "gradcomp": {"step": {"grad_compression": True}},
+    "microbatch4": {"step": {"microbatches": 4}},
+    "microbatch8": {"step": {"microbatches": 8}},
+    "chunked+mb8": {"cfg": {"attn_impl": "chunked"},
+                    "step": {"microbatches": 8}},
+    # widen the batch axis over the model axis too (removes replicated
+    # attention compute for archs whose heads don't divide model=16)
+    "dp-wide": {"rules": {"dp": ("pod", "data", "model")}},
+    "chunked+dpwide": {"cfg": {"attn_impl": "chunked"},
+                       "rules": {"dp": ("pod", "data", "model")}},
+    # serving: bf16 parameters halve the per-token weight traffic (decode
+    # is weight/cache-bandwidth bound)
+    "bf16-params": {"cfg": {"param_dtype": "bfloat16"}},
+    "bf16+chunked": {"cfg": {"param_dtype": "bfloat16",
+                             "attn_impl": "chunked"}},
+    # serving: TP-only parameter sharding (no per-step FSDP weight gather;
+    # costs replicated weight memory across the dp axis)
+    "bf16+tponly": {"cfg": {"param_dtype": "bfloat16"}, "fsdp_axes": ()},
+}
+
+
+def _lower_step(cfg, cell, mesh, bundle=None, variant: str = None):
+    """Lower the cell's step function; returns the Lowered object."""
+    vspec = VARIANTS[variant]
+    if vspec.get("cfg"):
+        cfg = cfg.with_(**vspec["cfg"])
+        bundle = None
+    bundle = bundle or build(cfg)
+    specs = bundle.input_specs(cell)
+    rules_mapping = None
+    if vspec.get("rules"):
+        from repro.distributed.sharding import DEFAULT_RULES
+        rules_mapping = {**DEFAULT_RULES, **vspec["rules"]}
+    step_kw = dict(vspec.get("step", {}))
+    if "fsdp_axes" in vspec:
+        step_kw["fsdp_axes"] = tuple(vspec["fsdp_axes"])
+    if cell.kind == "train":
+        jitted_for, _ = make_train_step(bundle, mesh,
+                                        rules_mapping=rules_mapping, **step_kw)
+        from repro.train.optimizer import make_optimizer
+        opt = make_optimizer()
+        param_shapes = bundle.param_shapes()
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        err_shapes = (param_shapes if step_kw.get("grad_compression")
+                      else jax.ShapeDtypeStruct((), np.float32))
+        fn = jitted_for(specs)
+        with mesh:
+            return fn.lower(param_shapes, opt_shapes, err_shapes, specs)
+    if cell.kind == "prefill":
+        jitted_for, _ = make_prefill_step(bundle, mesh, max_len=cell.seq_len,
+                                          rules_mapping=rules_mapping,
+                                          **step_kw)
+        param_shapes = bundle.param_shapes()
+        fn = jitted_for(specs["tokens"])
+        with mesh:
+            return fn.lower(param_shapes, specs["tokens"])
+    fn, _ = make_serve_step(bundle, mesh, cell, rules_mapping=rules_mapping,
+                            **step_kw)
+    param_shapes = bundle.param_shapes()
+    with mesh:
+        return fn.lower(param_shapes, specs["tokens"], specs["cache"],
+                        specs["pos"])
+
+
+def _measure(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = H.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll.total_bytes),
+        "_coll": coll,
+    }
+
+
+def _probe_corrected(cfg, cell, mesh, full, variant=None):
+    """Correct body-once while-loop counting via unrolled layer probes.
+
+    XLA's HloCostAnalysis counts a while body once regardless of trip
+    count, so the scanned full model underreports per-layer costs by ~L.
+    Two small python-unrolled compiles at L=u and L=2u (u = the hybrid
+    group size or 1) give exact per-layer-unit deltas; costs extrapolate
+    linearly: total(L) = base + (L/u)·per_unit.
+    """
+    unit = cfg.shared_attn_every or 1
+    probes = {}
+    for k in (1, 2):
+        pcfg = cfg.with_(n_layers=k * unit, scan_layers=False)
+        lowered = _lower_step(pcfg, cell, mesh, variant=variant)
+        probes[k] = _measure(lowered.compile())
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        per_unit = max(probes[2][key] - probes[1][key], 0.0)
+        base = max(probes[1][key] - per_unit, 0.0)
+        out[key] = base + (cfg.n_layers / unit) * per_unit
+    out["probe_unit"] = unit
+    out["probe_values"] = {
+        k: {kk: v[kk] for kk in ("flops", "bytes", "coll_bytes")}
+        for k, v in probes.items()
+    }
+    return out
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, variant: str = None):
+    cfg = get_arch(arch)
+    cell = SHAPES_BY_NAME[shape]
+    bundle = build(cfg)
+    ok, reason = bundle.runnable(cell)
+    if not ok:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lowered = _lower_step(cfg, cell, mesh, variant=variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    raw = _measure(compiled)
+    corrected = _probe_corrected(cfg, cell, mesh, raw, variant=variant)
+    # the microbatch scan is another body-once while loop: scale by n
+    mb = VARIANTS[variant].get("step", {}).get("microbatches", 1)
+    if mb > 1:
+        for key in ("flops", "bytes", "coll_bytes"):
+            corrected[key] *= mb
+
+    terms = H.roofline_terms(corrected["flops"], corrected["bytes"],
+                             corrected["coll_bytes"], n_chips)
+    mf = model_flops(cfg, cell)
+    # decode: irreducible bytes = params + cache, each read once per step
+    ideal_bytes = None
+    if cell.kind == "decode":
+        pb = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(bundle.param_shapes()))
+        cb = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(
+                     jax.eval_shape(lambda: bundle.init_cache(
+                         cell.global_batch, cell.seq_len))))
+        ideal_bytes = (pb + cb) / n_chips
+    # cost_analysis is per-device under SPMD; model_flops is fleet-wide
+    per_device_mf = mf / n_chips
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "multi_pod": multi_pod,
+        "variant": variant,
+        "mesh": describe(mesh),
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_raw": raw["flops"],
+        "hlo_bytes_raw": raw["bytes"],
+        "hlo_flops": corrected["flops"],
+        "hlo_bytes": corrected["bytes"],
+        "collective_bytes": corrected["coll_bytes"],
+        "collectives": raw["_coll"].as_dict(),
+        "probe": {k: v for k, v in corrected.items()
+                  if k in ("probe_unit", "probe_values")},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": terms,
+        "model_flops": mf,
+        "model_flops_per_device": per_device_mf,
+        "ideal_bytes_per_device": ideal_bytes,
+        "useful_fraction": per_device_mf / corrected["flops"]
+        if corrected["flops"] else None,
+    }
+    return rec
+
+
+def result_path(arch: str, shape: str, multi_pod: bool,
+                variant: str = None) -> Path:
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    vtag = f"__{variant}" if variant else ""
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh_tag}{vtag}.json"
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, force: bool = False,
+            variant: str = None) -> dict:
+    out = result_path(arch, shape, multi_pod, variant)
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    try:
+        rec = lower_cell(arch, shape, multi_pod, variant=variant)
+    except Exception as e:  # record failures: they are bugs to fix
+        rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+               "variant": variant,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), action="append")
+    ap.add_argument("--shape", choices=sorted(SHAPES_BY_NAME), action="append")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", choices=[v for v in VARIANTS if v],
+                    default=None)
+    args = ap.parse_args()
+
+    archs = args.arch or (sorted(ARCHS) if args.all else [])
+    shapes = args.shape or (sorted(SHAPES_BY_NAME) if args.all or args.arch else [])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if not archs:
+        ap.error("pass --arch/--shape or --all")
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, force=args.force,
+                              variant=args.variant)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"compile={rec['compile_s']}s "
+                             f"dominant={r['dominant']} "
+                             f"flops={rec['hlo_flops']:.3g}")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                else:
+                    extra = rec["reason"]
+                print(f"[{status:7s}] {arch:18s} {shape:12s} "
+                      f"{'multi' if mp else 'single'}  {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

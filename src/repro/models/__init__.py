@@ -1,0 +1,5 @@
+"""Model zoo: the ten assigned architectures on one unified backbone."""
+
+from .registry import ModelBundle, build, make_batch
+
+__all__ = ["ModelBundle", "build", "make_batch"]

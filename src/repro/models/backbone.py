@@ -1,0 +1,465 @@
+"""Unified decoder backbone for all ten assigned architectures.
+
+Layer stack is a ``jax.lax.scan`` over stacked per-layer params (O(1) HLO
+size for 95-layer models, remat-compatible); the zamba2 hybrid unrolls its
+9 groups of (6 mamba layers -> shared attention block).
+
+Three entry points per model (see registry.ModelBundle):
+  * ``loss``        — next-token CE for train_4k
+  * ``prefill``     — full-sequence forward + KV/state cache build (prefill_32k)
+  * ``decode_step`` — one token against the cache (decode_32k / long_500k)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops, ref as kref
+
+from . import attention as A
+from . import mamba2 as M2
+from . import moe as MOE
+from . import rwkv6 as R6
+from .layers import (
+    cdtype, cross_entropy_loss, embed_tokens, embedding_init, lm_logits,
+    mlp_apply, mlp_init, pdtype, rms_norm,
+)
+
+# ---------------------------------------------------------------------------
+# per-layer block: init / apply / prefill / decode
+
+
+def _is_attn_block(cfg: ArchConfig) -> bool:
+    return cfg.family in ("dense", "vlm", "audio", "moe")
+
+
+def block_init(rng, cfg: ArchConfig) -> Dict:
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return R6.rwkv6_block_init(rng, cfg)
+    if cfg.family == "hybrid" or (cfg.ssm and cfg.ssm.kind == "mamba2"):
+        return M2.mamba2_block_init(rng, cfg)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    dt = pdtype(cfg)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+        "attn": A.mla_init(k1, cfg) if cfg.attention == "mla" else A.gqa_init(k1, cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = MOE.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def block_apply(p: Dict, x: jax.Array, cfg: ArchConfig,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return R6.rwkv6_block_apply(p, x, cfg, positions), aux
+    if cfg.family == "hybrid":
+        return M2.mamba2_block_apply(p, x, cfg, positions), aux
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    attn = A.mla_apply if cfg.attention == "mla" else A.gqa_apply
+    x = x + attn(p["attn"], xn, cfg, positions)
+    xn = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_apply(p["moe"], xn, cfg)
+    else:
+        y = mlp_apply(p["mlp"], xn, cfg)
+    return shard(x + y, "dp", "sp", None), aux
+
+
+def block_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict:
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return R6.rwkv6_init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "hybrid":
+        return M2.mamba2_init_cache(cfg, batch, max_len, dtype)
+    if cfg.attention == "mla":
+        return A.mla_init_cache(cfg, batch, max_len, dtype)
+    return A.gqa_init_cache(cfg, batch, max_len, dtype)
+
+
+def block_decode(p: Dict, x: jax.Array, cfg: ArchConfig, cache: Dict,
+                 pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return R6.rwkv6_block_decode(p, x, cfg, cache, pos)
+    if cfg.family == "hybrid":
+        return M2.mamba2_block_decode(p, x, cfg, cache, pos)
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    dec = A.mla_apply_decode if cfg.attention == "mla" else A.gqa_apply_decode
+    y, new_cache = dec(p["attn"], xn, cfg, cache, pos)
+    x = x + y
+    xn = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_apply(p["moe"], xn, cfg)
+    else:
+        y = mlp_apply(p["mlp"], xn, cfg)
+    return x + y, new_cache
+
+
+def block_prefill(p: Dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array,
+                  max_len: int, dtype) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward that also builds this layer's decode cache."""
+    b, s, _ = x.shape
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return _rwkv6_prefill(p, x, cfg)
+    if cfg.family == "hybrid":
+        return _mamba2_prefill(p, x, cfg)
+    if cfg.attention == "mla":
+        return _mla_prefill(p, x, cfg, positions, max_len, dtype)
+    return _gqa_prefill(p, x, cfg, positions, max_len, dtype)
+
+
+def _finish_block(p, x, attn_out, cfg):
+    x = x + attn_out
+    xn = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_apply(p["moe"], xn, cfg)
+    else:
+        y = mlp_apply(p["mlp"], xn, cfg)
+    return x + y
+
+
+def _gqa_prefill(p, x, cfg, positions, max_len, dtype):
+    b, s, _ = x.shape
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q, k, v = A._qkv(p["attn"], xn, cfg, positions)
+    y = ops.flash_attention(q, k, v, causal=True, window=cfg.window,
+                            impl=cfg.attn_impl)
+    y = y.swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    attn_out = jnp.einsum("btk,kd->btd", y, p["attn"]["wo"].astype(y.dtype))
+    x = _finish_block(p, x, attn_out, cfg)
+
+    cache = A.gqa_init_cache(cfg, b, max_len, dtype)
+    cache_len = cache["k"].shape[2]
+    if cache_len >= s:
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+    else:
+        # ring buffer (SWA): keep the last cache_len tokens at slots pos % len
+        last_pos = np.arange(0, 0) if False else jnp.arange(s - cache_len, s)
+        slots = last_pos % cache_len
+        kc = jnp.zeros_like(cache["k"]).at[:, :, slots].set(k[:, :, -cache_len:])
+        vc = jnp.zeros_like(cache["v"]).at[:, :, slots].set(v[:, :, -cache_len:])
+    return x, {"k": kc.astype(dtype), "v": vc.astype(dtype)}
+
+
+def _mla_prefill(p, x, cfg, positions, max_len, dtype):
+    b, s, _ = x.shape
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q_nope, q_rope, c, k_rope = A._mla_qckr(p["attn"], xn, cfg, positions)
+    attn_out = A._mla_attend(p["attn"], q_nope, q_rope, c, k_rope, cfg)
+    x = _finish_block(p, x, attn_out, cfg)
+    pad = max_len - s
+    cache = {
+        "c": jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(dtype),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))).astype(dtype),
+    }
+    return x, cache
+
+
+def _rwkv6_prefill(p, x, cfg):
+    """Run the block via the state-returning ref path to seed decode."""
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    b, t, _ = x.shape
+    x = x.astype(dt)
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    prev = jnp.zeros((b, d), dt)
+    r, k, v, w, g = R6._time_mix(p, xn, R6._token_shift(xn, prev), cfg)
+    o, wkv_state = ops.rwkv6(r, k, v, w, p["u"].astype(dt), chunk=cfg.ssm.chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d).astype(dt)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps) * g
+    x = x + jnp.einsum("btd,de->bte", o, p["wo"].astype(dt))
+    shift_tm = xn[:, -1]
+
+    xn2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    xs2 = R6._token_shift(xn2, jnp.zeros((b, d), dt))
+    mu = p["mu_ffn"].astype(dt)
+    xk = xn2 + (xs2 - xn2) * mu[0]
+    xr = xn2 + (xs2 - xn2) * mu[1]
+    kf = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["wk_ffn"].astype(dt))))
+    vf = jnp.einsum("btf,fd->btd", kf, p["wv_ffn"].astype(dt))
+    rf = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr_ffn"].astype(dt)))
+    x = x + rf * vf
+    return x, {"wkv": wkv_state, "shift_tm": shift_tm, "shift_cm": xn2[:, -1]}
+
+
+def _mamba2_prefill(p, x, cfg):
+    dt_ = cdtype(cfg)
+    d_inner, h, n, pdim, kk = M2._dims(cfg)
+    b, t, _ = x.shape
+    x = x.astype(dt_)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", xn, p["w_in"].astype(dt_))
+    z, xr, B, C, dt_raw = M2._split_proj(zxbcdt, d_inner, n, h)
+    xbc_pre = jnp.concatenate([xr, B, C], axis=-1)
+    xbc = M2._causal_conv(xbc_pre, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xr, B, C = (xbc[..., :d_inner], xbc[..., d_inner : d_inner + n],
+                xbc[..., d_inner + n :])
+    delta = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    Aa = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_a = (delta * Aa).transpose(0, 2, 1)
+    xh = xr.reshape(b, t, h, pdim).transpose(0, 2, 1, 3)
+    xh = xh * delta.transpose(0, 2, 1)[..., None].astype(dt_)
+    y, ssd_state = ops.mamba2(xh, log_a.astype(jnp.float32),
+                              B.astype(jnp.float32), C.astype(jnp.float32),
+                              chunk=cfg.ssm.chunk)
+    y = y + p["D"].astype(y.dtype)[None, :, None, None] * xh
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_inner).astype(dt_)
+    y = rms_norm(y, p["norm_gate"], cfg.norm_eps) * jax.nn.silu(z)
+    out = x + jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dt_))
+    conv_state = xbc_pre[:, -(kk - 1):] if t >= kk - 1 else jnp.pad(
+        xbc_pre, ((0, 0), (kk - 1 - t, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssd": ssd_state}
+
+
+# ---------------------------------------------------------------------------
+# model init
+
+
+def init_params(rng, cfg: ArchConfig) -> Dict:
+    k_embed, k_layers, k_shared = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {"embedding": embedding_init(k_embed, cfg)}
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    if cfg.shared_attn_every:
+        shared_cfg = _shared_attn_cfg(cfg)
+        ks1, ks2 = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "norm1": jnp.ones((cfg.d_model,), pdtype(cfg)),
+            "norm2": jnp.ones((cfg.d_model,), pdtype(cfg)),
+            "attn": A.gqa_init(ks1, shared_cfg),
+            "mlp": mlp_init(ks2, shared_cfg),
+        }
+    return params
+
+
+def _shared_attn_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Zamba2's shared transformer block config (full attention + MLP)."""
+    return cfg.with_(family="dense", attention="gqa", moe=None, ssm=None,
+                     shared_attn_every=0)
+
+
+def _shared_attn_apply(p, x, cfg, positions):
+    sc = _shared_attn_cfg(cfg)
+    xn = rms_norm(x, p["norm1"], sc.norm_eps)
+    x = x + A.gqa_apply(p["attn"], xn, sc, positions)
+    xn = rms_norm(x, p["norm2"], sc.norm_eps)
+    return x + mlp_apply(p["mlp"], xn, sc)
+
+
+def _shared_attn_decode(p, x, cfg, cache, pos, window: Optional[int]):
+    sc = _shared_attn_cfg(cfg)
+    if window is not None:
+        sc = sc.with_(window=window)
+    xn = rms_norm(x, p["norm1"], sc.norm_eps)
+    y, new_cache = A.gqa_apply_decode(p["attn"], xn, sc, cache, pos)
+    x = x + y
+    xn = rms_norm(x, p["norm2"], sc.norm_eps)
+    return x + mlp_apply(p["mlp"], xn, sc), new_cache
+
+
+def _shared_attn_prefill(p, x, cfg, positions, max_len, dtype, window):
+    sc = _shared_attn_cfg(cfg)
+    if window is not None:
+        sc = sc.with_(window=window)
+    fake = {"norm1": p["norm1"], "norm2": p["norm2"], "attn": p["attn"],
+            "mlp": p["mlp"]}
+    return _gqa_prefill(fake, x, sc, positions, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+
+
+def _layer_slice(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _run_stack(body, carry, stacked, cfg: ArchConfig):
+    """scan-over-layers, or a python unroll when cfg.scan_layers=False.
+
+    The unrolled form exists for the dry-run cost probes: XLA's
+    HloCostAnalysis counts a while-loop body ONCE regardless of trip
+    count, so true per-layer flops/bytes/collectives are extrapolated
+    from small unrolled compiles (launch/dryrun.py).
+    """
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, _layer_slice(stacked, i))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _scan_layers(params, x, cfg: ArchConfig, positions):
+    """(x, total_aux) after the layer stack."""
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a = block_apply(layer_p, x, cfg, positions)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.shared_attn_every:
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        aux = jnp.zeros((), jnp.float32)
+        for g in range(n_groups):
+            group_p = jax.tree_util.tree_map(
+                lambda a, g=g: a[g * cfg.shared_attn_every:(g + 1) * cfg.shared_attn_every],
+                params["layers"],
+            )
+            (x, aux), _ = _run_stack(body, (x, aux), group_p, cfg)
+            x = _shared_attn_apply(params["shared_attn"], x, cfg, positions)
+        return x, aux
+
+    (x, aux), _ = _run_stack(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"], cfg
+    )
+    return x, aux
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S[,Q]) -> (logits, aux_loss)."""
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(params["embedding"], tokens, cfg)
+    x, aux = _scan_layers(params, x, cfg, positions)
+    return lm_logits(params["embedding"], x, cfg), aux
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def prefill(params: Dict, tokens: jax.Array, cfg: ArchConfig,
+            max_len: int, cache_dtype=None) -> Tuple[jax.Array, Any]:
+    """-> (last-token logits (B,1,V[,Q]), stacked cache)."""
+    cache_dtype = cache_dtype or cdtype(cfg)
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(params["embedding"], tokens, cfg)
+
+    def body(x, layer_p):
+        x, cache = block_prefill(layer_p, x, cfg, positions, max_len, cache_dtype)
+        return x, cache
+
+    if cfg.shared_attn_every:
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        window = cfg.window or _zamba_shared_window(max_len)
+        caches, shared_caches = [], []
+        for g in range(n_groups):
+            group_p = jax.tree_util.tree_map(
+                lambda a, g=g: a[g * every:(g + 1) * every], params["layers"])
+            x, cache = _run_stack(body, x, group_p, cfg)
+            caches.append(cache)
+            x, sc = _shared_attn_prefill(params["shared_attn"], x, cfg,
+                                         positions, max_len, cache_dtype, window)
+            shared_caches.append(sc)
+        cache = jax.tree_util.tree_map(
+            lambda *cs: jnp.concatenate(cs, axis=0), *caches)
+        shared = jax.tree_util.tree_map(
+            lambda *cs: jnp.stack(cs, axis=0), *shared_caches)
+        full_cache = {"layers": cache, "shared": shared}
+    else:
+        x, cache = _run_stack(body, x, params["layers"], cfg)
+        full_cache = {"layers": cache}
+
+    logits = lm_logits(params["embedding"], x[:, -1:], cfg)
+    return logits, full_cache
+
+
+def _zamba_shared_window(max_len: int) -> Optional[int]:
+    """At long context the zamba2 shared-attn blocks run windowed (4096) to
+    keep cache memory bounded — documented approximation (DESIGN.md §6)."""
+    return 4096 if max_len > 65536 else None
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cdtype(cfg)
+
+    def one(_):
+        return block_init_cache(cfg, batch, max_len, dtype)
+
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), one(None)
+    )
+    full = {"layers": stacked}
+    if cfg.shared_attn_every:
+        window = cfg.window or _zamba_shared_window(max_len)
+        sc = _shared_attn_cfg(cfg)
+        if window is not None:
+            sc = sc.with_(window=window)
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        shared = A.gqa_init_cache(sc, batch, max_len, dtype)
+        full["shared"] = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n_groups,) + x.shape, x.dtype), shared)
+    return full
+
+
+def decode_step(params: Dict, tokens: jax.Array, cache, pos: jax.Array,
+                cfg: ArchConfig) -> Tuple[jax.Array, Any]:
+    """tokens (B,1[,Q]), pos (B,) -> (logits (B,1,V[,Q]), new cache)."""
+    x = embed_tokens(params["embedding"], tokens, cfg)
+
+    def body(x, xs):
+        layer_p, layer_cache = xs
+        x, new_cache = block_decode(layer_p, x, cfg, layer_cache, pos)
+        return x, new_cache
+
+    if cfg.shared_attn_every:
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        # ring semantics with window == cache_len are exact when the cache
+        # was not truncated, and give the documented windowed behaviour when
+        # it was (long_500k).
+        window = int(jax.tree_util.tree_leaves(cache["shared"])[0].shape[3])
+        new_layer_caches, new_shared = [], []
+        for g in range(n_groups):
+            group = jax.tree_util.tree_map(
+                lambda a, g=g: a[g * every:(g + 1) * every], params["layers"])
+            gcache = jax.tree_util.tree_map(
+                lambda a, g=g: a[g * every:(g + 1) * every], cache["layers"])
+            x, nc = _run_stack(body, x, (group, gcache), cfg)
+            new_layer_caches.append(nc)
+            scache = jax.tree_util.tree_map(lambda a, g=g: a[g], cache["shared"])
+            x, nsc = _shared_attn_decode(params["shared_attn"], x, cfg,
+                                         scache, pos, window)
+            new_shared.append(nsc)
+        new_cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda *cs: jnp.concatenate(cs, axis=0), *new_layer_caches),
+            "shared": jax.tree_util.tree_map(
+                lambda *cs: jnp.stack(cs, axis=0), *new_shared),
+        }
+    else:
+        x, nc = _run_stack(body, x, (params["layers"], cache["layers"]), cfg)
+        new_cache = {"layers": nc}
+
+    logits = lm_logits(params["embedding"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,181 @@
+"""Shared model layers: norms, rope, MLPs, embeddings.
+
+Pure-functional: params are nested dicts of jnp arrays; init functions
+take an rng and the ArchConfig.  Activation sharding uses logical axes via
+``repro.distributed.sharding.shard`` (no-op outside a mesh context).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype):
+    return (jax.random.normal(rng, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(ms + eps)) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with D even; positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def mlp_init(rng, cfg: ArchConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, f, dt),
+            "w_up": dense_init(ks[1], d, f, dt),
+            "w_down": dense_init(ks[2], f, d, dt),
+        }
+    # plain gelu MLP (musicgen)
+    return {
+        "w_up": dense_init(ks[0], d, f, dt),
+        "w_down": dense_init(ks[1], f, d, dt),
+    }
+
+
+def mlp_apply(params: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, T, D).  Gated (swiglu/geglu) or plain-gelu MLP, TP on d_ff."""
+    dt = cdtype(cfg)
+    x = x.astype(dt)
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else (
+            lambda u: jax.nn.gelu(u, approximate=True)
+        )
+        g = jnp.einsum("btd,df->btf", x, params["w_gate"].astype(dt))
+        u = jnp.einsum("btd,df->btf", x, params["w_up"].astype(dt))
+        h = act(g) * u
+    else:
+        u = jnp.einsum("btd,df->btf", x, params["w_up"].astype(dt))
+        h = jax.nn.gelu(u, approximate=True)
+    h = shard(h, "dp", None, "tp")
+    out = jnp.einsum("btf,fd->btd", h, params["w_down"].astype(dt))
+    return shard(out, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+
+
+def embedding_init(rng, cfg: ArchConfig) -> Dict:
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 2 + cfg.n_codebooks)
+    p: Dict = {}
+    if cfg.n_codebooks > 1:
+        p["embed"] = jnp.stack(
+            [embed_init(ks[i], cfg.vocab_size, cfg.d_model, dt)
+             for i in range(cfg.n_codebooks)]
+        )  # (Q, V, D)
+    else:
+        p["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            p["lm_head"] = jnp.stack(
+                [dense_init(ks[1 + i], cfg.d_model, cfg.vocab_size, dt)
+                 for i in range(cfg.n_codebooks)]
+            )  # (Q, D, V)
+        else:
+            p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+    p["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+def embed_tokens(params: Dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """tokens: (B, T) int32, or (B, T, Q) for multi-codebook models."""
+    dt = cdtype(cfg)
+    emb = params["embed"].astype(dt)
+    if cfg.n_codebooks > 1:
+        # sum the codebook embeddings (musicgen delay-pattern backbone)
+        x = sum(emb[q][tokens[..., q]] for q in range(cfg.n_codebooks))
+    else:
+        x = emb[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)  # gemma embed scaling
+    return shard(x, "dp", "sp", None)
+
+
+def lm_logits(params: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks > 1:
+        heads = params["lm_head"].astype(dt)                 # (Q, D, V)
+        logits = jnp.einsum("btd,qdv->btqv", x.astype(dt), heads)
+        return shard(logits, "dp", None, None, "tp")
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(dt)
+    logits = jnp.einsum("btd,dv->btv", x.astype(dt), w)
+    return shard(logits, "dp", None, "tp")
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_index: int = -100) -> jax.Array:
+    """Mean token NLL in f32.  logits (..., V), labels (...)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

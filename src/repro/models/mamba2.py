@@ -1,0 +1,146 @@
+"""Mamba-2 block (used standalone and as the Zamba2 backbone layer).
+
+Structure per Mamba-2 (SSD): in_proj -> [z | x | B | C | dt]; short causal
+conv over (x,B,C); SSD scan with scalar per-head decay (via
+repro.kernels.ops.mamba2 — Pallas chunked kernel on TPU); gated RMSNorm;
+out_proj.  Decode keeps a conv ring state and the (N,P) SSD state per head:
+O(1) memory in sequence length (the long_500k path).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+from .layers import cdtype, dense_init, pdtype, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.head_dim, s.conv_kernel
+
+
+def mamba2_block_init(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, h, n, p_, k = _dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 6)
+    conv_dim = d_inner + 2 * n
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (k, conv_dim)) / np.sqrt(k)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dt),   # per-head decay rate
+        "dt_bias": jnp.zeros((h,), dt),
+        "D": jnp.ones((h,), dt),
+        "norm_gate": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, n, h):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner : 2 * d_inner]
+    B = zxbcdt[..., 2 * d_inner : 2 * d_inner + n]
+    C = zxbcdt[..., 2 * d_inner + n : 2 * d_inner + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, x, B, C, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, kernel k.  xbc: (B, T, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_block_apply(p: Dict, x_in: jax.Array, cfg: ArchConfig,
+                       positions=None) -> jax.Array:
+    dt_ = cdtype(cfg)
+    d_inner, h, n, pdim, k = _dims(cfg)
+    b, t, _ = x_in.shape
+    x_in = x_in.astype(dt_)
+
+    xn = rms_norm(x_in, p["norm"], cfg.norm_eps)
+    xn = shard(xn, "dp", "sp", None)
+    zxbcdt = jnp.einsum("btd,de->bte", xn, p["w_in"].astype(dt_))
+    z, xr, B, C, dt_raw = _split_proj(zxbcdt, d_inner, n, h)
+    xbc = _causal_conv(
+        jnp.concatenate([xr, B, C], axis=-1), p["conv_w"].astype(dt_),
+        p["conv_b"].astype(dt_),
+    )
+    xr, B, C = xbc[..., :d_inner], xbc[..., d_inner : d_inner + n], xbc[..., d_inner + n :]
+    delta = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                            # (B,T,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,) negative
+    log_a = (delta * A).transpose(0, 2, 1)                       # (B,H,T)
+    xh = xr.reshape(b, t, h, pdim).transpose(0, 2, 1, 3)         # (B,H,T,P)
+    xh = xh * delta.transpose(0, 2, 1)[..., None].astype(dt_)    # dt-scaled input
+    xh = shard(xh, "dp", "tp", None, None)
+    y, _ = ops.mamba2(xh, log_a.astype(jnp.float32), B.astype(jnp.float32),
+                      C.astype(jnp.float32), chunk=cfg.ssm.chunk)  # (B,H,T,P)
+    y = y + p["D"].astype(y.dtype)[None, :, None, None] * xh
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_inner).astype(dt_)
+    y = rms_norm(y, p["norm_gate"], cfg.norm_eps) * jax.nn.silu(z)
+    out = x_in + jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dt_))
+    return shard(out, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict:
+    d_inner, h, n, pdim, k = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, k - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, h, n, pdim), jnp.float32),
+    }
+
+
+def mamba2_block_decode(p: Dict, x_in: jax.Array, cfg: ArchConfig,
+                        cache: Dict, pos=None) -> Tuple[jax.Array, Dict]:
+    dt_ = cdtype(cfg)
+    d_inner, h, n, pdim, k = _dims(cfg)
+    b = x_in.shape[0]
+    x_in = x_in.astype(dt_)
+
+    xn = rms_norm(x_in, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", xn, p["w_in"].astype(dt_))
+    z, xr, B, C, dt_raw = _split_proj(zxbcdt, d_inner, n, h)
+    xbc_new = jnp.concatenate([xr, B, C], axis=-1)               # (B,1,conv)
+    conv_window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B,k,conv)
+    w = p["conv_w"].astype(dt_)
+    out = jax.nn.silu(
+        jnp.sum(conv_window * w[None], axis=1, keepdims=True)
+        + p["conv_b"].astype(dt_)
+    )
+    xr, B, C = out[..., :d_inner], out[..., d_inner : d_inner + n], out[..., d_inner + n :]
+    delta = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )[:, 0]                                                       # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_a = delta * A
+    xh = xr.reshape(b, h, pdim) * delta[..., None].astype(dt_)
+    y, new_ssd = kref.mamba2_decode_ref(
+        xh.astype(jnp.float32), log_a, B[:, 0].astype(jnp.float32),
+        C[:, 0].astype(jnp.float32), p["D"].astype(jnp.float32), cache["ssd"],
+    )
+    y = (y + 0.0).reshape(b, 1, d_inner).astype(dt_)
+    y = rms_norm(y, p["norm_gate"], cfg.norm_eps) * jax.nn.silu(z)
+    out_x = x_in + jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dt_))
+    return out_x, {"conv": conv_window[:, 1:], "ssd": new_ssd}

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-factor dispatch.
+
+GShard/Switch-style einsum dispatch — the TPU-native MoE formulation:
+tokens are routed into per-expert capacity buckets with one-hot dispatch
+tensors so all expert compute is dense matmul (MXU) and the expert axis
+shards over the ``ep``(=model) mesh axis; GSPMD turns the dispatch einsums
+into all-to-alls.
+
+Supports Mixtral (8e top-2) and DeepSeekMoE (fine-grained 64e top-6 + 2
+shared experts that every token uses).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+
+from .layers import cdtype, dense_init, pdtype
+
+
+def moe_init(rng, cfg: ArchConfig) -> Dict:
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 5)
+
+    def expert_bank(k, n):
+        k1, k2, k3 = jax.random.split(k, 3)
+        scale = 1.0 / np.sqrt(d)
+        return {
+            "w_gate": (jax.random.normal(k1, (n, d, f)) * scale).astype(dt),
+            "w_up": (jax.random.normal(k2, (n, d, f)) * scale).astype(dt),
+            "w_down": (jax.random.normal(k3, (n, f, d)) / np.sqrt(f)).astype(dt),
+        }
+
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, dt),
+        "experts": expert_bank(ks[1], m.n_experts),
+    }
+    if m.n_shared:
+        p["shared"] = expert_bank(ks[2], m.n_shared)
+    return p
+
+
+def _capacity(group_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    cap = int(np.ceil(m.top_k * group_tokens * m.capacity_factor / m.n_experts))
+    return max(4, ((cap + 3) // 4) * 4)  # pad to multiple of 4 for layout
+
+
+def moe_apply(params: Dict, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (y, aux_loss).
+
+    GShard-style grouped dispatch: each sequence is a routing group, so
+    the dispatch one-hots are (B, T, E, C) with C = k·T·cf/E — dispatch
+    einsum cost stays a small fraction of expert compute (a single global
+    group would make dispatch O(tokens²)).  FLOPs scale with
+    top_k·capacity_factor, not n_experts (MODEL_FLOPS 6·N_active·D).
+    """
+    m = cfg.moe
+    dt = cdtype(cfg)
+    b, t, d = x.shape
+    xt = x.astype(dt)
+    xt = shard(xt, "dp", None, None)
+
+    # --- routing (f32 for numerics) ---
+    logits = jnp.einsum("btd,de->bte", xt, params["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)     # (B,T,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)             # (B,T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # --- capacity-bucket dispatch, per group (GShard) ---
+    cap = _capacity(t, cfg)
+    onehot = jax.nn.one_hot(gate_idx, m.n_experts, dtype=jnp.float32)  # (B,T,K,E)
+    # position of each (token, k) within its expert's bucket, per group
+    flat = onehot.reshape(b, t * m.top_k, m.n_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - 1.0).reshape(
+        b, t, m.top_k, m.n_experts)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                   # (B,T,K)
+    keep = pos < cap                                                 # capacity drop
+    gate_vals = gate_vals * keep.astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    masked = onehot * keep[..., None].astype(jnp.float32)
+    dispatch = jnp.einsum("btke,btkc->btec", masked, pos_oh)
+    combine = jnp.einsum("btk,btke,btkc->btec", gate_vals, onehot, pos_oh)
+    dispatch = shard(dispatch.astype(dt), "dp", None, "ep", "ep2")
+    combine = shard(combine.astype(dt), "dp", None, "ep", "ep2")
+
+    # --- expert compute (dense, expert axis sharded over ep) ---
+    xe = jnp.einsum("btec,btd->ebcd", dispatch, xt)                  # (E,B,C,D)
+    xe = shard(xe, "ep", None, "ep2", None)
+    we = params["experts"]
+    g = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, we["w_gate"].astype(dt)))
+    u = jnp.einsum("ebcd,edf->ebcf", xe, we["w_up"].astype(dt))
+    h = shard(g * u, "ep", None, "ep2", None)
+    ye = jnp.einsum("ebcf,efd->ebcd", h, we["w_down"].astype(dt))
+    ye = shard(ye, "ep", None, "ep2", None)
+    y = jnp.einsum("btec,ebcd->btd", combine, ye)                    # (B,T,D)
+
+    # --- shared experts (always-on) ---
+    if m.n_shared:
+        ws = params["shared"]
+        gs = jax.nn.silu(jnp.einsum("btd,sdf->btsf", xt, ws["w_gate"].astype(dt)))
+        us = jnp.einsum("btd,sdf->btsf", xt, ws["w_up"].astype(dt))
+        y = y + jnp.einsum("btsf,sfd->btd", gs * us, ws["w_down"].astype(dt))
+
+    # --- load-balancing aux loss (Switch) ---
+    me = jnp.mean(probs, axis=(0, 1))                                # (E,)
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))              # (E,)
+    aux = m.n_experts * jnp.sum(me * ce)
+
+    return shard(y, "dp", "sp", None), aux.astype(jnp.float32)

@@ -1,0 +1,190 @@
+"""RWKV-6 (Finch) block: data-dependent-decay time mix + channel mix.
+
+Faithful structure per arXiv:2404.05892: token-shift with data-dependent
+linear interpolation (low-rank "ddlerp"), low-rank data-dependent decay w,
+the wkv6 recurrence (via repro.kernels.ops.rwkv6 — Pallas chunked kernel on
+TPU), per-head group norm, output gate; squared-ReLU channel mix.
+
+State for decode: (wkv state (B,H,Dk,Dv), time-mix shift (B,D),
+channel-mix shift (B,D)).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+from .layers import cdtype, dense_init, pdtype, rms_norm
+
+DDLERP_RANK = 32
+DECAY_RANK = 64
+
+
+def rwkv6_block_init(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 16)
+    p = {
+        # time mix
+        "mu_x": (jnp.ones((5, d)) * 0.5).astype(dt),   # base lerp for w,k,v,r,g
+        "ddlerp_a": dense_init(ks[0], d, 5 * DDLERP_RANK, dt),
+        "ddlerp_b": dense_init(ks[1], 5 * DDLERP_RANK, 5 * d, dt, scale=0.01),
+        "w_decay_a": dense_init(ks[2], d, DECAY_RANK, dt),
+        "w_decay_b": dense_init(ks[3], DECAY_RANK, d, dt, scale=0.01),
+        "decay_base": (jnp.zeros((d,)) - 5.0).astype(dt),
+        "wr": dense_init(ks[4], d, d, dt),
+        "wk": dense_init(ks[5], d, d, dt),
+        "wv": dense_init(ks[6], d, d, dt),
+        "wg": dense_init(ks[7], d, d, dt),
+        "wo": dense_init(ks[8], d, d, dt),
+        "u": (jax.random.normal(ks[9], (h, hd)) * 0.3).astype(dt),
+        "ln_x": jnp.ones((d,), dt),
+        # channel mix
+        "mu_ffn": (jnp.ones((2, d)) * 0.5).astype(dt),
+        "wk_ffn": dense_init(ks[10], d, cfg.d_ff, dt),
+        "wv_ffn": dense_init(ks[11], cfg.d_ff, d, dt),
+        "wr_ffn": dense_init(ks[12], d, d, dt),
+        # norms
+        "norm1": jnp.ones((d,), dt),
+        "norm2": jnp.ones((d,), dt),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B,T,D); prev: (B,D) last token of previous chunk -> shifted x."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix(p: Dict, x: jax.Array, xs: jax.Array, cfg: ArchConfig):
+    """Compute r,k,v,g,w from x and its shifted version xs."""
+    dt = x.dtype
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    b, t, _ = x.shape
+    delta = xs - x
+    # data-dependent lerp (low rank, 5 ways: w,k,v,r,g)
+    base = x + delta * p["mu_x"].astype(dt)[:, None, None]            # (5,B,T,D)
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", delta, p["ddlerp_a"].astype(dt)))
+    mix = jnp.einsum("btr,re->bte", lora, p["ddlerp_b"].astype(dt))   # (B,T,5D)
+    mix = mix.reshape(b, t, 5, d).transpose(2, 0, 1, 3)
+    xw, xk, xv, xr, xg = tuple(base[i] + mix[i] for i in range(5))
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(dt))
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"].astype(dt)))
+    decay = p["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_decay_a"].astype(dt))),
+        p["w_decay_b"].astype(dt),
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay))                                       # (B,T,D) in (0,1)
+
+    def heads(z, dim):
+        return z.reshape(b, t, h, dim).transpose(0, 2, 1, 3)           # (B,H,T,·)
+
+    return (heads(r, hd), heads(k, hd), heads(v, hd),
+            heads(w.astype(dt), hd), g)
+
+
+def rwkv6_block_apply(p: Dict, x: jax.Array, cfg: ArchConfig,
+                      positions=None) -> jax.Array:
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    b, t, _ = x.shape
+    x = x.astype(dt)
+
+    # ---- time mix ----
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    xn = shard(xn, "dp", "sp", None)
+    prev = jnp.zeros((b, d), dt)
+    r, k, v, w, g = _time_mix(p, xn, _token_shift(xn, prev), cfg)
+    r = shard(r, "dp", "tp", None, None)
+    k = shard(k, "dp", "tp", None, None)
+    v = shard(v, "dp", "tp", None, None)
+    o, _ = ops.rwkv6(r, k, v, w, p["u"].astype(dt), chunk=cfg.ssm.chunk)  # (B,H,T,hd)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps) * g
+    x = x + jnp.einsum("btd,de->bte", o, p["wo"].astype(dt))
+
+    # ---- channel mix ----
+    xn = rms_norm(x, p["norm2"], cfg.norm_eps)
+    prev = jnp.zeros((b, d), dt)
+    xs = _token_shift(xn, prev)
+    mu = p["mu_ffn"].astype(dt)
+    xk = xn + (xs - xn) * mu[0]
+    xr = xn + (xs - xn) * mu[1]
+    kf = jnp.einsum("btd,df->btf", xk, p["wk_ffn"].astype(dt))
+    kf = shard(jnp.square(jax.nn.relu(kf)), "dp", None, "tp")
+    vf = jnp.einsum("btf,fd->btd", kf, p["wv_ffn"].astype(dt))
+    rf = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr_ffn"].astype(dt)))
+    x = x + rf * vf
+    return shard(x, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# decode (stateful single token)
+
+
+def rwkv6_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv6_block_decode(p: Dict, x: jax.Array, cfg: ArchConfig,
+                       cache: Dict, pos=None) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, D) one token; O(1) state update (long_500k path)."""
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    b = x.shape[0]
+    x = x.astype(dt)
+
+    xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+    xs = cache["shift_tm"][:, None]
+    r, k, v, w, g = _time_mix(p, xn, xs, cfg)
+    out, new_state = kref.rwkv6_decode_ref(
+        r[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0],
+        p["u"].astype(dt), cache["wkv"],
+    )
+    o = out.reshape(b, 1, d).astype(dt)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps) * g
+    x = x + jnp.einsum("btd,de->bte", o, p["wo"].astype(dt))
+    new_shift_tm = xn[:, 0]
+
+    xn2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    xs2 = cache["shift_cm"][:, None]
+    mu = p["mu_ffn"].astype(dt)
+    xk = xn2 + (xs2 - xn2) * mu[0]
+    xr = xn2 + (xs2 - xn2) * mu[1]
+    kf = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["wk_ffn"].astype(dt))))
+    vf = jnp.einsum("btf,fd->btd", kf, p["wv_ffn"].astype(dt))
+    rf = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr_ffn"].astype(dt)))
+    x = x + rf * vf
+    return x, {
+        "wkv": new_state,
+        "shift_tm": new_shift_tm,
+        "shift_cm": xn2[:, 0],
+    }

@@ -1,0 +1,8 @@
+"""Training-data pipeline on the nested columnar store."""
+
+from .tokens import DOC_SCHEMA, docs_to_batch
+from .ingest import ingest_corpus, synth_corpus
+from .loader import PackedLoader
+
+__all__ = ["DOC_SCHEMA", "docs_to_batch", "ingest_corpus", "synth_corpus",
+           "PackedLoader"]

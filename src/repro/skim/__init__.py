@@ -1,0 +1,9 @@
+"""Dataset skimming application (paper §6.2, AGC-style)."""
+
+from .engine import (
+    EVENT_SCHEMA, Cuts, make_agc_dataset, skim_file, skim_partitions,
+    STRATEGIES,
+)
+
+__all__ = ["EVENT_SCHEMA", "Cuts", "make_agc_dataset", "skim_file",
+           "skim_partitions", "STRATEGIES"]

@@ -1,0 +1,271 @@
+"""AGC-style dataset skimming (paper §6.2), all five strategies of Fig. 5.
+
+Event model (a faithful miniature of the CMS ttbar skim):
+    { event_id, met, electrons_pt[], muons_pt[], jets_pt[] }
+
+Three skims, applied together exactly like the paper:
+  * horizontal — drop unused columns (schema projection)
+  * vertical   — keep events with >=1 electron AND >=1 muon AND >=4 jets
+                 above the coarse cut
+  * nested     — drop collection elements below the cut
+
+Strategies (paper Fig. 5):
+  imt            one sequential writer per partition, page-compression pool
+  separate       one file per input shard, then hadd-style merge
+  buffermerger   per-worker in-memory files merged from worker threads
+  parallel       the paper's parallel writer (one file per partition)
+  separate-null  separate files into /dev/null (scalability ceiling)
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (
+    BufferMerger, Collection, ColumnBatch, Leaf, ParallelWriter, RNTJReader,
+    Schema, SequentialWriter, WriteOptions, merge_files,
+)
+
+EVENT_SCHEMA = Schema([
+    Leaf("event_id", "int64"),
+    Leaf("met", "float32"),
+    Collection("electrons_pt", Leaf("_0", "float32")),
+    Collection("muons_pt", Leaf("_0", "float32")),
+    Collection("jets_pt", Leaf("_0", "float32")),
+])
+
+# horizontal skim keeps these fields (drops met)
+KEEP_FIELDS = ["event_id", "electrons_pt", "muons_pt", "jets_pt"]
+
+STRATEGIES = ("imt", "separate", "buffermerger", "parallel", "separate-null")
+
+
+@dataclass(frozen=True)
+class Cuts:
+    pt_cut: float = 20.0
+    min_electrons: int = 1
+    min_muons: int = 1
+    min_jets: int = 4
+
+
+# ---------------------------------------------------------------------------
+# synthetic AGC-like dataset
+
+
+def make_agc_dataset(
+    directory: str,
+    n_partitions: int = 9,
+    files_per_partition: int = 4,
+    events_per_file: int = 20_000,
+    seed: int = 0,
+    options: Optional[WriteOptions] = None,
+) -> Dict[int, List[str]]:
+    """-> {partition: [input files]} (the paper's 787-file / 9-partition
+    layout, scaled to this container)."""
+    options = options or WriteOptions(codec="zlib", level=1,
+                                      cluster_bytes=2 * 1024 * 1024)
+    out: Dict[int, List[str]] = {}
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    for part in range(n_partitions):
+        out[part] = []
+        for f in range(files_per_partition):
+            rng = np.random.default_rng(seed + 1000 * part + f)
+            path = str(d / f"part{part}_file{f}.rntj")
+            batch = _synth_events(rng, events_per_file,
+                                  id0=(part * files_per_partition + f) * events_per_file)
+            with SequentialWriter(EVENT_SCHEMA, path, options) as w:
+                w.fill_batch(batch)
+            out[part].append(path)
+    return out
+
+
+def _synth_events(rng: np.random.Generator, n: int, id0: int) -> ColumnBatch:
+    ne = rng.poisson(1.2, n).astype(np.int64)
+    nm = rng.poisson(1.2, n).astype(np.int64)
+    nj = rng.poisson(6.0, n).astype(np.int64)
+    pt = lambda total: rng.exponential(18.0, int(total)).astype(np.float32) + 5.0
+    return ColumnBatch.from_arrays(EVENT_SCHEMA, n, {
+        "event_id": np.arange(id0, id0 + n, dtype=np.int64),
+        "met": rng.exponential(30.0, n).astype(np.float32),
+        "electrons_pt": ne, "electrons_pt._0": pt(ne.sum()),
+        "muons_pt": nm, "muons_pt._0": pt(nm.sum()),
+        "jets_pt": nj, "jets_pt._0": pt(nj.sum()),
+    })
+
+
+# ---------------------------------------------------------------------------
+# the skim kernel (vectorized, per cluster)
+
+OUT_SCHEMA = EVENT_SCHEMA.project(KEEP_FIELDS)
+
+
+def _skim_cluster(reader: RNTJReader, ci: int, cuts: Cuts) -> Optional[ColumnBatch]:
+    s = reader.schema
+    cols = reader.read_cluster(ci)
+    n = reader.clusters[ci].n_entries
+
+    def coll(path):
+        offs = cols[s.column_of_path[path]].astype(np.int64)
+        vals = cols[s.column_of_path[path + "._0"]]
+        sizes = np.empty_like(offs)
+        if len(offs):
+            sizes[0] = offs[0]
+            np.subtract(offs[1:], offs[:-1], out=sizes[1:])
+        return sizes, vals
+
+    e_sz, e_pt = coll("electrons_pt")
+    m_sz, m_pt = coll("muons_pt")
+    j_sz, j_pt = coll("jets_pt")
+
+    def count_above(sizes, vals):
+        mask = vals > cuts.pt_cut
+        idx = np.repeat(np.arange(n), sizes)
+        return np.bincount(idx, weights=mask.astype(np.float64), minlength=n), mask
+
+    e_cnt, e_keep = count_above(e_sz, e_pt)
+    m_cnt, m_keep = count_above(m_sz, m_pt)
+    j_cnt, j_keep = count_above(j_sz, j_pt)
+
+    keep = ((e_cnt >= cuts.min_electrons) & (m_cnt >= cuts.min_muons)
+            & (j_cnt >= cuts.min_jets))          # vertical skim
+    if not keep.any():
+        return None
+
+    def nested(sizes, vals, elem_keep):
+        ev_of_elem = np.repeat(keep, sizes)
+        m = elem_keep & ev_of_elem                 # nested skim
+        new_vals = vals[m]
+        idx = np.repeat(np.arange(n), sizes)
+        new_sizes = np.bincount(idx, weights=m.astype(np.float64), minlength=n)
+        return new_sizes[keep].astype(np.int64), new_vals
+
+    e_s, e_v = nested(e_sz, e_pt, e_keep)
+    m_s, m_v = nested(m_sz, m_pt, m_keep)
+    j_s, j_v = nested(j_sz, j_pt, j_keep)
+    ids = cols[s.column_of_path["event_id"]][keep]
+
+    return ColumnBatch.from_arrays(OUT_SCHEMA, int(keep.sum()), {
+        "event_id": ids,
+        "electrons_pt": e_s, "electrons_pt._0": e_v,
+        "muons_pt": m_s, "muons_pt._0": m_v,
+        "jets_pt": j_s, "jets_pt._0": j_v,
+    })
+
+
+def skim_file(in_path: str, fill, cuts: Cuts) -> int:
+    """Skim one input file into ``fill(batch)``; returns kept events."""
+    r = RNTJReader(in_path)
+    kept = 0
+    for ci in range(r.n_clusters):
+        batch = _skim_cluster(r, ci, cuts)
+        if batch is not None:
+            fill(batch)
+            kept += batch.n_entries
+    r.close()
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# strategies (paper Fig. 5)
+
+
+def skim_partitions(
+    partitions: Dict[int, List[str]],
+    out_dir: str,
+    strategy: str,
+    n_threads: int,
+    cuts: Cuts = Cuts(),
+    options: Optional[WriteOptions] = None,
+    imt_workers: Optional[int] = None,
+) -> Dict:
+    """Skim all partitions with the given strategy; returns stats."""
+    assert strategy in STRATEGIES, strategy
+    options = options or WriteOptions(codec="zlib", level=1,
+                                      cluster_bytes=2 * 1024 * 1024)
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    kept_total = [0]
+    kept_lock = threading.Lock()
+
+    def add_kept(k):
+        with kept_lock:
+            kept_total[0] += k
+
+    pool = ThreadPoolExecutor(max_workers=n_threads)
+
+    if strategy == "imt":
+        # parallelize over partitions only; page compression pool inside.
+        per_part = max(1, n_threads // max(len(partitions), 1))
+        opts = WriteOptions(**{**options.__dict__,
+                               "imt_workers": imt_workers or per_part})
+        def run_part(part, files):
+            w = SequentialWriter(OUT_SCHEMA, str(out / f"skim_{part}.rntj"), opts)
+            for f in files:
+                add_kept(skim_file(f, w.fill_batch, cuts))
+            w.close()
+        futs = [pool.submit(run_part, p, fs) for p, fs in partitions.items()]
+
+    elif strategy in ("separate", "separate-null"):
+        tmp_files: Dict[int, List[str]] = {p: [] for p in partitions}
+        def run_file(part, i, f):
+            dst = ("/dev/null" if strategy == "separate-null"
+                   else str(out / f"tmp_{part}_{i}.rntj"))
+            w = SequentialWriter(OUT_SCHEMA, dst, options)
+            add_kept(skim_file(f, w.fill_batch, cuts))
+            w.close()
+            if strategy == "separate":
+                tmp_files[part].append(dst)
+        futs = [pool.submit(run_file, p, i, f)
+                for p, fs in partitions.items() for i, f in enumerate(fs)]
+        for fu in futs:
+            fu.result()
+        futs = []
+        if strategy == "separate":
+            # hadd-style merge per partition (parallel over partitions)
+            futs = [pool.submit(merge_files, tmp_files[p],
+                                str(out / f"skim_{p}.rntj"), options)
+                    for p in partitions]
+
+    elif strategy == "buffermerger":
+        mergers = {p: BufferMerger(OUT_SCHEMA, str(out / f"skim_{p}.rntj"),
+                                   options) for p in partitions}
+        def run_file(part, f):
+            bmf = mergers[part].get_file()
+            add_kept(skim_file(f, bmf.fill_batch, cuts))
+            bmf.close()
+        futs = [pool.submit(run_file, p, f)
+                for p, fs in partitions.items() for f in fs]
+        for fu in futs:
+            fu.result()
+        futs = []
+        for m in mergers.values():
+            m.close()
+
+    else:  # parallel — the paper's contribution
+        writers = {p: ParallelWriter(OUT_SCHEMA, str(out / f"skim_{p}.rntj"),
+                                     options) for p in partitions}
+        def run_file(part, f):
+            ctx = writers[part].create_fill_context()
+            add_kept(skim_file(f, ctx.fill_batch, cuts))
+            ctx.close()
+        futs = [pool.submit(run_file, p, f)
+                for p, fs in partitions.items() for f in fs]
+        for fu in futs:
+            fu.result()
+        futs = []
+        for w in writers.values():
+            w.close()
+
+    for fu in futs:
+        fu.result()
+    pool.shutdown(wait=True)
+    return {"kept_events": kept_total[0], "strategy": strategy,
+            "n_threads": n_threads}

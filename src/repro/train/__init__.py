@@ -1,0 +1,13 @@
+"""Training substrate: optimizer, sharded steps, loop, grad compression."""
+
+from .optimizer import AdamW, AdamWState, cosine_schedule, make_optimizer
+from .step import (
+    init_train_state, make_prefill_step, make_serve_step, make_train_step,
+)
+from .loop import LoopConfig, StepEvent, TrainLoop
+
+__all__ = [
+    "AdamW", "AdamWState", "cosine_schedule", "make_optimizer",
+    "init_train_state", "make_prefill_step", "make_serve_step",
+    "make_train_step", "LoopConfig", "StepEvent", "TrainLoop",
+]

@@ -1,0 +1,53 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+A distributed-optimization trick for scale: gradients are quantized to int8
+per-tensor (symmetric, max-abs scaling) before the data-parallel reduction,
+and the quantization error is fed back into the next step's gradients so
+the scheme stays unbiased over time (error-feedback SGD).
+
+Under pjit the all-reduce is implicit (GSPMD inserts it for replicated-
+parameter gradients / reduce-scatter for FSDP); quantizing the gradient
+tensor before the psum boundary shrinks the collective payload 4x vs f32.
+The compile-time effect is visible in the §Roofline collective term.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compress_grads(grads, error_state) -> Tuple[Dict, Dict]:
+    """-> (decompressed grads as seen post-allreduce, new error state)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        return deq, gf - deq
+
+    flat = jax.tree_util.tree_map(one, grads, error_state)
+    out = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return out, err

@@ -1,0 +1,132 @@
+"""Container sinks and metadata envelope edge cases."""
+
+import struct
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DevNullSink, FileSink, MemorySink, ThrottledSink
+from repro.core.metadata import (
+    ANCHOR_SIZE, build_anchor, build_footer, build_header, build_pagelist,
+    parse_anchor, parse_footer, parse_header, parse_pagelist,
+    wrap_envelope, unwrap_envelope, ClusterMeta, ENV_HEADER,
+)
+from repro.core.pages import PageDesc
+from repro.core.schema import Leaf, Schema
+
+
+def test_memory_sink_positioned_writes():
+    s = MemorySink()
+    off1 = s.reserve(4)
+    off2 = s.reserve(4)
+    s.pwrite(off2, b"wxyz")       # out of order on purpose
+    s.pwrite(off1, b"abcd")
+    assert s.pread(0, 8) == b"abcdwxyz"
+    assert s.size == 8
+
+
+def test_devnull_counts_bytes():
+    s = DevNullSink()
+    s.reserve(100)
+    s.pwrite(0, b"x" * 100)
+    assert s.io.bytes_written == 100
+    assert s.io.write_calls == 1
+    with pytest.raises(IOError):
+        s.pread(0, 1)
+
+
+def test_file_sink_roundtrip(tmp_path):
+    p = str(tmp_path / "f.bin")
+    s = FileSink(p)
+    off = s.reserve(6)
+    s.pwrite(off, b"hello!")
+    s.fallocate(off, 6)
+    assert s.io.fallocate_calls == 1
+    assert s.pread(0, 6) == b"hello!"
+    s.close()
+    s2 = FileSink(p, create=False)
+    assert s2.size == 6
+    s2.close()
+
+
+def test_throttled_sink_enforces_bandwidth():
+    inner = DevNullSink()
+    s = ThrottledSink(inner, bw=1e6)      # 1 MB/s
+    t0 = time.perf_counter()
+    s.pwrite(s.reserve(200_000), b"x" * 200_000)
+    dt = time.perf_counter() - t0
+    assert dt >= 0.15                     # ~0.2 s at 1 MB/s
+
+
+def test_throttled_prealloc_bandwidth():
+    inner = DevNullSink()
+    s = ThrottledSink(inner, bw=1e6, bw_prealloc=10e6)
+    off = s.reserve(200_000)
+    s.fallocate(off, 200_000)
+    t0 = time.perf_counter()
+    s.pwrite(off, b"x" * 200_000)
+    dt = time.perf_counter() - t0
+    assert dt < 0.1                       # 10x faster on preallocated extent
+
+
+# ---------------------------------------------------------------------------
+# metadata envelopes
+
+
+@given(st.binary(max_size=2000))
+@settings(max_examples=50, deadline=None)
+def test_envelope_roundtrip(payload):
+    buf = wrap_envelope(ENV_HEADER, payload)
+    assert unwrap_envelope(buf, ENV_HEADER) == payload
+
+
+def test_envelope_detects_corruption():
+    buf = bytearray(wrap_envelope(ENV_HEADER, b"payload-data"))
+    buf[20] ^= 0xFF
+    with pytest.raises(IOError):
+        unwrap_envelope(bytes(buf), ENV_HEADER)
+
+
+def test_anchor_roundtrip_and_corruption():
+    a = build_anchor((10, 20), (30, 40), 1000, 7)
+    assert len(a) == ANCHOR_SIZE
+    d = parse_anchor(a)
+    assert d["header"] == (10, 20) and d["footer"] == (30, 40)
+    assert d["n_entries"] == 1000 and d["n_clusters"] == 7
+    bad = bytearray(a)
+    bad[5] ^= 1
+    with pytest.raises(IOError):
+        parse_anchor(bytes(bad))
+
+
+def test_header_roundtrip():
+    schema = Schema([Leaf("x", "int32")])
+    buf = build_header(schema, {"codec": 1})
+    s2, opts = parse_header(buf)
+    assert s2 == schema and opts["codec"] == 1
+
+
+@given(st.lists(st.tuples(
+    st.integers(0, 100), st.integers(0, 10_000), st.integers(0, 2**31),
+    st.integers(0, 2**20), st.integers(0, 2**20),
+), max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_pagelist_roundtrip(pages):
+    descs = [PageDesc(column=c % 3, n_elements=n, offset=o, size=s,
+                      uncompressed_size=u, checksum=123, codec=1)
+             for c, n, o, s, u in pages]
+    cm = ClusterMeta(first_entry=5, n_entries=17, n_elements=[1, 2, 3],
+                     pages=descs, byte_offset=99, byte_size=1234)
+    buf = build_pagelist([cm], 3)
+    back = parse_pagelist(buf)
+    assert len(back) == 1
+    b = back[0]
+    assert (b.first_entry, b.n_entries, b.n_elements) == (5, 17, [1, 2, 3])
+    assert len(b.pages) == len(descs)
+    for p, q in zip(b.pages, descs):
+        assert (p.column, p.n_elements, p.offset, p.size,
+                p.uncompressed_size, p.codec) == (
+            q.column, q.n_elements, q.offset, q.size,
+            q.uncompressed_size, q.codec)

@@ -1,0 +1,88 @@
+"""Property tests for column preconditioning encodings."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as E
+
+DTYPES = ["int8", "uint8", "int16", "int32", "uint32", "int64", "uint64",
+          "float16", "float32", "float64"]
+
+
+@st.composite
+def arrays(draw, dtype=None):
+    dt = np.dtype(dtype or draw(st.sampled_from(DTYPES)))
+    n = draw(st.integers(0, 300))
+    if dt.kind == "f":
+        lim = 6e4 if dt == np.float16 else 1e6
+        vals = draw(st.lists(st.floats(-lim, lim, width=32), min_size=n, max_size=n))
+        return np.asarray(vals, dtype=dt)
+    info = np.iinfo(dt)
+    vals = draw(st.lists(st.integers(int(info.min), int(info.max)), min_size=n, max_size=n))
+    return np.asarray(vals, dtype=dt)
+
+
+@given(arrays())
+@settings(max_examples=150, deadline=None)
+def test_split_roundtrip(a):
+    buf = E.split_encode(a)
+    assert len(buf) == a.nbytes
+    back = E.split_decode(buf, a.dtype, len(a))
+    np.testing.assert_array_equal(back, a)
+
+
+@given(st.lists(st.integers(-(2**62), 2**62), max_size=200))
+@settings(max_examples=150, deadline=None)
+def test_zigzag_roundtrip(vals):
+    x = np.asarray(vals, dtype=np.int64)
+    u = E.zigzag_encode(x)
+    np.testing.assert_array_equal(E.zigzag_decode(u), x)
+
+
+def test_zigzag_small_values():
+    x = np.array([0, -1, 1, -2, 2], dtype=np.int64)
+    np.testing.assert_array_equal(E.zigzag_encode(x), [0, 1, 2, 3, 4])
+
+
+@given(st.lists(st.integers(0, 2**40), max_size=200), st.integers(0, 1000))
+@settings(max_examples=150, deadline=None)
+def test_delta_roundtrip(vals, ref):
+    x = np.asarray(sorted(vals), dtype=np.int64)
+    d = E.delta_encode(x, ref)
+    np.testing.assert_array_equal(E.delta_decode(d, ref), x)
+
+
+@given(st.lists(st.integers(0, 1000), max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_dzs_roundtrip_offsets(sizes):
+    offs = E.sizes_to_offsets(np.asarray(sizes, dtype=np.int64))
+    buf = E.dzs_encode(offs)
+    np.testing.assert_array_equal(E.dzs_decode(buf, len(offs)), offs)
+
+
+@given(st.lists(st.integers(0, 255), max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_sizes_offsets_inverse(sizes):
+    s = np.asarray(sizes, dtype=np.int64)
+    np.testing.assert_array_equal(E.offsets_to_sizes(E.sizes_to_offsets(s)), s)
+
+
+def test_dzs_compresses_monotonic_offsets():
+    """The point of the encoding: monotonic offsets become tiny after zlib."""
+    import zlib
+    sizes = np.random.default_rng(0).poisson(5, 10000)
+    offs = E.sizes_to_offsets(sizes)
+    raw = offs.tobytes()
+    pre = E.dzs_encode(offs)
+    assert len(zlib.compress(pre, 1)) < 0.5 * len(zlib.compress(raw, 1))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_precondition_dispatch(dtype):
+    rng = np.random.default_rng(1)
+    a = (rng.uniform(0, 100, 64)).astype(dtype)
+    for enc in ("none", "split"):
+        buf = E.precondition(a, enc)
+        back = E.unprecondition(buf, enc, a.dtype, len(a))
+        np.testing.assert_array_equal(back, a)

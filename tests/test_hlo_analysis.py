@@ -1,0 +1,76 @@
+"""Unit tests for the HLO collective parser and roofline math."""
+
+import pytest
+
+from repro.launch.hlo_analysis import (
+    CollectiveStats, parse_collectives, roofline_terms, shape_bytes,
+    PEAK_FLOPS, HBM_BW, ICI_BW,
+)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert shape_bytes("bf16[2,4,8]{2,1,0}") == 64 * 2
+    assert shape_bytes("pred[16]") == 16
+    assert shape_bytes("(f32[2], bf16[4])") == 8 + 8
+    assert shape_bytes("u8[0]") == 0
+    assert shape_bytes("s64[3,3]") == 72
+
+
+HLO_SAMPLE = """
+HloModule test
+
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %mul = f32[64,128]{1,0} multiply(%p0, %p0)
+  %ag = f32[128,128]{1,0} all-gather(%mul), dimensions={0}
+  %ar = f32[64,128]{1,0} all-reduce(%mul), to_apply=%add
+  %rs = f32[32,128]{1,0} reduce-scatter(%mul), dimensions={0}
+  %a2a = f32[64,128]{1,0} all-to-all(%mul), dimensions={0}
+  %cp = f32[64,128]{1,0} collective-permute(%mul), source_target_pairs={{0,1}}
+  ROOT %out = f32[64,128]{1,0} add(%ar, %cp)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = parse_collectives(HLO_SAMPLE)
+    assert stats.total_count == 5
+    assert set(stats.count_by_kind) == {
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute"}
+    # every collective's operand is %mul: f32[64,128] = 32768 bytes
+    for kind, nbytes in stats.bytes_by_kind.items():
+        assert nbytes == 64 * 128 * 4, kind
+
+
+def test_parse_collectives_ignores_non_collectives():
+    stats = parse_collectives("""
+ENTRY %m (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  ROOT %r = f32[4]{0} add(%p, %p)
+}
+""")
+    assert stats.total_count == 0
+    assert stats.total_bytes == 0
+
+
+def test_parse_collectives_start_variant():
+    stats = parse_collectives("""
+ENTRY %m (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ag = f32[16]{0} all-gather-start(%p), dimensions={0}
+}
+""")
+    assert stats.count_by_kind.get("all-gather") == 1
+    assert stats.bytes_by_kind["all-gather"] == 32
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(hlo_flops=PEAK_FLOPS, hlo_bytes=0, collective_bytes=0,
+                       n_chips=1)
+    assert t["dominant"] == "compute" and t["compute_s"] == pytest.approx(1.0)
+    t = roofline_terms(0, HBM_BW * 2, 0, 4)
+    assert t["dominant"] == "memory" and t["memory_s"] == pytest.approx(2.0)
+    t = roofline_terms(0, 0, ICI_BW * 3, 4)
+    assert t["dominant"] == "collective" and t["collective_s"] == pytest.approx(3.0)

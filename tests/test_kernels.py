@@ -1,0 +1,280 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes and dtypes per kernel; also cross-checks the encoder kernels
+against the numpy host implementations in repro.core.encoding (the writer's
+actual serialization path must be bit-identical to the TPU kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as E
+from repro.kernels import ref
+from repro.kernels.byteshuffle import byteshuffle
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.delta_zigzag import delta_zigzag
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_ssd import mamba2_ssd
+from repro.kernels.offsets_scan import offsets_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+jax.config.update("jax_platform_name", "cpu")
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# columnar encoder kernels
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 5000])
+@pytest.mark.parametrize("block", [128, 4096])
+def test_offsets_scan_matches_ref_and_host(n, block):
+    lengths = jnp.asarray(RNG.poisson(5, n), dtype=jnp.int32)
+    out = offsets_scan(lengths, block=block, interpret=True)
+    np.testing.assert_array_equal(out, ref.offsets_scan_ref(lengths))
+    host = E.sizes_to_offsets(np.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.int64), host)
+
+
+@pytest.mark.parametrize("n", [1, 64, 999, 4096])
+def test_delta_zigzag_matches_ref_and_host(n):
+    sizes = RNG.poisson(5, n)
+    offs32 = np.cumsum(sizes).astype(np.int32)
+    out = delta_zigzag(jnp.asarray(offs32), block=256, interpret=True)
+    np.testing.assert_array_equal(out, ref.delta_zigzag_ref(jnp.asarray(offs32)))
+    # host path: zigzag(delta(x)) on int64 then downcast pattern
+    host = E.zigzag_encode(E.delta_encode(offs32.astype(np.int64)))
+    np.testing.assert_array_equal(
+        np.asarray(out, dtype=np.uint64), host & np.uint64(0xFFFFFFFF)
+    )
+
+
+@pytest.mark.parametrize("itemsize", [2, 4, 8])
+@pytest.mark.parametrize("n", [1, 100, 2048, 6000])
+def test_byteshuffle_matches_ref_and_host(itemsize, n):
+    planes = jnp.asarray(RNG.integers(0, 256, (n, itemsize)), dtype=jnp.uint8)
+    out = byteshuffle(planes, block=512, interpret=True)
+    np.testing.assert_array_equal(out, ref.byteshuffle_ref(planes))
+    # host split_encode of an array with this itemsize
+    arr = np.frombuffer(np.asarray(planes).tobytes(), dtype=f"<u{itemsize}")
+    host = E.split_encode(arr)
+    assert np.asarray(out).tobytes() == host
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@pytest.mark.parametrize("b,h,g,sq,sk,d", [
+    (1, 4, 4, 128, 128, 64),      # MHA square
+    (2, 8, 2, 256, 256, 64),      # GQA
+    (1, 8, 1, 128, 128, 128),     # MQA
+    (1, 4, 4, 64, 256, 64),       # decode-ish: short q, long kv
+    (1, 4, 2, 200, 200, 80),      # non-divisible by blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, h, g, sq, sk, d, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, sq, d)), dtype=dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, g, sk, d)), dtype=dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, g, sk, d)), dtype=dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128, 1024])
+def test_flash_attention_sliding_window(window):
+    b, h, g, s, d = 1, 4, 2, 256, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, g, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, g, s, d)), dtype=jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_naive_softmax():
+    """Independent oracle: hand-rolled masked softmax."""
+    b, h, s, d = 1, 2, 64, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), dtype=jnp.float32)
+    logits = np.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(d)
+    mask = np.tril(np.ones((s, s), bool))
+    logits = np.where(mask, logits, -np.inf)
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    expect = np.einsum("bhqk,bhkd->bhqd", p, v)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+
+
+@pytest.mark.parametrize("b,h,g,s,d", [
+    (2, 4, 4, 512, 64),
+    (2, 8, 2, 1024, 64),
+    (1, 8, 1, 777, 128),     # MQA, ragged length
+])
+def test_decode_attention_full(b, h, g, s, d):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, g, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, g, s, d)), dtype=jnp.float32)
+    out = decode_attention(q, k, v, block_k=256, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_lengths_and_window():
+    b, h, g, s, d = 3, 4, 2, 640, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, g, s, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, g, s, d)), dtype=jnp.float32)
+    length = jnp.asarray([100, 640, 333], dtype=jnp.int32)
+    for window in (None, 64):
+        out = decode_attention(q, k, v, length=length, window=window,
+                               block_k=128, interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, length=length, window=window)
+        np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+
+
+@pytest.mark.parametrize("b,h,t,dk,dv,chunk", [
+    (1, 2, 64, 32, 32, 16),
+    (2, 2, 128, 64, 64, 32),
+    (1, 4, 96, 48, 64, 32),
+])
+def test_rwkv6_scan_vs_ref(b, h, t, dk, dv, chunk):
+    r = jnp.asarray(RNG.normal(0, 1, (b, h, t, dk)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, t, dk)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, t, dv)), dtype=jnp.float32)
+    # realistic rwkv6 decay range: w = exp(-exp(x)), x in [-4, 1]
+    w = jnp.exp(-jnp.exp(jnp.asarray(RNG.uniform(-4, 1, (b, h, t, dk)),
+                                     dtype=jnp.float32)))
+    u = jnp.asarray(RNG.normal(0, 1, (h, dk)), dtype=jnp.float32)
+    out, state = rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    expect, state_ref = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(out, expect, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(state, state_ref, atol=5e-4, rtol=5e-4)
+
+
+def test_rwkv6_strong_decay_stable():
+    """Near-zero decay must not overflow (the naive factorization does)."""
+    b, h, t, dk, dv = 1, 1, 64, 16, 16
+    r = jnp.ones((b, h, t, dk)) * 0.1
+    k = jnp.ones((b, h, t, dk)) * 0.1
+    v = jnp.ones((b, h, t, dv))
+    w = jnp.full((b, h, t, dk), 1e-6)       # extremely strong decay
+    u = jnp.zeros((h, dk))
+    out, _ = rwkv6_scan(r, k, v, w, u, chunk=32, interpret=True)
+    expect, _ = ref.rwkv6_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 SSD
+
+
+@pytest.mark.parametrize("b,h,t,p,n,chunk", [
+    (1, 2, 128, 32, 16, 32),
+    (2, 4, 128, 64, 64, 64),
+    (1, 2, 256, 64, 32, 64),
+])
+def test_mamba2_ssd_vs_ref(b, h, t, p, n, chunk):
+    x = jnp.asarray(RNG.normal(0, 1, (b, h, t, p)), dtype=jnp.float32)
+    log_a = -jnp.exp(jnp.asarray(RNG.uniform(-3, 0.5, (b, h, t)), dtype=jnp.float32))
+    Bm = jnp.asarray(RNG.normal(0, 1, (b, t, n)), dtype=jnp.float32)
+    Cm = jnp.asarray(RNG.normal(0, 1, (b, t, n)), dtype=jnp.float32)
+    out, state = mamba2_ssd(x, log_a, Bm, Cm, chunk=chunk, interpret=True)
+    D0 = jnp.zeros((h,), jnp.float32)
+    expect, state_ref = ref.mamba2_ref(x, log_a, Bm, Cm, D0)
+    np.testing.assert_allclose(out, expect, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(state, state_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_mamba2_state_continuity():
+    """Chunked kernel must equal ref across chunk boundaries (state carry)."""
+    b, h, t, p, n = 1, 1, 192, 16, 8
+    x = jnp.asarray(RNG.normal(0, 1, (b, h, t, p)), dtype=jnp.float32)
+    log_a = jnp.full((b, h, t), -0.05)
+    Bm = jnp.asarray(RNG.normal(0, 1, (b, t, n)), dtype=jnp.float32)
+    Cm = jnp.asarray(RNG.normal(0, 1, (b, t, n)), dtype=jnp.float32)
+    out_c64, _ = mamba2_ssd(x, log_a, Bm, Cm, chunk=64, interpret=True)
+    out_c32, _ = mamba2_ssd(x, log_a, Bm, Cm, chunk=32, interpret=True)
+    np.testing.assert_allclose(out_c64, out_c32, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: offsets kernel == host encoder over random size distributions
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=500))
+@settings(max_examples=20, deadline=None)
+def test_offsets_scan_property(sizes):
+    lengths = jnp.asarray(sizes, dtype=jnp.int32)
+    out = offsets_scan(lengths, block=64, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out, np.int64), E.sizes_to_offsets(np.asarray(sizes))
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked (online-softmax) attention — the §Perf pure-JAX flash variant
+
+
+@pytest.mark.parametrize("b,h,g,sq,sk,d,window", [
+    (1, 4, 2, 128, 128, 32, None),
+    (2, 2, 1, 64, 192, 16, None),
+    (1, 2, 2, 100, 100, 32, 48),
+    (1, 8, 8, 256, 256, 64, None),
+])
+def test_flash_chunked_matches_ref(b, h, g, sq, sk, d, window):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, sq, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, g, sk, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, g, sk, d)), dtype=jnp.float32)
+    a = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    c = ref.flash_attention_chunked(q, k, v, causal=True, window=window,
+                                    block=32)
+    np.testing.assert_allclose(a, c, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_chunked_never_materializes_full_scores():
+    """Structural check: peak temp of chunked << ref for long sequences."""
+    b, h, s, d, blk = 1, 2, 2048, 32, 256
+    q = jnp.zeros((b, h, s, d), jnp.float32)
+    k = jnp.zeros((b, h, s, d), jnp.float32)
+    v = jnp.zeros((b, h, s, d), jnp.float32)
+    cref = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v)).lower(
+        q, k, v).compile()
+    cchk = jax.jit(lambda q, k, v: ref.flash_attention_chunked(
+        q, k, v, block=blk)).lower(q, k, v).compile()
+    t_ref = cref.memory_analysis().temp_size_in_bytes
+    t_chk = cchk.memory_analysis().temp_size_in_bytes
+    assert t_chk < t_ref / 2, (t_chk, t_ref)
+
+
+def test_flash_chunked_mla_dims():
+    """v head-dim may differ from q/k head-dim (MLA): d_v != d_qk."""
+    b, h, s, dqk, dv = 1, 4, 96, 24, 16
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, dqk)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, dqk)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, dv)), dtype=jnp.float32)
+    a = ref.flash_attention_ref(q, k, v, causal=True)
+    c = ref.flash_attention_chunked(q, k, v, causal=True, block=32)
+    assert c.shape == (b, h, s, dv)
+    np.testing.assert_allclose(a, c, atol=3e-5, rtol=3e-5)

@@ -1,0 +1,93 @@
+"""Merging baselines: hadd analog and TBufferMerger analog (paper §2, §6.2)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BufferMerger, Collection, ColumnBatch, Leaf, RNTJReader, Schema,
+    SequentialWriter, WriteOptions, merge_files,
+)
+
+
+def schema():
+    return Schema([Leaf("id", "int64"), Collection("vals", Leaf("_0", "float32"))])
+
+
+def write_one(path, seed, n=300):
+    s = schema()
+    rng = np.random.default_rng(seed)
+    sizes = rng.poisson(5, n).astype(np.int64)
+    vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
+    batch = ColumnBatch.from_arrays(
+        s, n, {"id": np.arange(seed * 10_000, seed * 10_000 + n),
+               "vals": sizes, "vals._0": vals})
+    with SequentialWriter(s, path, WriteOptions(cluster_bytes=4096)) as w:
+        w.fill_batch(batch)
+    return batch
+
+
+def test_merge_files_preserves_everything(tmp_path):
+    paths = [str(tmp_path / f"in{i}.rntj") for i in range(3)]
+    batches = [write_one(p, i) for i, p in enumerate(paths)]
+    out = str(tmp_path / "merged.rntj")
+    merge_files(paths, out)
+    r = RNTJReader(out)
+    assert r.n_entries == 900
+    ids = np.sort(r.read_column("id"))
+    expect = np.sort(np.concatenate([b.data[0] for b in batches]))
+    np.testing.assert_array_equal(ids, expect)
+    vals = r.read_column("vals._0")
+    assert len(vals) == sum(int(b.data[1].sum()) for b in batches)
+
+
+def test_merge_rejects_schema_mismatch(tmp_path):
+    p1 = str(tmp_path / "a.rntj")
+    write_one(p1, 0)
+    s2 = Schema([Leaf("other", "int32")])
+    p2 = str(tmp_path / "b.rntj")
+    with SequentialWriter(s2, p2) as w:
+        w.fill({"other": 1})
+    with pytest.raises(ValueError):
+        merge_files([p1, p2], str(tmp_path / "out.rntj"))
+
+
+def test_merge_is_byte_verbatim(tmp_path):
+    """Relocatability means merged clusters keep identical compressed bytes."""
+    p = str(tmp_path / "in.rntj")
+    write_one(p, 1)
+    out = str(tmp_path / "out.rntj")
+    merge_files([p], out)
+    rin, rout = RNTJReader(p), RNTJReader(out)
+    for cin, cout in zip(rin.clusters, rout.clusters):
+        bin_ = rin.sink.pread(cin.byte_offset, cin.byte_size)
+        bout = rout.sink.pread(cout.byte_offset, cout.byte_size)
+        assert bin_ == bout
+
+
+def test_buffer_merger_threads(tmp_path):
+    s = schema()
+    out = str(tmp_path / "bm.rntj")
+    bm = BufferMerger(s, out, WriteOptions(cluster_bytes=2048))
+    N, T = 150, 6
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        f = bm.get_file()
+        sizes = rng.poisson(5, N).astype(np.int64)
+        vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
+        batch = ColumnBatch.from_arrays(
+            s, N, {"id": np.arange(tid * 1000, tid * 1000 + N),
+                   "vals": sizes, "vals._0": vals})
+        f.fill_batch(batch)
+        f.commit()
+        f.close()
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(T)]
+    for t in ts: t.start()
+    for t in ts: t.join()
+    bm.close()
+    r = RNTJReader(out)
+    assert r.n_entries == N * T
+    ids = np.sort(r.read_column("id"))
+    expect = np.sort(np.concatenate([np.arange(t * 1000, t * 1000 + N) for t in range(T)]))
+    np.testing.assert_array_equal(ids, expect)

@@ -1,0 +1,73 @@
+"""Data pipeline: parallel ingest -> single file -> packing loader."""
+
+import numpy as np
+import pytest
+
+from repro.core import RNTJReader
+from repro.pipeline import PackedLoader, ingest_corpus, synth_corpus
+
+
+def test_ingest_conserves_all_docs(tmp_path):
+    p = str(tmp_path / "d.rntj")
+    stats = ingest_corpus(synth_corpus(300, seed=1, mean_len=64), p,
+                          n_workers=5, batch_docs=17)
+    assert stats["entries"] == 300
+    r = RNTJReader(p)
+    ids = np.sort(r.read_column("doc_id"))
+    np.testing.assert_array_equal(ids, np.arange(300))
+    # content spot check against the generator
+    toks = r.read_column("tokens._0")
+    total = sum(len(t) for _, t in synth_corpus(300, seed=1, mean_len=64))
+    assert len(toks) == total
+
+
+def test_ingest_matches_sequential_content(tmp_path):
+    """Parallel ingest == sequential ingest, up to entry reordering."""
+    p1, p2 = str(tmp_path / "par.rntj"), str(tmp_path / "seq.rntj")
+    ingest_corpus(synth_corpus(100, seed=2), p1, n_workers=6, batch_docs=7)
+    ingest_corpus(synth_corpus(100, seed=2), p2, n_workers=1, batch_docs=7)
+    def doc_map(path):
+        r = RNTJReader(path)
+        out = {}
+        for e in r.iter_entries():
+            out[e["doc_id"]] = tuple(e["tokens"])
+        return out
+    assert doc_map(p1) == doc_map(p2)
+
+
+def test_loader_packing_shapes_and_labels(tmp_path):
+    p = str(tmp_path / "d.rntj")
+    ingest_corpus(synth_corpus(200, seed=3, mean_len=50), p, n_workers=2)
+    ld = PackedLoader(p, batch=8, seq_len=32)
+    b = next(ld.batches())
+    assert b["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_loader_deterministic_and_resumable(tmp_path):
+    p = str(tmp_path / "d.rntj")
+    ingest_corpus(synth_corpus(150, seed=4, mean_len=40), p, n_workers=3)
+    ld = PackedLoader(p, batch=4, seq_len=48)
+    it = ld.batches()
+    seq = [next(it) for _ in range(5)]
+    state = ld.state()
+    nxt = next(it)
+    # fresh loader from saved state reproduces the exact next batch
+    ld2 = PackedLoader(p, batch=4, seq_len=48, state=state)
+    nxt2 = next(ld2.batches())
+    np.testing.assert_array_equal(nxt["tokens"], nxt2["tokens"])
+    # and a fresh run reproduces the whole prefix (determinism)
+    ld3 = PackedLoader(p, batch=4, seq_len=48)
+    it3 = ld3.batches()
+    for b in seq:
+        np.testing.assert_array_equal(b["tokens"], next(it3)["tokens"])
+
+
+def test_loader_epoch_wrap(tmp_path):
+    p = str(tmp_path / "tiny.rntj")
+    ingest_corpus(synth_corpus(5, seed=5, mean_len=20), p, n_workers=1)
+    ld = PackedLoader(p, batch=2, seq_len=64)
+    it = ld.batches()
+    for _ in range(10):  # far more tokens than one epoch holds
+        b = next(it)
+        assert b["tokens"].shape == (2, 64)

@@ -1,0 +1,117 @@
+"""Schema decomposition and entry (de)composition tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Collection, ColumnBatch, Leaf, Record, Schema,
+    KIND_LEAF, KIND_OFFSET, decompose_entry, recompose_entries,
+)
+from repro.core.encoding import sizes_to_offsets
+
+
+def paper_schema():
+    return Schema([
+        Leaf("fId", "int32"),
+        Collection("fTracks", Record("_0", [
+            Leaf("fEnergy", "float32"),
+            Collection("fIds", Leaf("_0", "int32")),
+        ])),
+    ])
+
+
+def test_paper_table1_columns():
+    s = paper_schema()
+    paths = [c.path for c in s.columns]
+    assert paths == ["fId", "fTracks", "fTracks._0.fEnergy",
+                     "fTracks._0.fIds", "fTracks._0.fIds._0"]
+    kinds = [c.kind for c in s.columns]
+    assert kinds == [KIND_LEAF, KIND_OFFSET, KIND_LEAF, KIND_OFFSET, KIND_LEAF]
+    assert s.parent == [-1, -1, 1, 1, 3]
+
+
+def test_schema_json_roundtrip():
+    s = paper_schema()
+    s2 = Schema.from_json(s.to_json())
+    assert s == s2
+    assert [c.to_dict() for c in s.columns] == [c.to_dict() for c in s2.columns]
+
+
+def test_projection():
+    s = paper_schema()
+    p = s.project(["fId"])
+    assert p.n_columns == 1
+    with pytest.raises(KeyError):
+        s.project(["nope"])
+
+
+def test_decompose_paper_table1():
+    """Reproduce paper Table 1 exactly."""
+    s = paper_schema()
+    entries = [
+        {"fId": 6873, "fTracks": [
+            {"fEnergy": 25.4, "fIds": [42, 27]},
+            {"fEnergy": 32.8, "fIds": [16]},
+        ]},
+        {"fId": 6874, "fTracks": [
+            {"fEnergy": 14.7, "fIds": [21, 8]},
+        ]},
+    ]
+    batch = ColumnBatch.from_entries(s, entries)
+    np.testing.assert_array_equal(batch.data[0], [6873, 6874])
+    np.testing.assert_array_equal(batch.data[1], [2, 1])          # sizes
+    np.testing.assert_allclose(batch.data[2], [25.4, 32.8, 14.7], rtol=1e-6)
+    np.testing.assert_array_equal(batch.data[3], [2, 1, 2])       # sizes
+    np.testing.assert_array_equal(batch.data[4], [42, 27, 16, 21, 8])
+    # on-disk (cluster-relative) offsets per Table 1
+    np.testing.assert_array_equal(sizes_to_offsets(batch.data[1]), [2, 3])
+    np.testing.assert_array_equal(sizes_to_offsets(batch.data[3]), [2, 3, 5])
+
+
+# hypothesis: random nested entries survive decompose -> recompose
+
+@st.composite
+def entry_strategy(draw):
+    return {
+        "fId": draw(st.integers(-(2**31), 2**31 - 1)),
+        "fTracks": [
+            {
+                "fEnergy": draw(st.floats(0, 100, width=32)),
+                "fIds": draw(st.lists(st.integers(-(2**31), 2**31 - 1), max_size=5)),
+            }
+            for _ in range(draw(st.integers(0, 4)))
+        ],
+    }
+
+
+@given(st.lists(entry_strategy(), max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_decompose_recompose_roundtrip(entries):
+    s = paper_schema()
+    batch = ColumnBatch.from_entries(s, entries)
+    arrays = []
+    for col in s.columns:
+        a = batch.data[col.index]
+        arrays.append(sizes_to_offsets(a) if col.kind == KIND_OFFSET else a)
+    back = recompose_entries(s, arrays, len(entries))
+    assert len(back) == len(entries)
+    for g, e in zip(back, entries):
+        assert g["fId"] == e["fId"]
+        assert len(g["fTracks"]) == len(e["fTracks"])
+        for gt, et in zip(g["fTracks"], e["fTracks"]):
+            assert gt["fIds"] == et["fIds"]
+            assert gt["fEnergy"] == pytest.approx(et["fEnergy"], rel=1e-6)
+
+
+def test_batch_validation_catches_mismatch():
+    s = Schema([Collection("v", Leaf("_0", "float32"))])
+    with pytest.raises(ValueError):
+        ColumnBatch.from_arrays(
+            s, 2, {"v": np.array([2, 2]), "v._0": np.zeros(3, np.float32)}
+        )
+
+
+def test_duplicate_field_names_rejected():
+    with pytest.raises(ValueError):
+        Schema([Leaf("x", "int32"), Leaf("x", "int64")])
