@@ -1,0 +1,220 @@
+"""The pre-ISSUE-1 write hot path, vendored verbatim for benchmarking.
+
+This module preserves the seed's fill→seal→commit implementation (commit
+e3e94c7) so ``bench_writer.py`` can measure the rebuilt engine against the
+*actual* pre-PR code path rather than a reconstruction:
+
+* per-column Python **lists of chunk arrays**, ``np.concatenate`` at seal,
+* per-page ``precondition`` returning fresh ``bytes``
+  (``tobytes``/``planes.T.tobytes()``/3-temporary delta-zigzag-split),
+* strictly serial page compression inside ``seal()``,
+* ``b"".join`` blob assembly,
+* the same commit critical section (reserve + metadata + pwrite).
+
+Do not optimize this file — it is a measurement baseline, not product code.
+"""
+
+from __future__ import annotations
+
+import time
+import zlib
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.cluster import SealedCluster
+from repro.core.container import Sink
+from repro.core.encoding import dzs_encode, split_encode
+from repro.core.metadata import ClusterMeta
+from repro.core.pages import PageDesc, elements_per_page
+from repro.core.schema import (
+    ENC_DELTA_ZIGZAG_SPLIT, ENC_NONE, ENC_SPLIT, KIND_OFFSET, OFFSET_DTYPE,
+    ColumnBatch, ColumnSpec, Schema,
+)
+from repro.core.stats import CountingLock, WriterStats
+
+
+# -- seed encoding.precondition ---------------------------------------------
+
+def _seed_precondition(arr: np.ndarray, encoding: str) -> bytes:
+    if encoding == ENC_NONE:
+        return np.ascontiguousarray(arr).tobytes()
+    if encoding == ENC_SPLIT:
+        return split_encode(arr)
+    if encoding == ENC_DELTA_ZIGZAG_SPLIT:
+        return dzs_encode(arr)
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+# -- seed compression.compress (frozen: one-shot zlib.compress) --------------
+
+def _seed_compress(data: bytes, codec: int, level: int) -> bytes:
+    if codec == comp.CODEC_NONE:
+        return data
+    if level < 0:
+        level = comp.DEFAULT_LEVEL[codec]
+    if codec == comp.CODEC_ZLIB:
+        return zlib.compress(data, level)
+    return comp.compress(data, codec, level)
+
+
+# -- seed pages.build_page ---------------------------------------------------
+
+def _seed_build_page(col: ColumnSpec, elements: np.ndarray, codec: int,
+                     level: int = -1, checksum: bool = True):
+    raw = _seed_precondition(elements, col.encoding)
+    payload = _seed_compress(raw, codec, level)
+    used_codec = codec
+    if len(payload) >= len(raw):
+        payload, used_codec = raw, comp.CODEC_NONE
+    crc = zlib.crc32(payload) if checksum else 0
+    desc = PageDesc(
+        column=col.index,
+        n_elements=int(len(elements)),
+        offset=-1,
+        size=len(payload),
+        uncompressed_size=len(raw),
+        checksum=crc,
+        codec=used_codec,
+    )
+    return payload, desc
+
+
+# -- seed cluster.ClusterBuilder ---------------------------------------------
+
+class SeedClusterBuilder:
+    def __init__(self, schema: Schema, page_size: int, codec: int,
+                 level: int = -1, checksum: bool = True):
+        self.schema = schema
+        self.page_size = page_size
+        self.codec = codec
+        self.level = level
+        self.checksum = checksum
+        self._chunks: List[List[np.ndarray]] = [[] for _ in schema.columns]
+        self._acc_offset = [0] * schema.n_columns
+        self._n_elements = [0] * schema.n_columns
+        self.n_entries = 0
+        self.uncompressed_bytes = 0
+        self._page_elems = [
+            elements_per_page(c, page_size) for c in schema.columns
+        ]
+
+    def fill_batch(self, batch: ColumnBatch) -> None:
+        arrays = [batch.data[c.index] for c in self.schema.columns]
+        self._append_arrays(arrays, batch.n_entries)
+
+    def _append_arrays(self, arrays: Sequence[np.ndarray], n_entries: int) -> None:
+        for col in self.schema.columns:
+            a = arrays[col.index]
+            if col.kind == KIND_OFFSET:
+                offs = np.cumsum(a.astype(np.int64, copy=False), dtype=np.int64) \
+                    + self._acc_offset[col.index]
+                if len(offs):
+                    self._acc_offset[col.index] = int(offs[-1])
+                a = offs
+            if len(a):
+                self._chunks[col.index].append(a)
+                self._n_elements[col.index] += len(a)
+                self.uncompressed_bytes += a.nbytes
+        self.n_entries += n_entries
+
+    @property
+    def is_empty(self) -> bool:
+        return self.n_entries == 0
+
+    def _column_elements(self, idx: int) -> np.ndarray:
+        chunks = self._chunks[idx]
+        if not chunks:
+            col = self.schema.columns[idx]
+            dt = OFFSET_DTYPE if col.kind == KIND_OFFSET else col.dtype
+            return np.empty(0, dtype=dt)
+        if len(chunks) == 1:
+            return chunks[0]
+        return np.concatenate(chunks)
+
+    def seal(self) -> SealedCluster:
+        t0 = time.perf_counter_ns()
+        parts: List[bytes] = []
+        descs: List[PageDesc] = []
+        pos = 0
+        for col in self.schema.columns:
+            elems = self._column_elements(col.index)
+            per = self._page_elems[col.index]
+            for start in range(0, len(elems), per):
+                payload, desc = _seed_build_page(
+                    col, elems[start : start + per], self.codec, self.level,
+                    self.checksum,
+                )
+                desc.offset = pos
+                pos += desc.size
+                parts.append(payload)
+                descs.append(desc)
+        sealed = SealedCluster(
+            blob=b"".join(parts),
+            n_entries=self.n_entries,
+            n_elements=list(self._n_elements),
+            pages=descs,
+            uncompressed_bytes=self.uncompressed_bytes,
+            seal_ns=time.perf_counter_ns() - t0,
+        )
+        self._chunks = [[] for _ in self.schema.columns]
+        self._acc_offset = [0] * self.schema.n_columns
+        self._n_elements = [0] * self.schema.n_columns
+        self.n_entries = 0
+        self.uncompressed_bytes = 0
+        return sealed
+
+
+# -- seed writer commit loop (metadata kept in memory; no finalization —
+#    the benchmark measures fill+seal+commit, not footer writing) ------------
+
+class SeedSequentialWriter:
+    def __init__(self, schema: Schema, sink: Sink, *, page_size: int,
+                 codec: int, level: int, cluster_bytes: int,
+                 checksum: bool = True):
+        self.schema = schema
+        self.sink = sink
+        self.cluster_bytes = cluster_bytes
+        self.lock = CountingLock()
+        self.stats = WriterStats()
+        self._clusters: List[ClusterMeta] = []
+        self._n_entries = 0
+        self._builder = SeedClusterBuilder(schema, page_size, codec, level,
+                                           checksum)
+
+    def fill_batch(self, batch: ColumnBatch) -> None:
+        self._builder.fill_batch(batch)
+        if self._builder.uncompressed_bytes >= self.cluster_bytes:
+            self.flush_cluster()
+
+    def flush_cluster(self) -> None:
+        if self._builder.is_empty:
+            return
+        sealed = self._builder.seal()
+        t0 = time.perf_counter_ns()
+        with self.lock:
+            off = self.sink.reserve(sealed.size)
+            first_entry = self._n_entries
+            self._n_entries += sealed.n_entries
+            self._clusters.append(
+                ClusterMeta(
+                    first_entry=first_entry,
+                    n_entries=sealed.n_entries,
+                    n_elements=sealed.n_elements,
+                    pages=sealed.rebase(off),
+                    byte_offset=off,
+                    byte_size=sealed.size,
+                )
+            )
+            self.sink.pwrite(off, sealed.blob)
+        self.stats.commit_ns += time.perf_counter_ns() - t0
+        self.stats.seal_ns += sealed.seal_ns
+        self.stats.clusters += 1
+        self.stats.pages += len(sealed.pages)
+        self.stats.entries += sealed.n_entries
+        self.stats.uncompressed_bytes += sealed.uncompressed_bytes
+        self.stats.compressed_bytes += sealed.size
+
+    def close(self) -> None:
+        self.flush_cluster()

@@ -62,7 +62,9 @@ def measured_run(n_threads: int, entries_per_thread: int,
         w.close()
     wall = time.perf_counter() - t0
     agg = {"uncompressed_bytes": 0, "compressed_bytes": 0,
-           "lock_acquisitions": 0, "lock_contended": 0, "lock_held_ms": 0.0}
+           "lock_acquisitions": 0, "lock_contended": 0, "lock_held_ms": 0.0,
+           "fill_ms": 0.0, "seal_ms": 0.0, "compress_ms": 0.0,
+           "commit_ms": 0.0, "io_ms": 0.0}
     for w in writers:
         d = w.stats.as_dict()
         for k in agg:
@@ -91,12 +93,25 @@ def run(entries: int, full_sim: bool = True) -> dict:
                 "lock_acquisitions": agg["lock_acquisitions"],
                 "lock_contended": agg["lock_contended"],
                 "lock_held_frac": agg["lock_held_ms"] / 1e3 / wall,
+                # per-phase breakdown (summed over producers): where the
+                # write path actually spends its time
+                "phases_ms": {
+                    "fill": round(agg["fill_ms"], 1),
+                    "seal": round(agg["seal_ms"], 1),
+                    "compress": round(agg["compress_ms"], 1),
+                    "commit": round(agg["commit_ms"], 1),
+                    "io": round(agg["io_ms"], 1),
+                },
             }
             out["measured"].append(rec)
+            ph = rec["phases_ms"]
             print(f"  {name:14s} t={n}  {rec['mb_s_uncompressed']:7.1f} MB/s "
                   f"locks={rec['lock_acquisitions']:6d} "
                   f"contended={rec['lock_contended']:5d} "
-                  f"held={rec['lock_held_frac']:.2%}")
+                  f"held={rec['lock_held_frac']:.2%}  "
+                  f"phases[fill={ph['fill']:.0f} seal={ph['seal']:.0f} "
+                  f"compress={ph['compress']:.0f} commit={ph['commit']:.0f} "
+                  f"io={ph['io']:.0f} ms]")
 
     # the futex-diagnosis reproduction (paper: ~300 vs >27,000 at 64t)
     buf = [r for r in out["measured"] if r["config"] == "buffered"][-1]

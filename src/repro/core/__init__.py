@@ -38,7 +38,8 @@ from .container import (
     open_sink,
 )
 from .stats import WriterStats, CountingLock
-from . import compression, encoding, metadata, pages, cluster
+from .colbuf import ColumnBuffer
+from . import compression, encoding, metadata, pages, cluster, colbuf
 
 __all__ = [
     "Schema", "Field", "Leaf", "Collection", "Record", "ColumnSpec",
@@ -47,5 +48,6 @@ __all__ = [
     "FillContext", "write_entries", "RNTJReader", "BufferMerger",
     "merge_files", "Sink", "FileSink", "DevNullSink", "MemorySink",
     "ThrottledSink", "open_sink", "WriterStats", "CountingLock",
-    "compression", "encoding", "metadata", "pages", "cluster",
+    "ColumnBuffer",
+    "compression", "encoding", "metadata", "pages", "cluster", "colbuf",
 ]

@@ -5,18 +5,29 @@ columns are accumulated as *sizes* and integrated to **cluster-relative**
 offsets at seal time, which makes the sealed byte blob relocatable: it can
 be committed at any file offset without content changes — the property
 that lets serialization and compression run with no synchronization.
+
+Hot-path layout: each column accumulates into a contiguous, amortized-
+doubling :class:`~repro.core.colbuf.ColumnBuffer` — appends are vectorized
+copies, offset integration happens in place on the reserved tail, and page
+extraction at seal time is a zero-copy view slice (no ``np.concatenate``).
+``seal()`` optionally distributes page compression over a writer-owned
+thread pool; zlib/lzma/bz2 release the GIL, so pages of one cluster
+compress truly in parallel.  This is the ONE compression code path shared
+by the sequential writer (IMT mode) and the parallel writer.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+import zlib
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from . import compression as comp
-from .encoding import sizes_to_offsets
+from .colbuf import ColumnBuffer
+from .encoding import EncodeScratch, integrate_sizes, precondition_column_pages
 from .pages import PageDesc, build_page, elements_per_page
 from .schema import KIND_OFFSET, OFFSET_DTYPE, ColumnBatch, Schema, decompose_entry
 
@@ -25,15 +36,17 @@ from .schema import KIND_OFFSET, OFFSET_DTYPE, ColumnBatch, Schema, decompose_en
 class SealedCluster:
     """A serialized+compressed cluster, ready to commit anywhere.
 
-    ``pages[i]`` descriptors carry cluster-relative offsets into ``blob``.
+    ``pages[i]`` descriptors carry cluster-relative offsets into ``blob``
+    (a bytes-like single allocation).
     """
 
-    blob: bytes
+    blob: bytes                    # bytes-like (bytearray from seal())
     n_entries: int
     n_elements: List[int]          # per column
     pages: List[PageDesc]          # cluster-relative offsets
     uncompressed_bytes: int
-    seal_ns: int = 0
+    seal_ns: int = 0               # wall time of the whole seal
+    compress_ns: int = 0           # summed per-page build time (CPU view)
 
     @property
     def size(self) -> int:
@@ -43,12 +56,24 @@ class SealedCluster:
         return [p.rebase(base) for p in self.pages]
 
 
+def _build_page_timed(job, codec: int, level: int, checksum: bool):
+    col, elems = job
+    t0 = time.perf_counter_ns()
+    payload, desc = build_page(col, elems, codec, level, checksum)
+    return payload, desc, time.perf_counter_ns() - t0
+
+
 class ClusterBuilder:
     """Accumulates decomposed entries and seals them into a cluster.
 
     Also supports *page draining* for the unbuffered (page-granular) writer
     mode: whenever a column holds a full page of elements it can be built
     and handed out immediately.
+
+    Builders are reusable: after :meth:`seal` / :meth:`finish_unbuffered`
+    the column buffers keep their storage, so refilling performs no
+    allocations in steady state (this is what double-buffered pipelined
+    sealing relies on).
     """
 
     def __init__(self, schema: Schema, page_size: int, codec: int, level: int = -1,
@@ -58,17 +83,25 @@ class ClusterBuilder:
         self.codec = codec
         self.level = level
         self.checksum = checksum
-        self._chunks: List[List[np.ndarray]] = [[] for _ in schema.columns]
-        # cluster-relative running end-offset per offset column
-        self._acc_offset = [0] * schema.n_columns
-        self._n_elements = [0] * schema.n_columns
-        self.n_entries = 0
-        self.uncompressed_bytes = 0
         self._page_elems = [
             elements_per_page(c, page_size) for c in schema.columns
         ]
+        self._cols = [
+            ColumnBuffer(
+                OFFSET_DTYPE if c.kind == KIND_OFFSET else c.dtype,
+                capacity=self._page_elems[c.index],
+            )
+            for c in schema.columns
+        ]
+        # cluster-relative running end-offset per offset column
+        self._acc_offset = [0] * schema.n_columns
+        self.n_entries = 0
+        self.uncompressed_bytes = 0
         # unbuffered mode: elements already drained into standalone pages
         self._drained: List[int] = [0] * schema.n_columns
+        # seal() runs on one thread at a time; the scratch amortizes the
+        # column-wide preconditioning temporaries across clusters
+        self._scratch = EncodeScratch()
 
     # -- filling -----------------------------------------------------------
 
@@ -85,63 +118,158 @@ class ClusterBuilder:
     def _append_arrays(self, arrays: Sequence[np.ndarray], n_entries: int) -> None:
         for col in self.schema.columns:
             a = arrays[col.index]
+            n = len(a)
+            if not n:
+                continue
+            buf = self._cols[col.index]
             if col.kind == KIND_OFFSET:
-                # sizes -> cluster-relative end offsets, continuing the
-                # running sum of this cluster
-                offs = sizes_to_offsets(a) + self._acc_offset[col.index]
-                if len(offs):
-                    self._acc_offset[col.index] = int(offs[-1])
-                a = offs
-            if len(a):
-                self._chunks[col.index].append(a)
-                self._n_elements[col.index] += len(a)
-                self.uncompressed_bytes += a.nbytes
+                # sizes -> cluster-relative end offsets, integrated in
+                # place on the reserved buffer tail (no temporary)
+                dst = buf.reserve(n)
+                integrate_sizes(a, base=self._acc_offset[col.index], out=dst)
+                self._acc_offset[col.index] = int(dst[-1])
+            else:
+                buf.extend(a)
+            self.uncompressed_bytes += n * buf.dtype.itemsize
         self.n_entries += n_entries
 
     @property
     def is_empty(self) -> bool:
         return self.n_entries == 0
 
+    def n_elements(self, idx: int) -> int:
+        return len(self._cols[idx])
+
     # -- sealing (buffered mode) --------------------------------------------
 
     def _column_elements(self, idx: int) -> np.ndarray:
-        chunks = self._chunks[idx]
-        if not chunks:
-            col = self.schema.columns[idx]
-            dt = OFFSET_DTYPE if col.kind == KIND_OFFSET else col.dtype
-            return np.empty(0, dtype=dt)
-        if len(chunks) == 1:
-            return chunks[0]
-        return np.concatenate(chunks)
+        """Zero-copy view of all elements accumulated for column ``idx``."""
+        return self._cols[idx].view()
 
-    def seal(self) -> SealedCluster:
-        """Serialize + compress all pages.  No lock required (paper §4.1)."""
-        t0 = time.perf_counter_ns()
-        parts: List[bytes] = []
-        descs: List[PageDesc] = []
-        pos = 0
+    def _page_jobs(self) -> List[Tuple]:
+        jobs: List[Tuple] = []
         for col in self.schema.columns:
-            elems = self._column_elements(col.index)
+            elems = self._cols[col.index].view()
             per = self._page_elems[col.index]
             for start in range(0, len(elems), per):
-                payload, desc = build_page(
-                    col, elems[start : start + per], self.codec, self.level,
-                    self.checksum,
+                jobs.append((col, elems[start : start + per]))
+        return jobs
+
+    def seal(self, pool=None) -> SealedCluster:
+        """Serialize + compress all pages.  No lock required (paper §4.1).
+
+        The single compression code path behind both ROOT-style IMT in the
+        sequential writer and the shared writer-owned pool of the parallel
+        writer.  With ``pool`` (any Executor with ``map``) page builds are
+        distributed over the pool's threads; serially, whole columns are
+        preconditioned in O(1) vectorized calls and, for the ``none``
+        codec, written straight into the blob.
+        """
+        t0 = time.perf_counter_ns()
+        if pool is None:
+            blob, descs, compress_ns = self._seal_serial()
+        else:
+            jobs = self._page_jobs()
+            results = list(
+                pool.map(
+                    lambda j: _build_page_timed(
+                        j, self.codec, self.level, self.checksum
+                    ),
+                    jobs,
                 )
+            )
+            # single-allocation blob assembly
+            total = sum(r[1].size for r in results)
+            blob = bytearray(total)
+            mv = memoryview(blob)
+            descs = []
+            pos = 0
+            compress_ns = 0
+            for payload, desc, build_ns in results:
                 desc.offset = pos
+                mv[pos : pos + desc.size] = payload
                 pos += desc.size
-                parts.append(payload)
                 descs.append(desc)
+                compress_ns += build_ns
         sealed = SealedCluster(
-            blob=b"".join(parts),
+            blob=blob,
             n_entries=self.n_entries,
-            n_elements=list(self._n_elements),
+            n_elements=[len(c) for c in self._cols],
             pages=descs,
             uncompressed_bytes=self.uncompressed_bytes,
             seal_ns=time.perf_counter_ns() - t0,
+            compress_ns=compress_ns,
         )
         self._reset()
         return sealed
+
+    def _seal_serial(self):
+        """Column-batched serial seal: one precondition pass per column.
+
+        Bit-identical to the per-page path (``build_page``), minus its
+        per-page Python dispatch, temporaries and copies.
+        """
+        store = self.codec == comp.CODEC_NONE
+        if store:
+            # page sizes are known up front: build the blob in place
+            blob = bytearray(
+                sum(len(c) * c.dtype.itemsize for c in self._cols)
+            )
+            target = np.frombuffer(memoryview(blob), dtype=np.uint8)
+        else:
+            blob = None
+            target = None
+            parts: List[bytes] = []
+        descs: List[PageDesc] = []
+        pos = 0
+        compress_ns = 0
+        for col in self.schema.columns:
+            elems = self._cols[col.index].view()
+            n = len(elems)
+            if n == 0:
+                continue
+            per = self._page_elems[col.index]
+            itemb = elems.dtype.itemsize
+            raw_all = precondition_column_pages(
+                elems, col.encoding, per, self._scratch
+            )
+            for start in range(0, n, per):
+                count = min(per, n - start)
+                raw = raw_all[start * itemb : (start + count) * itemb]
+                nbytes = count * itemb
+                if store:
+                    payload_len = nbytes
+                    target[pos : pos + nbytes] = raw
+                    crc_src = target[pos : pos + nbytes]
+                    used_codec = comp.CODEC_NONE
+                else:
+                    tb = time.perf_counter_ns()
+                    payload = comp.compress(raw, self.codec, self.level)
+                    compress_ns += time.perf_counter_ns() - tb
+                    used_codec = self.codec
+                    if len(payload) >= nbytes:
+                        payload, used_codec = bytes(raw), comp.CODEC_NONE
+                    payload_len = len(payload)
+                    parts.append(payload)
+                    crc_src = payload
+                descs.append(PageDesc(
+                    column=col.index,
+                    n_elements=count,
+                    offset=pos,
+                    size=payload_len,
+                    uncompressed_size=nbytes,
+                    checksum=zlib.crc32(crc_src) if self.checksum else 0,
+                    codec=used_codec,
+                ))
+                pos += payload_len
+        if not store:
+            blob = bytearray(pos)
+            mv = memoryview(blob)
+            at = 0
+            for payload in parts:
+                mv[at : at + len(payload)] = payload
+                at += len(payload)
+        return blob, descs, compress_ns
 
     # -- page draining (unbuffered mode) -------------------------------------
 
@@ -155,16 +283,14 @@ class ClusterBuilder:
         out: List[Tuple[bytes, PageDesc]] = []
         for col in self.schema.columns:
             per = self._page_elems[col.index]
-            pending = self._n_elements[col.index] - self._drained[col.index]
+            start = self._drained[col.index]
+            pending = len(self._cols[col.index]) - start
             if pending < per:
                 continue
-            elems = self._column_elements(col.index)
-            self._chunks[col.index] = [elems]  # canonicalize
-            start = self._drained[col.index]
             while pending >= per:
+                elems = self._cols[col.index].view(start, start + per)
                 payload, desc = build_page(
-                    col, elems[start : start + per], self.codec, self.level,
-                    self.checksum,
+                    col, elems, self.codec, self.level, self.checksum,
                 )
                 out.append((payload, desc))
                 start += per
@@ -176,13 +302,13 @@ class ClusterBuilder:
         """Build the final partial pages (cluster finalization)."""
         out: List[Tuple[bytes, PageDesc]] = []
         for col in self.schema.columns:
-            elems = self._column_elements(col.index)
             start = self._drained[col.index]
             per = self._page_elems[col.index]
-            while start < len(elems):
+            end = len(self._cols[col.index])
+            while start < end:
+                elems = self._cols[col.index].view(start, start + per)
                 payload, desc = build_page(
-                    col, elems[start : start + per], self.codec, self.level,
-                    self.checksum,
+                    col, elems, self.codec, self.level, self.checksum,
                 )
                 out.append((payload, desc))
                 start += desc.n_elements
@@ -191,14 +317,17 @@ class ClusterBuilder:
 
     def finish_unbuffered(self) -> Tuple[int, List[int], int]:
         """Return (n_entries, per-column n_elements, uncompressed) and reset."""
-        res = (self.n_entries, list(self._n_elements), self.uncompressed_bytes)
+        res = (self.n_entries, [len(c) for c in self._cols], self.uncompressed_bytes)
         self._reset()
         return res
 
     def _reset(self) -> None:
-        self._chunks = [[] for _ in self.schema.columns]
+        # keep the ColumnBuffer storage: steady-state refills are
+        # allocation-free (and pipelined sealing hands builders back
+        # for exactly this reuse)
+        for c in self._cols:
+            c.reset()
         self._acc_offset = [0] * self.schema.n_columns
-        self._n_elements = [0] * self.schema.n_columns
         self._drained = [0] * self.schema.n_columns
         self.n_entries = 0
         self.uncompressed_bytes = 0

@@ -204,6 +204,10 @@ class ThrottledSink(Sink):
             self._prealloc.append((offset, offset + size))
         self.inner.fallocate(offset, size)
 
+    def fsync(self) -> None:
+        super().fsync()
+        self.inner.fsync()
+
     def close(self) -> None:
         self.inner.close()
 

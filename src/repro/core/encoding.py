@@ -13,6 +13,10 @@ TPU-side ports and are property-tested to be bit-identical against these
 
 from __future__ import annotations
 
+import os
+import sys
+from typing import Optional
+
 import numpy as np
 
 from .schema import ENC_DELTA_ZIGZAG_SPLIT, ENC_NONE, ENC_SPLIT
@@ -85,17 +89,147 @@ def dzs_decode(buf: bytes, n: int, first_reference: int = 0) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# scratch-based preconditioning (the per-page hot path)
+
+
+class EncodeScratch:
+    """Reusable temporaries for :func:`precondition_buffer`.
+
+    One instance per thread (pages.py keeps them thread-local): a page
+    build reuses the same scratch arrays instead of allocating fresh
+    intermediates for the split transpose and the delta/zigzag stages.
+    """
+
+    def __init__(self) -> None:
+        self._bufs: dict = {}
+
+    def array(self, key: str, dtype, n: int) -> np.ndarray:
+        buf = self._bufs.get(key)
+        if buf is None or len(buf) < n:
+            buf = np.empty(max(n, 4096), dtype=dtype)
+            self._bufs[key] = buf
+        return buf[:n]
+
+
+def _split_into(a: np.ndarray, out_u8: np.ndarray) -> np.ndarray:
+    """Byte-plane split of contiguous ``a`` into preallocated ``out_u8``."""
+    if a.dtype.byteorder == ">":  # normalize to little-endian
+        a = a.astype(a.dtype.newbyteorder("<"))
+    nb = a.dtype.itemsize
+    n = len(a)
+    planes = a.view(np.uint8).reshape(n, nb)
+    out_u8[: n * nb].reshape(nb, n)[:] = planes.T
+    return out_u8[: n * nb]
+
+
+def precondition_buffer(
+    arr: np.ndarray, encoding: str, scratch: Optional[EncodeScratch] = None
+) -> np.ndarray:
+    """Precondition one page of elements with minimal allocation.
+
+    Returns a ``uint8`` array (``len == nbytes``) byte-identical to
+    :func:`precondition`.  With a scratch, split/dzs intermediates reuse
+    buffers and the ``none`` encoding is a zero-copy reinterpret view of
+    the input.  The result may alias ``arr`` or ``scratch``: it is valid
+    only until the next call with the same scratch, and callers storing it
+    must copy (``bytes(...)``) first.
+    """
+    a = np.ascontiguousarray(arr)
+    if encoding == ENC_NONE:
+        return a.view(np.uint8) if len(a) else np.empty(0, np.uint8)
+    if scratch is None:
+        scratch = EncodeScratch()
+    if encoding == ENC_SPLIT:
+        out = scratch.array("u8", np.uint8, a.nbytes)
+        return _split_into(a, out)
+    if encoding == ENC_DELTA_ZIGZAG_SPLIT:
+        x = a.astype(np.int64, copy=False)
+        n = len(x)
+        d = scratch.array("i64a", np.int64, n)
+        t = scratch.array("i64b", np.int64, n)
+        if n:
+            d[0] = x[0]
+            np.subtract(x[1:], x[:-1], out=d[1:])
+        # zigzag in place: (d << 1) ^ (d >> 63)
+        np.right_shift(d, 63, out=t)
+        np.left_shift(d, 1, out=d)
+        np.bitwise_xor(d, t, out=d)
+        out = scratch.array("u8", np.uint8, d.nbytes)
+        return _split_into(d.view(np.uint64), out)
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def _batched_split_into(a: np.ndarray, per: int, out_u8: np.ndarray) -> None:
+    """Page-wise byte-plane split of a whole column in O(1) numpy calls.
+
+    Writes, for each page of ``per`` elements, that page's plane-split
+    bytes contiguously into ``out_u8`` — bit-identical to running
+    :func:`split_encode` page by page, but the full pages go through one
+    batched strided copy instead of a Python loop.
+    """
+    if a.dtype.byteorder == ">":
+        a = a.astype(a.dtype.newbyteorder("<"))
+    nb = a.dtype.itemsize
+    n = len(a)
+    n_full = n // per
+    head = n_full * per
+    if n_full:
+        src = a[:head].view(np.uint8).reshape(n_full, per, nb)
+        np.copyto(
+            out_u8[: head * nb].reshape(n_full, nb, per), src.transpose(0, 2, 1)
+        )
+    if head < n:
+        _split_into(a[head:], out_u8[head * nb :])
+
+
+def precondition_column_pages(
+    arr: np.ndarray, encoding: str, per: int, scratch: Optional[EncodeScratch] = None
+) -> np.ndarray:
+    """Precondition ALL pages of a column at once (the serial-seal fast path).
+
+    Returns a ``uint8`` array holding each page's preconditioned bytes
+    back to back: page ``p`` of ``k`` elements occupies the byte range
+    ``[p*per*itemsize, p*per*itemsize + k*itemsize)``.  Bit-identical to
+    calling :func:`precondition_buffer` per page slice, but the per-page
+    Python loop, temporaries and dispatch collapse into a handful of
+    vectorized column-wide operations.  The result aliases ``scratch``
+    (or ``arr`` for the ``none`` encoding) under the usual rules.
+    """
+    a = np.ascontiguousarray(arr)
+    if encoding == ENC_NONE:
+        return a.view(np.uint8) if len(a) else np.empty(0, np.uint8)
+    if scratch is None:
+        scratch = EncodeScratch()
+    if encoding == ENC_SPLIT:
+        out = scratch.array("u8", np.uint8, a.nbytes)
+        _batched_split_into(a, per, out)
+        return out
+    if encoding == ENC_DELTA_ZIGZAG_SPLIT:
+        x = a.astype(np.int64, copy=False)
+        n = len(x)
+        d = scratch.array("i64a", np.int64, n)
+        t = scratch.array("i64b", np.int64, n)
+        if n:
+            d[0] = x[0]
+            np.subtract(x[1:], x[:-1], out=d[1:])
+            # per-page delta restarts at each page boundary
+            # (first_reference = 0), exactly like the per-page encoder
+            d[per::per] = x[per::per]
+        np.right_shift(d, 63, out=t)
+        np.left_shift(d, 1, out=d)
+        np.bitwise_xor(d, t, out=d)
+        out = scratch.array("u8", np.uint8, d.nbytes)
+        _batched_split_into(d.view(np.uint64), per, out)
+        return out
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+# ---------------------------------------------------------------------------
 # dispatch
 
 
 def precondition(arr: np.ndarray, encoding: str) -> bytes:
-    if encoding == ENC_NONE:
-        return np.ascontiguousarray(arr).tobytes()
-    if encoding == ENC_SPLIT:
-        return split_encode(arr)
-    if encoding == ENC_DELTA_ZIGZAG_SPLIT:
-        return dzs_encode(arr)
-    raise ValueError(f"unknown encoding {encoding!r}")
+    return bytes(precondition_buffer(arr, encoding))
 
 
 def unprecondition(buf: bytes, encoding: str, dtype: np.dtype, n: int) -> np.ndarray:
@@ -110,6 +244,75 @@ def unprecondition(buf: bytes, encoding: str, dtype: np.dtype, n: int) -> np.nda
     raise ValueError(f"unknown encoding {encoding!r}")
 
 
+# Pallas offsets_scan dispatch: REPRO_OFFSETS_BACKEND = auto | numpy | pallas.
+# "auto" only selects the kernel on an accelerator backend (tpu/gpu); the
+# CPU interpret path exists for correctness tests, not speed.
+_OFFSETS_BACKEND = os.environ.get("REPRO_OFFSETS_BACKEND", "auto").lower()
+_PALLAS_MIN_ELEMS = int(os.environ.get("REPRO_OFFSETS_PALLAS_MIN", "65536"))
+_pallas_scan = None  # resolved lazily; False once ruled out
+
+
+def _resolve_pallas_scan():
+    global _pallas_scan
+    if _pallas_scan is None:
+        # In auto mode, never pay the (multi-second, cold) jax import
+        # inside the producer's fill path: only consider the kernel when
+        # the application has already imported jax — in which case the
+        # backend check below is cheap.  Stay unresolved (don't cache the
+        # negative) so a later jax import can still enable the kernel.
+        if _OFFSETS_BACKEND != "pallas" and "jax" not in sys.modules:
+            return False
+        try:
+            import jax
+
+            from repro.kernels.offsets_scan import offsets_scan_host
+
+            if _OFFSETS_BACKEND != "pallas" and jax.default_backend() == "cpu":
+                _pallas_scan = False
+            else:
+                _pallas_scan = offsets_scan_host
+        except Exception:
+            _pallas_scan = False
+    return _pallas_scan
+
+
+def integrate_sizes(
+    sizes: np.ndarray, base: int = 0, out: Optional[np.ndarray] = None
+) -> np.ndarray:
+    """Collection sizes -> cluster-relative end offsets, starting at ``base``.
+
+    The write hot path: integrates in place into ``out`` when given (the
+    reserved tail of an offset :class:`~repro.core.colbuf.ColumnBuffer`).
+    Large columns dispatch to the Pallas ``offsets_scan`` kernel when an
+    accelerator backend is available (or ``REPRO_OFFSETS_BACKEND=pallas``
+    forces it); the numpy inclusive scan is the fallback and the reference.
+    """
+    n = len(sizes)
+    if out is None:
+        out = np.empty(n, dtype=np.int64)
+    use_pallas = _OFFSETS_BACKEND == "pallas" or (
+        _OFFSETS_BACKEND == "auto" and n >= _PALLAS_MIN_ELEMS
+    )
+    done = False
+    if use_pallas and n:
+        kernel = _resolve_pallas_scan()
+        # the kernel scans in int32: only dispatch when the total fits
+        if kernel and int(np.sum(sizes, dtype=np.int64)) < 2**31:
+            try:
+                out[:] = kernel(np.asarray(sizes))
+                done = True
+            except Exception:
+                globals()["_pallas_scan"] = False
+    if not done:
+        np.cumsum(
+            np.asarray(sizes).astype(np.int64, copy=False),
+            dtype=np.int64, out=out,
+        )
+    if base:
+        out += np.int64(base)
+    return out
+
+
 def sizes_to_offsets(sizes: np.ndarray) -> np.ndarray:
     """Collection sizes -> cluster-relative *end* offsets (inclusive scan).
 
@@ -118,7 +321,7 @@ def sizes_to_offsets(sizes: np.ndarray) -> np.ndarray:
     (or 0).  Being cluster-relative is what makes a sealed cluster
     relocatable (paper §5).
     """
-    return np.cumsum(sizes.astype(np.int64, copy=False), dtype=np.int64)
+    return integrate_sizes(np.asarray(sizes))
 
 
 def offsets_to_sizes(offsets: np.ndarray) -> np.ndarray:

@@ -8,6 +8,7 @@ RNTuple targets 64 KiB of uncompressed elements per page by default
 
 from __future__ import annotations
 
+import threading
 import zlib
 from dataclasses import dataclass
 from typing import List, Optional
@@ -15,10 +16,21 @@ from typing import List, Optional
 import numpy as np
 
 from . import compression as comp
-from .encoding import precondition, unprecondition
+from .encoding import EncodeScratch, precondition_buffer, unprecondition
 from .schema import ColumnSpec
 
 DEFAULT_PAGE_SIZE = 64 * 1024
+
+# Per-thread reusable preconditioning scratch: build_page runs concurrently
+# on compression-pool workers, each of which amortizes its own buffers.
+_TLS = threading.local()
+
+
+def _thread_scratch() -> EncodeScratch:
+    scratch = getattr(_TLS, "scratch", None)
+    if scratch is None:
+        scratch = _TLS.scratch = EncodeScratch()
+    return scratch
 
 
 @dataclass
@@ -61,21 +73,30 @@ def build_page(
     Runs with NO synchronization — this is the paper's §4.1 observation that
     serialization and compression parallelize perfectly once the unit of
     writing is relocatable.
+
+    ``elements`` may be a zero-copy view into a live ColumnBuffer; the
+    preconditioned bytes live in a per-thread scratch, so the returned
+    payload is always an independent ``bytes`` object.
     """
-    raw = precondition(elements, col.encoding)
-    # Like ROOT, fall back to storing uncompressed when compression does
-    # not shrink the page.
-    payload = comp.compress(raw, codec, level)
+    raw = precondition_buffer(elements, col.encoding, _thread_scratch())
+    uncompressed_size = len(raw)
     used_codec = codec
-    if len(payload) >= len(raw):
-        payload, used_codec = raw, comp.CODEC_NONE
+    if codec == comp.CODEC_NONE:
+        # materialize: raw aliases the scratch (or the caller's buffer)
+        payload = bytes(raw)
+    else:
+        # Like ROOT, fall back to storing uncompressed when compression
+        # does not shrink the page.
+        payload = comp.compress(raw, codec, level)
+        if len(payload) >= uncompressed_size:
+            payload, used_codec = bytes(raw), comp.CODEC_NONE
     crc = zlib.crc32(payload) if checksum else 0
     desc = PageDesc(
         column=col.index,
         n_elements=int(len(elements)),
         offset=-1,
         size=len(payload),
-        uncompressed_size=len(raw),
+        uncompressed_size=uncompressed_size,
         checksum=crc,
         codec=used_codec,
     )

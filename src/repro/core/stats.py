@@ -1,4 +1,4 @@
-"""Instrumentation: lock and I/O counters.
+"""Instrumentation: lock, I/O, and per-phase time counters.
 
 The paper diagnoses the buffered-vs-unbuffered scalability gap by counting
 futex system calls under strace (§6.1: ~300 vs >27,000 at 64 threads).  On
@@ -6,13 +6,22 @@ Linux a futex syscall only happens when a lock is *contended*, so we count
 both acquisitions and contended acquisitions, plus time held, and the sinks
 count write syscalls and bytes.  These measurements are hardware-independent
 and reproduce the paper's diagnosis exactly.
+
+:class:`WriterStats` additionally breaks the write path into phases —
+``fill`` (decompose + buffer append), ``seal`` (serialize, wall time),
+``compress`` (summed per-page build time, a CPU-time view that exceeds the
+seal wall time when a compression pool is active), ``commit`` (reserve +
+metadata + write path) and ``io`` (time inside ``pwrite``) — so benchmarks
+can attribute wins to the right layer.  All mutation goes through locked
+``add_*``/``merge_*`` methods: with pipelined sealing, commits run on
+background threads concurrently with producer fills.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 
 @dataclass
@@ -57,6 +66,11 @@ class CountingLock:
         with self._meta:
             self.stats.held_ns += held
 
+    def snapshot(self) -> LockStats:
+        """Consistent copy of the counters (safe to merge while live)."""
+        with self._meta:
+            return replace(self.stats)
+
     def __enter__(self) -> "CountingLock":
         self.acquire()
         return self
@@ -78,20 +92,85 @@ class IOStats:
         self.fallocate_calls += other.fallocate_calls
         self.fsync_calls += other.fsync_calls
 
+    def snapshot(self) -> "IOStats":
+        return replace(self)
+
 
 @dataclass
 class WriterStats:
-    """Aggregated per-writer statistics, reported by the benchmarks."""
+    """Aggregated per-writer statistics, reported by the benchmarks.
+
+    Thread-safe: concurrent producers and background seal/commit threads
+    funnel updates through the locked ``add_*`` methods.
+    """
 
     lock: LockStats = field(default_factory=LockStats)
     io: IOStats = field(default_factory=IOStats)
     uncompressed_bytes: int = 0
     compressed_bytes: int = 0
-    seal_ns: int = 0         # time in serialization+compression (no lock held)
-    commit_ns: int = 0       # time in commit path (lock held)
+    fill_ns: int = 0         # producer time in decompose + buffer append
+    seal_ns: int = 0         # wall time in serialization+compression (no lock held)
+    compress_ns: int = 0     # summed per-page build time (CPU view of seal)
+    commit_ns: int = 0       # time in commit path (reserve+metadata+write)
+    io_ns: int = 0           # time inside pwrite (subset of commit_ns)
     entries: int = 0
     clusters: int = 0
     pages: int = 0
+
+    def __post_init__(self) -> None:
+        self._mu = threading.Lock()
+
+    # -- race-safe mutation -------------------------------------------------
+
+    def add_sealed_cluster(self, sealed, commit_ns: int, io_ns: int = 0) -> None:
+        with self._mu:
+            self.commit_ns += commit_ns
+            self.io_ns += io_ns
+            self.seal_ns += sealed.seal_ns
+            self.compress_ns += sealed.compress_ns
+            self.clusters += 1
+            self.pages += len(sealed.pages)
+            self.entries += sealed.n_entries
+            self.uncompressed_bytes += sealed.uncompressed_bytes
+            self.compressed_bytes += sealed.size
+
+    def add_page(self, compressed_size: int, commit_ns: int = 0,
+                 io_ns: int = 0) -> None:
+        with self._mu:
+            self.pages += 1
+            self.compressed_bytes += compressed_size
+            self.commit_ns += commit_ns
+            self.io_ns += io_ns
+
+    def add_cluster_meta(self, n_entries: int, uncompressed_bytes: int) -> None:
+        with self._mu:
+            self.clusters += 1
+            self.entries += n_entries
+            self.uncompressed_bytes += uncompressed_bytes
+
+    def add_fill_ns(self, ns: int) -> None:
+        with self._mu:
+            self.fill_ns += ns
+
+    def merge_lock(self, snapshot: LockStats) -> None:
+        with self._mu:
+            self.lock.merge(snapshot)
+
+    def merge_io(self, snapshot: IOStats) -> None:
+        with self._mu:
+            self.io.merge(snapshot)
+
+    # -- reporting ----------------------------------------------------------
+
+    def phases_ms(self) -> dict:
+        """The per-phase time breakdown, in milliseconds."""
+        return {
+            "fill": self.fill_ns / 1e6,
+            "seal": self.seal_ns / 1e6,
+            "compress": self.compress_ns / 1e6,
+            "commit": self.commit_ns / 1e6,
+            "io": self.io_ns / 1e6,
+        }
 
     def as_dict(self) -> dict:
         return {
@@ -104,8 +183,12 @@ class WriterStats:
             "lock_contended": self.lock.contended,
             "lock_held_ms": self.lock.held_ns / 1e6,
             "lock_wait_ms": self.lock.wait_ns / 1e6,
+            "fill_ms": self.fill_ns / 1e6,
             "seal_ms": self.seal_ns / 1e6,
+            "compress_ms": self.compress_ns / 1e6,
             "commit_ms": self.commit_ns / 1e6,
+            "io_ms": self.io_ns / 1e6,
+            "phases_ms": self.phases_ms(),
             "write_calls": self.io.write_calls,
             "bytes_written": self.io.bytes_written,
             "fallocate_calls": self.io.fallocate_calls,

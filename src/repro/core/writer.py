@@ -17,18 +17,24 @@ Modes (paper §5 / §6.1):
   * unbuffered — unit of writing = page; pages stream out under a
     per-page lock; lower memory, collapses under lock contention at high
     thread counts (the paper's 300-vs-27,000 futex observation).
+
+Throughput machinery (DESIGN.md §"Write-path architecture"):
+  * ``imt_workers`` — a single writer-owned compression pool; every seal
+    (sequential IMT and parallel producers alike) runs page compression
+    through ``ClusterBuilder.seal(pool)``, the one shared code path.
+  * ``pipelined_seal`` — double-buffered sealing: while one cluster
+    compresses and commits on a background thread, the producer keeps
+    filling the next builder.  The paper's opt-2 moves the *write* out of
+    the critical path; this moves the entire seal phase off the producer.
 """
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
-
-import numpy as np
 
 from . import compression as comp
 from .cluster import ClusterBuilder, SealedCluster
@@ -45,6 +51,8 @@ from .pages import DEFAULT_PAGE_SIZE, PageDesc
 from .schema import ColumnBatch, Schema
 from .stats import CountingLock, WriterStats
 
+_ns = time.perf_counter_ns
+
 
 @dataclass
 class WriteOptions:
@@ -55,7 +63,8 @@ class WriteOptions:
     buffered: bool = True                    # cluster-granular unit of writing
     fallocate: bool = False                  # opt-1: preallocate extents
     write_outside_lock: bool = False         # opt-2: write after the critical section
-    imt_workers: int = 0                     # sequential writer: page-compression pool
+    imt_workers: int = 0                     # shared page-compression pool size
+    pipelined_seal: bool = False             # double-buffered background seal+commit
     checksum: bool = True
 
     @property
@@ -72,7 +81,7 @@ class WriteOptions:
 
 
 class _WriterBase:
-    """Shared container/metadata handling + close()."""
+    """Shared container/metadata handling, compression pool + close()."""
 
     def __init__(self, schema: Schema, sink, options: Optional[WriteOptions] = None):
         self.schema = schema
@@ -83,18 +92,39 @@ class _WriterBase:
         self._clusters: List[ClusterMeta] = []
         self._n_entries = 0
         self._closed = False
+        # first seal/commit failure: once set, close() releases resources
+        # but refuses to finalize — a footer must never reference a
+        # cluster whose bytes did not reach the sink
+        self._commit_error: Optional[BaseException] = None
+        # the writer-owned compression pool: ONE pool shared by every seal
+        # (sequential IMT and all parallel producers), sized independently
+        # of the producer count
+        self._pool = (
+            ThreadPoolExecutor(
+                max_workers=self.options.imt_workers,
+                thread_name_prefix="rntj-compress",
+            )
+            if self.options.imt_workers
+            else None
+        )
         # header goes first; its location is fixed so no lock is needed yet
         hdr = build_header(schema, self.options.as_dict())
         off = self.sink.reserve(len(hdr))
         self.sink.pwrite(off, hdr)
         self._header_loc = (off, len(hdr))
 
+    def _make_builder(self) -> ClusterBuilder:
+        o = self.options
+        return ClusterBuilder(self.schema, o.page_size, o.codec_id, o.level,
+                              o.checksum)
+
     # -- commit protocol ----------------------------------------------------
 
     def _commit_cluster(self, sealed: SealedCluster) -> None:
         """The paper's critical section (§4.2/§4.3), buffered mode."""
         opts = self.options
-        t0 = time.perf_counter_ns()
+        t0 = _ns()
+        io_ns = 0
         with self.lock:
             off = self.sink.reserve(sealed.size)
             if opts.fallocate:
@@ -112,27 +142,42 @@ class _WriterBase:
                 )
             )
             if not opts.write_outside_lock:
-                self.sink.pwrite(off, sealed.blob)
+                t_io = _ns()
+                self._pwrite_or_latch(off, sealed.blob)
+                io_ns = _ns() - t_io
         if opts.write_outside_lock:
             # opt-2: the extent is reserved and the metadata final — the
             # actual bytes go out truly in parallel (paper §5).
-            self.sink.pwrite(off, sealed.blob)
-        self.stats.commit_ns += time.perf_counter_ns() - t0
-        self.stats.seal_ns += sealed.seal_ns
-        self.stats.clusters += 1
-        self.stats.pages += len(sealed.pages)
-        self.stats.entries += sealed.n_entries
-        self.stats.uncompressed_bytes += sealed.uncompressed_bytes
-        self.stats.compressed_bytes += sealed.size
+            t_io = _ns()
+            self._pwrite_or_latch(off, sealed.blob)
+            io_ns = _ns() - t_io
+        self.stats.add_sealed_cluster(sealed, commit_ns=_ns() - t0, io_ns=io_ns)
+
+    def _pwrite_or_latch(self, off: int, blob) -> None:
+        """Write cluster bytes; on failure, poison finalization.
+
+        The metadata for this extent is already appended (the paper's
+        commit protocol publishes it inside the critical section), so a
+        failed write must prevent close() from emitting a footer that
+        references bytes that never landed.
+        """
+        try:
+            self.sink.pwrite(off, blob)
+        except BaseException as e:
+            if self._commit_error is None:
+                self._commit_error = e
+            raise
 
     def _commit_page(self, payload: bytes, desc: PageDesc) -> PageDesc:
         """Page-granular critical section (unbuffered mode)."""
+        t0 = _ns()
         with self.lock:
             off = self.sink.reserve(len(payload))
-            self.sink.pwrite(off, payload)
+            t_io = _ns()
+            self._pwrite_or_latch(off, payload)
+            io_ns = _ns() - t_io
         desc.offset = off
-        self.stats.pages += 1
-        self.stats.compressed_bytes += len(payload)
+        self.stats.add_page(len(payload), commit_ns=_ns() - t0, io_ns=io_ns)
         return desc
 
     def _commit_cluster_meta_unbuffered(
@@ -145,9 +190,7 @@ class _WriterBase:
             self._clusters.append(
                 ClusterMeta(first_entry, n_entries, n_elements, list(pages))
             )
-        self.stats.clusters += 1
-        self.stats.entries += n_entries
-        self.stats.uncompressed_bytes += uncompressed
+        self.stats.add_cluster_meta(n_entries, uncompressed)
 
     # -- finalization ---------------------------------------------------------
 
@@ -155,23 +198,41 @@ class _WriterBase:
         if self._closed:
             return
         self._closed = True
-        with self.lock:
-            pl = build_pagelist(self._clusters, self.schema.n_columns)
-            pl_off = self.sink.reserve(len(pl))
-            self.sink.pwrite(pl_off, pl)
-            ftr = build_footer(self._n_entries, len(self._clusters), (pl_off, len(pl)))
-            f_off = self.sink.reserve(len(ftr))
-            self.sink.pwrite(f_off, ftr)
-            anchor = build_anchor(
-                self._header_loc, (f_off, len(ftr)), self._n_entries,
-                len(self._clusters),
-            )
-            a_off = self.sink.reserve(ANCHOR_SIZE)
-            self.sink.pwrite(a_off, anchor)
-        self.stats.lock.merge(self.lock.stats)
-        self.stats.io.merge(self.sink.io)
-        self.sink.fsync() if self.sink.readable() else None
-        self.sink.close()
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+            if self._commit_error is None:
+                with self.lock:
+                    pl = build_pagelist(self._clusters, self.schema.n_columns)
+                    pl_off = self.sink.reserve(len(pl))
+                    self.sink.pwrite(pl_off, pl)
+                    ftr = build_footer(self._n_entries, len(self._clusters),
+                                       (pl_off, len(pl)))
+                    f_off = self.sink.reserve(len(ftr))
+                    self.sink.pwrite(f_off, ftr)
+                    anchor = build_anchor(
+                        self._header_loc, (f_off, len(ftr)), self._n_entries,
+                        len(self._clusters),
+                    )
+                    a_off = self.sink.reserve(ANCHOR_SIZE)
+                    self.sink.pwrite(a_off, anchor)
+                # Durability before close: fsync the sink unconditionally
+                # (sinks without a backing fd make it a no-op counter
+                # bump).  The seed gated this on readable() — which
+                # skipped the fsync exactly for write-only sinks — and as
+                # a discarded conditional expression.  The fsync must
+                # precede the io-stats snapshot to be counted.
+                self.sink.fsync()
+        finally:
+            # resources are released on every path, even a poisoned one
+            self.stats.merge_lock(self.lock.snapshot())
+            self.stats.merge_io(self.sink.io.snapshot())
+            self.sink.close()
+        if self._commit_error is not None:
+            raise RuntimeError(
+                "writer aborted: a cluster failed to seal or commit; the "
+                "file was NOT finalized (no footer written)"
+            ) from self._commit_error
 
     def __enter__(self):
         return self
@@ -184,6 +245,51 @@ class _WriterBase:
         return self._n_entries
 
 
+class _PipelinedSealer:
+    """Double-buffered background seal+commit for one producer.
+
+    ``submit(builder)`` hands the full builder to a single background
+    worker (which seals through the writer's shared compression pool and
+    commits) and returns a drained builder to keep filling — the spare
+    from the previous round, so exactly two builders alternate and their
+    ColumnBuffer storage is reused with no steady-state allocation.
+
+    The single worker preserves per-producer commit order, so a
+    one-producer pipelined file is byte-identical to a synchronous one.
+    Background exceptions re-raise on the producer thread at the next
+    ``submit``/``wait``.
+    """
+
+    def __init__(self, writer: "_WriterBase"):
+        self._writer = writer
+        self._exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="rntj-seal"
+        )
+        self._future = None
+        self._spare: Optional[ClusterBuilder] = None
+
+    def _run(self, builder: ClusterBuilder) -> ClusterBuilder:
+        sealed = builder.seal(self._writer._pool)
+        self._writer._commit_cluster(sealed)
+        return builder  # drained: its buffers are reusable now
+
+    def submit(self, builder: ClusterBuilder) -> ClusterBuilder:
+        self.wait()
+        nxt = self._spare if self._spare is not None else self._writer._make_builder()
+        self._spare = None
+        self._future = self._exec.submit(self._run, builder)
+        return nxt
+
+    def wait(self) -> None:
+        if self._future is not None:
+            fut, self._future = self._future, None
+            self._spare = fut.result()
+
+    def close(self) -> None:
+        self.wait()
+        self._exec.shutdown(wait=True)
+
+
 # ---------------------------------------------------------------------------
 # Sequential writer (the baseline RNTuple writer + IMT page compression)
 
@@ -192,27 +298,33 @@ class SequentialWriter(_WriterBase):
     """Single-producer writer.
 
     With ``options.imt_workers > 0`` page compression of a cluster is
-    distributed over a thread pool — ROOT's *implicit multithreading* (IMT)
-    model, which the paper shows plateaus around 4 threads (Fig. 5) because
-    everything else stays serial.
+    distributed over the writer's shared pool — ROOT's *implicit
+    multithreading* (IMT) model, which the paper shows plateaus around 4
+    threads (Fig. 5) because everything else stays serial.  With
+    ``options.pipelined_seal`` the whole seal+commit runs behind the
+    producer (double buffering).
     """
 
     def __init__(self, schema: Schema, sink, options: Optional[WriteOptions] = None):
         super().__init__(schema, sink, options)
-        o = self.options
-        self._builder = ClusterBuilder(
-            schema, o.page_size, o.codec_id, o.level, o.checksum
+        self._builder = self._make_builder()
+        self._sealer = (
+            _PipelinedSealer(self)
+            if self.options.pipelined_seal and self.options.buffered
+            else None
         )
-        self._pool = (
-            ThreadPoolExecutor(max_workers=o.imt_workers) if o.imt_workers else None
-        )
+        self._fill_ns = 0
 
     def fill(self, entry: Dict) -> None:
+        t0 = _ns()
         self._builder.fill(entry)
+        self._fill_ns += _ns() - t0
         self._maybe_flush()
 
     def fill_batch(self, batch: ColumnBatch) -> None:
+        t0 = _ns()
         self._builder.fill_batch(batch)
+        self._fill_ns += _ns() - t0
         self._maybe_flush()
 
     def _maybe_flush(self) -> None:
@@ -221,60 +333,29 @@ class SequentialWriter(_WriterBase):
 
     def flush_cluster(self) -> None:
         if self._builder.is_empty:
+            if self._sealer is not None:
+                self._sealer.wait()
             return
-        if self._pool is None:
-            sealed = self._builder.seal()
+        if self._sealer is not None:
+            self._builder = self._sealer.submit(self._builder)
         else:
-            sealed = _seal_with_pool(self._builder, self._pool)
-        self._commit_cluster(sealed)
+            self._commit_cluster(self._builder.seal(self._pool))
 
     def close(self) -> None:
         if not self._closed:
-            self.flush_cluster()
-            if self._pool:
-                self._pool.shutdown(wait=True)
+            try:
+                self.flush_cluster()
+                if self._sealer is not None:
+                    self._sealer.close()
+            except BaseException as e:
+                # a cluster was lost: poison finalization, surface via
+                # super().close() after resources are released
+                if self._commit_error is None:
+                    self._commit_error = e
+            finally:
+                self.stats.add_fill_ns(self._fill_ns)
+                self._fill_ns = 0
         super().close()
-
-
-def _seal_with_pool(builder: ClusterBuilder, pool: ThreadPoolExecutor) -> SealedCluster:
-    """IMT-style seal: pages of one cluster compressed by a pool.
-
-    Mirrors ROOT IMT: parallelism *within* one unit of writing.  The paper
-    (§4.1) argues per-producer units scale better; the fig5 benchmark shows
-    the same.
-    """
-    from .pages import build_page, elements_per_page
-
-    t0 = time.perf_counter_ns()
-    jobs = []
-    for col in builder.schema.columns:
-        elems = builder._column_elements(col.index)
-        per = builder._page_elems[col.index]
-        for start in range(0, len(elems), per):
-            jobs.append((col, elems[start : start + per]))
-    results = list(
-        pool.map(
-            lambda cv: build_page(cv[0], cv[1], builder.codec, builder.level,
-                                  builder.checksum),
-            jobs,
-        )
-    )
-    parts, descs, pos = [], [], 0
-    for payload, desc in results:
-        desc.offset = pos
-        pos += desc.size
-        parts.append(payload)
-        descs.append(desc)
-    sealed = SealedCluster(
-        blob=b"".join(parts),
-        n_entries=builder.n_entries,
-        n_elements=list(builder._n_elements),
-        pages=descs,
-        uncompressed_bytes=builder.uncompressed_bytes,
-        seal_ns=time.perf_counter_ns() - t0,
-    )
-    builder._reset()
-    return sealed
 
 
 # ---------------------------------------------------------------------------
@@ -285,23 +366,32 @@ class FillContext:
     """Per-producer context: its own cluster under construction.
 
     Everything up to the commit happens without synchronization; the commit
-    is the short critical section described in paper §4.2/§4.3.
+    is the short critical section described in paper §4.2/§4.3.  With
+    ``pipelined_seal`` the seal+commit of a full cluster runs on a
+    background thread while this producer fills the next builder.
     """
 
     def __init__(self, writer: "ParallelWriter"):
         self.writer = writer
         o = writer.options
-        self.builder = ClusterBuilder(
-            writer.schema, o.page_size, o.codec_id, o.level, o.checksum
-        )
+        self.builder = writer._make_builder()
         self._page_buf: List = []  # unbuffered mode: descs of committed pages
+        self._sealer = (
+            _PipelinedSealer(writer) if o.pipelined_seal and o.buffered else None
+        )
+        self._fill_ns = 0
+        self._ctx_closed = False
 
     def fill(self, entry: Dict) -> None:
+        t0 = _ns()
         self.builder.fill(entry)
+        self._fill_ns += _ns() - t0
         self._maybe_flush()
 
     def fill_batch(self, batch: ColumnBatch) -> None:
+        t0 = _ns()
         self.builder.fill_batch(batch)
+        self._fill_ns += _ns() - t0
         self._maybe_flush()
 
     def _maybe_flush(self) -> None:
@@ -314,10 +404,14 @@ class FillContext:
 
     def flush_cluster(self) -> None:
         if self.builder.is_empty:
+            if self._sealer is not None:
+                self._sealer.wait()
             return
         if self.writer.options.buffered:
-            sealed = self.builder.seal()
-            self.writer._commit_cluster(sealed)
+            if self._sealer is not None:
+                self.builder = self._sealer.submit(self.builder)
+            else:
+                self.writer._commit_cluster(self.builder.seal(self.writer._pool))
         else:
             for payload, desc in self.builder.drain_rest():
                 self._page_buf.append(self.writer._commit_page(payload, desc))
@@ -328,7 +422,16 @@ class FillContext:
             self._page_buf = []
 
     def close(self) -> None:
+        if self._ctx_closed:
+            return
         self.flush_cluster()
+        if self._sealer is not None:
+            self._sealer.close()
+        # only mark closed after a successful drain: a failed close stays
+        # retryable and is never silently dropped by ParallelWriter.close
+        self._ctx_closed = True
+        self.writer.stats.add_fill_ns(self._fill_ns)
+        self._fill_ns = 0
 
 
 class ParallelWriter(_WriterBase):
@@ -356,10 +459,17 @@ class ParallelWriter(_WriterBase):
 
     def close(self) -> None:
         if not self._closed:
-            # Flush any contexts the producers did not close themselves.
+            # Flush (and drain the seal pipelines of) any contexts the
+            # producers did not close themselves.  One failing context
+            # must not stop the others from draining, nor leak the sink —
+            # the first error poisons finalization instead.
             with self._ctx_lock:
                 for ctx in self._contexts:
-                    ctx.flush_cluster()
+                    try:
+                        ctx.close()
+                    except BaseException as e:
+                        if self._commit_error is None:
+                            self._commit_error = e
         super().close()
 
 

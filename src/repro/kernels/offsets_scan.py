@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import numpy as np
+
 DEFAULT_BLOCK = 4096
 
 
@@ -54,3 +56,22 @@ def offsets_scan(
         interpret=interpret,
     )(x)
     return out[:n]
+
+
+def offsets_scan_host(
+    sizes: np.ndarray, block: int = DEFAULT_BLOCK
+) -> np.ndarray:
+    """Numpy-in / numpy-out entry point for the write hot path.
+
+    Accepts a 1-D array of collection sizes and returns int64
+    cluster-relative end offsets.  The kernel runs in int32 (the Pallas
+    lane width); callers must ensure the total fits — the write path
+    guards this and falls back to numpy otherwise.  On a CPU-only jax
+    backend the kernel runs in interpret mode (used by tests; the
+    dispatcher in ``repro.core.encoding`` does not select this path on
+    CPU unless forced).
+    """
+    x = jnp.asarray(np.ascontiguousarray(sizes), dtype=jnp.int32)
+    interpret = jax.default_backend() == "cpu"
+    out = offsets_scan(x, block=block, interpret=interpret)
+    return np.asarray(out, dtype=np.int64)

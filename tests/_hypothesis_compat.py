@@ -1,0 +1,251 @@
+"""Hypothesis fallback shim.
+
+The test suite is written against the real ``hypothesis`` API; this module
+re-exports it when installed (``pip install -r requirements-dev.txt``) and
+otherwise provides a tiny deterministic random-example runner implementing
+the subset the suite uses: ``given``, ``settings``, ``assume`` and the
+``integers / floats / lists / binary / tuples / sampled_from / composite``
+strategies.  No shrinking and no database — just seeded example generation
+so the suite still collects and runs without the dependency.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import HealthCheck, assume, given, settings
+    from hypothesis import strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+    import zlib as _zlib
+
+    _DEFAULT_MAX_EXAMPLES = 30
+
+    class _Unsatisfied(Exception):
+        pass
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied()
+        return True
+
+    class HealthCheck:  # placeholder namespace
+        all = staticmethod(lambda: [])
+        too_slow = "too_slow"
+        filter_too_much = "filter_too_much"
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+        def map(self, fn):
+            return _MappedStrategy(self, fn)
+
+    class _MappedStrategy(_Strategy):
+        def __init__(self, inner, fn):
+            self.inner, self.fn = inner, fn
+
+        def example(self, rng):
+            return self.fn(self.inner.example(rng))
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=None, max_value=None):
+            self.lo = -(2**64) if min_value is None else min_value
+            self.hi = 2**64 if max_value is None else max_value
+
+        def example(self, rng):
+            # bias toward boundaries: they carry most of the bug-finding power
+            r = rng.random()
+            if r < 0.05:
+                return self.lo
+            if r < 0.10:
+                return self.hi
+            if r < 0.20 and self.lo <= 0 <= self.hi:
+                return 0
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=None, max_value=None, width=64,
+                     allow_nan=None, allow_infinity=None):
+            self.lo = -1e308 if min_value is None else float(min_value)
+            self.hi = 1e308 if max_value is None else float(max_value)
+            self.width = width
+
+        def example(self, rng):
+            r = rng.random()
+            if r < 0.05:
+                v = self.lo
+            elif r < 0.10:
+                v = self.hi
+            elif r < 0.15 and self.lo <= 0.0 <= self.hi:
+                v = 0.0
+            elif self.hi - self.lo == float("inf"):
+                # rng.uniform overflows to inf when the span does; draw
+                # magnitude and sign separately instead
+                v = rng.uniform(0.0, min(abs(self.lo), abs(self.hi), 1e308))
+                v = -v if rng.random() < 0.5 and self.lo <= -v else v
+                v = min(max(v, self.lo), self.hi)
+            else:
+                v = rng.uniform(self.lo, self.hi)
+            if self.width == 32:
+                import numpy as np
+
+                v = float(np.float32(v))
+                # float32 rounding may step outside a tight [lo, hi]
+                v = min(max(v, self.lo), self.hi)
+            elif self.width == 16:
+                import numpy as np
+
+                v = float(np.float16(v))
+                v = min(max(v, self.lo), self.hi)
+            return v
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=None, unique=False):
+            self.elements = elements
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 20
+            self.unique = unique
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            out = [self.elements.example(rng) for _ in range(n)]
+            if self.unique:
+                seen, uniq = set(), []
+                for v in out:
+                    if v not in seen:
+                        seen.add(v)
+                        uniq.append(v)
+                out = uniq
+            return out
+
+    class _Binary(_Strategy):
+        def __init__(self, min_size=0, max_size=None):
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 100
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return rng.randbytes(n) if hasattr(rng, "randbytes") else bytes(
+                rng.getrandbits(8) for _ in range(n)
+            )
+
+    class _Tuples(_Strategy):
+        def __init__(self, *strategies):
+            self.strategies = strategies
+
+        def example(self, rng):
+            return tuple(s.example(rng) for s in self.strategies)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return rng.choice(self.elements)
+
+    class _Composite(_Strategy):
+        def __init__(self, fn, args, kwargs):
+            self.fn, self.args, self.kwargs = fn, args, kwargs
+
+        def example(self, rng):
+            draw = lambda strategy: strategy.example(rng)
+            return self.fn(draw, *self.args, **self.kwargs)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **kw):
+            return _Floats(min_value, max_value, **kw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None, unique=False):
+            return _Lists(elements, min_size, max_size, unique)
+
+        @staticmethod
+        def binary(min_size=0, max_size=None):
+            return _Binary(min_size, max_size)
+
+        @staticmethod
+        def tuples(*args):
+            return _Tuples(*args)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                return _Composite(fn, args, kwargs)
+
+            return make
+
+    strategies = _StrategiesModule()
+
+    def settings(**kwargs):
+        def apply(fn):
+            merged = dict(getattr(fn, "_compat_settings", {}))
+            merged.update(kwargs)
+            fn._compat_settings = merged
+            return fn
+
+        return apply
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            import inspect
+
+            # hypothesis fills the RIGHTMOST positional parameters from
+            # the strategies; leftover leftmost params stay visible in the
+            # signature so pytest still injects fixtures for them
+            params = [
+                p for p in inspect.signature(fn).parameters.values()
+                if p.name not in kw_strategies
+            ]
+            leftover = params[: len(params) - len(arg_strategies)]
+
+            @functools.wraps(fn)
+            def runner(*fixture_args, **fixture_kwargs):
+                conf = getattr(runner, "_compat_settings",
+                               getattr(fn, "_compat_settings", {}))
+                max_examples = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+                # deterministic per-test seed, stable across runs
+                seed = _zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                ran = 0
+                attempts = 0
+                while ran < max_examples and attempts < max_examples * 20:
+                    attempts += 1
+                    args = [s.example(rng) for s in arg_strategies]
+                    kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*fixture_args, *args, **fixture_kwargs, **kwargs)
+                    except _Unsatisfied:
+                        continue
+                    ran += 1
+                if ran == 0 and attempts:
+                    raise AssertionError(
+                        f"{fn.__qualname__}: assume() rejected all "
+                        f"{attempts} generated examples — property never "
+                        f"checked (unsatisfiable assumption?)"
+                    )
+
+            runner.hypothesis_compat = True
+            runner.__signature__ = inspect.Signature(leftover)
+            return runner
+
+        return decorate
+
+
+# the canonical import spelling used by the test modules
+st = strategies
+
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "assume", "given", "settings",
+           "st", "strategies"]

@@ -5,7 +5,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import DevNullSink, FileSink, MemorySink, ThrottledSink
 from repro.core.metadata import (

@@ -6,7 +6,7 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     Collection, ColumnBatch, Leaf, ParallelWriter, RNTJReader, Schema,
