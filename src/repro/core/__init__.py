@@ -27,7 +27,7 @@ from .writer import (
     FillContext,
     write_entries,
 )
-from .reader import RNTJReader
+from .reader import ReadOptions, RNTJReader
 from .merge import BufferMerger, merge_files
 from .container import (
     Sink,
@@ -35,9 +35,10 @@ from .container import (
     DevNullSink,
     MemorySink,
     ThrottledSink,
+    close_all,
     open_sink,
 )
-from .stats import WriterStats, CountingLock
+from .stats import ReaderStats, WriterStats, CountingLock
 from .colbuf import ColumnBuffer
 from . import compression, encoding, metadata, pages, cluster, colbuf
 
@@ -45,9 +46,9 @@ __all__ = [
     "Schema", "Field", "Leaf", "Collection", "Record", "ColumnSpec",
     "ColumnBatch", "KIND_LEAF", "KIND_OFFSET", "decompose_entry",
     "recompose_entries", "WriteOptions", "SequentialWriter", "ParallelWriter",
-    "FillContext", "write_entries", "RNTJReader", "BufferMerger",
-    "merge_files", "Sink", "FileSink", "DevNullSink", "MemorySink",
-    "ThrottledSink", "open_sink", "WriterStats", "CountingLock",
-    "ColumnBuffer",
+    "FillContext", "write_entries", "RNTJReader", "ReadOptions",
+    "BufferMerger", "merge_files", "Sink", "FileSink", "DevNullSink",
+    "MemorySink", "ThrottledSink", "close_all", "open_sink", "WriterStats",
+    "ReaderStats", "CountingLock", "ColumnBuffer",
     "compression", "encoding", "metadata", "pages", "cluster", "colbuf",
 ]

@@ -16,7 +16,8 @@ from __future__ import annotations
 import bz2
 import lzma
 import zlib
-from typing import Callable, Dict, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Optional, Tuple
 
 CODEC_NONE = 0
 CODEC_ZLIB = 1
@@ -43,6 +44,20 @@ def codec_id(name_or_id) -> int:
         return _NAMES[name_or_id.lower()]
     except KeyError:
         raise ValueError(f"unknown codec {name_or_id!r}") from None
+
+
+def make_pool(workers: int, prefix: str = "rntj-codec") -> Optional[ThreadPoolExecutor]:
+    """Shared worker-pool plumbing for page codec work.
+
+    One pool per writer (compression) or reader (decompression), sized
+    independently of the producer/consumer count.  Because the codecs
+    above release the GIL, page (de)compression submitted to the pool
+    runs truly in parallel.  Returns ``None`` when ``workers`` is 0 so
+    callers can keep a synchronous fast path.
+    """
+    if not workers:
+        return None
+    return ThreadPoolExecutor(max_workers=workers, thread_name_prefix=prefix)
 
 
 def compress(data: bytes, codec: int, level: int = -1) -> bytes:

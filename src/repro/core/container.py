@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import errno
 import os
+import sys
 import threading
 import time
 from typing import Optional
@@ -24,11 +25,32 @@ from typing import Optional
 from .stats import IOStats
 
 
+def close_all(closeables) -> None:
+    """Close everything; surface the first close error only when not
+    already unwinding another exception (never mask the original).
+
+    The ``exc_info`` check runs OUTSIDE any except block — callers use
+    this from ``finally``, where it sees the in-flight exception, if any.
+    """
+    first = None
+    for item in closeables:
+        try:
+            item.close()
+        except BaseException as e:
+            if first is None:
+                first = e
+    if first is not None and sys.exc_info()[0] is None:
+        raise first
+
+
 class Sink:
     """Abstract positioned-write sink with an end-of-file cursor."""
 
     def __init__(self) -> None:
         self.io = IOStats()
+        # pwrite/pread run concurrently (parallel producers; the reader's
+        # prefetch + decode pools), so the counters need their own lock
+        self._stat_lock = threading.Lock()
         self._end = 0
 
     # The end-of-file cursor.  NOT thread safe: the caller must hold the
@@ -48,11 +70,23 @@ class Sink:
     def pread(self, offset: int, size: int) -> bytes:
         raise NotImplementedError
 
+    def _count_write(self, calls: int, nbytes: int) -> None:
+        with self._stat_lock:
+            self.io.write_calls += calls
+            self.io.bytes_written += nbytes
+
+    def _count_read(self, calls: int, nbytes: int) -> None:
+        with self._stat_lock:
+            self.io.read_calls += calls
+            self.io.bytes_read += nbytes
+
     def fallocate(self, offset: int, size: int) -> None:  # opt-1 hook
-        self.io.fallocate_calls += 1
+        with self._stat_lock:
+            self.io.fallocate_calls += 1
 
     def fsync(self) -> None:
-        self.io.fsync_calls += 1
+        with self._stat_lock:
+            self.io.fsync_calls += 1
 
     def close(self) -> None:
         pass
@@ -73,19 +107,31 @@ class FileSink(Sink):
     def pwrite(self, offset: int, data: bytes) -> None:
         view = memoryview(data)
         pos = 0
+        calls = 0
         while pos < len(view):
             n = os.pwrite(self.fd, view[pos:], offset + pos)
             pos += n
-            self.io.write_calls += 1
-        self.io.bytes_written += len(view)
+            calls += 1
+        self._count_write(calls, len(view))
 
     def pread(self, offset: int, size: int) -> bytes:
-        out = bytearray()
+        # fast path: the kernel returns the whole extent in one call (the
+        # overwhelmingly common case) — hand its buffer back with no copy
+        chunk = os.pread(self.fd, size, offset)
+        if len(chunk) == size:
+            self._count_read(1, size)
+            return chunk
+        if not chunk and size:
+            raise EOFError(f"short read at {offset} of {self.path}")
+        out = bytearray(chunk)
+        calls = 1
         while len(out) < size:
             chunk = os.pread(self.fd, size - len(out), offset + len(out))
             if not chunk:
                 raise EOFError(f"short read at {offset}+{len(out)} of {self.path}")
             out += chunk
+            calls += 1
+        self._count_read(calls, size)
         return bytes(out)
 
     def fallocate(self, offset: int, size: int) -> None:
@@ -116,8 +162,7 @@ class DevNullSink(Sink):
     configuration isolates the software stack from storage bandwidth."""
 
     def pwrite(self, offset: int, data: bytes) -> None:
-        self.io.write_calls += 1
-        self.io.bytes_written += len(data)
+        self._count_write(1, len(data))
 
     def pread(self, offset: int, size: int) -> bytes:
         raise IOError("DevNullSink is write-only")
@@ -135,11 +180,13 @@ class MemorySink(Sink):
             if len(self.buf) < need:
                 self.buf.extend(b"\x00" * (need - len(self.buf)))
             self.buf[offset : offset + len(data)] = data
-        self.io.write_calls += 1
-        self.io.bytes_written += len(data)
+        self._count_write(1, len(data))
 
     def pread(self, offset: int, size: int) -> bytes:
-        return bytes(self.buf[offset : offset + size])
+        with self._buf_lock:
+            out = bytes(self.buf[offset : offset + size])
+        self._count_read(1, len(out))
+        return out
 
     def readable(self) -> bool:
         return True
@@ -192,11 +239,12 @@ class ThrottledSink(Sink):
         delay = done - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
-        self.io.write_calls += 1
-        self.io.bytes_written += len(data)
+        self._count_write(1, len(data))
 
     def pread(self, offset: int, size: int) -> bytes:
-        return self.inner.pread(offset, size)
+        out = self.inner.pread(offset, size)
+        self._count_read(1, len(out))
+        return out
 
     def fallocate(self, offset: int, size: int) -> None:
         super().fallocate(offset, size)
@@ -215,7 +263,8 @@ class ThrottledSink(Sink):
         return self.inner.readable()
 
 
-def open_sink(path: str, create: bool = True) -> Sink:
+def open_sink(path, create: bool = True) -> Sink:
+    path = os.fspath(path)  # accept str and os.PathLike alike
     if path in ("/dev/null", "devnull", "null:"):
         return DevNullSink()
     if path == "mem:":

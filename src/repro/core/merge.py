@@ -1,8 +1,12 @@
 """The paper's comparison baselines: file merging (hadd) and TBufferMerger.
 
-Both exploit cluster relocatability: merging never recompresses — sealed
-cluster bytes are copied verbatim and only the metadata (entry ranges,
-page locators) is rebuilt, exactly like ROOT's fast hadd path.
+Both exploit cluster relocatability: the **raw fast path** never
+recompresses — sealed cluster bytes are copied verbatim and only the
+metadata (entry ranges, page locators) is rebuilt, exactly like ROOT's
+fast hadd path.  When the caller asks for a *different* codec than an
+input file carries, that input takes the **re-encode slow path** instead:
+it streams through the read engine's prefetching cluster iterator and is
+refilled through the normal write path (hadd's slow mode).
 """
 
 from __future__ import annotations
@@ -10,20 +14,20 @@ from __future__ import annotations
 import threading
 from typing import List, Optional, Sequence
 
-import numpy as np
-
-from .container import MemorySink, Sink, open_sink
+from .container import MemorySink, close_all
+from .encoding import offsets_to_sizes
 from .metadata import ClusterMeta
 from .reader import RNTJReader
-from .schema import Schema
+from .schema import KIND_OFFSET, ColumnBatch, Schema
 from .writer import ParallelWriter, SequentialWriter, WriteOptions, _WriterBase
 
 
 def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
-    """Copy committed clusters from ``reader`` into ``writer`` byte-verbatim.
+    """Raw fast path: copy committed clusters byte-verbatim.
 
     The critical section per cluster is the same reserve+metadata protocol
-    as parallel writing — relocatability makes this a pure byte copy.
+    as parallel writing — relocatability makes this a pure byte copy, no
+    decompression and no re-encoding.
     """
     for idx, cm in enumerate(reader.clusters):
         if cm.byte_size:
@@ -63,23 +67,80 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
         writer.stats.compressed_bytes += len(blob)
 
 
-def merge_files(inputs: Sequence[str], output, options: Optional[WriteOptions] = None,
-                schema: Optional[Schema] = None) -> None:
+def _reencode_clusters(reader: RNTJReader, writer: ParallelWriter) -> None:
+    """Slow path: decode through the read engine, refill through the
+    write path — used when the output codec differs from the input's.
+
+    Streams via the prefetching cluster iterator, so the next cluster's
+    I/O + decode overlaps this cluster's re-compression.
+    """
+    ctx = writer.create_fill_context()
+    try:
+        for ci, cols in reader.iter_clusters():
+            cm = reader.clusters[ci]
+            data = {}
+            for c in reader.schema.columns:
+                arr = cols[c.index]
+                # on-disk offsets are cluster-relative ends; the fill
+                # path wants per-collection sizes back
+                data[c.index] = (
+                    offsets_to_sizes(arr) if c.kind == KIND_OFFSET else arr
+                )
+            ctx.fill_batch(ColumnBatch(reader.schema, cm.n_entries, data))
+    finally:
+        ctx.close()
+
+
+def _needs_reencode(
+    reader: RNTJReader, options: Optional[WriteOptions], recompress: Optional[bool]
+) -> bool:
+    if recompress is not None:
+        return recompress
+    if options is None:
+        return False  # no target codec named: raw copy, never recompress
+    src = reader.options.get("codec")
+    return src is not None and int(src) != options.codec_id
+
+
+def merge_files(
+    inputs: Sequence[str],
+    output,
+    options: Optional[WriteOptions] = None,
+    schema: Optional[Schema] = None,
+    recompress: Optional[bool] = None,
+) -> None:
     """``hadd`` analog: sequential post-processing merge of many files.
 
     The paper's Fig. 5 "separate files + merge" baseline: scalable writing
     but pays a read-back + rewrite and transiently doubles storage.
+
+    Inputs whose on-disk codec matches the requested ``options.codec``
+    (or all inputs, when ``options`` is None) take the raw byte-verbatim
+    fast path; mismatching inputs are decoded and re-encoded with
+    ``options``.  ``recompress`` overrides the auto choice: ``True``
+    forces the re-encode path, ``False`` forces raw copy.
     """
-    readers = [RNTJReader(p) for p in inputs]
-    schema = schema or readers[0].schema
-    for r in readers:
-        if r.schema != schema:
-            raise ValueError("cannot merge files with differing schemas")
-    out = ParallelWriter(schema, output, options)
-    for r in readers:
-        _copy_clusters(r, out)
-        r.close()
-    out.close()
+    readers: List[RNTJReader] = []
+    try:
+        for p in inputs:  # opened one at a time: a failed open leaks nothing
+            readers.append(RNTJReader(p))
+        schema = schema or readers[0].schema
+        for r in readers:
+            if r.schema != schema:
+                raise ValueError("cannot merge files with differing schemas")
+        out = ParallelWriter(schema, output, options)
+        try:
+            for r in readers:
+                if _needs_reencode(r, options, recompress):
+                    _reencode_clusters(r, out)
+                else:
+                    _copy_clusters(r, out)
+        finally:
+            # surfaces a poisoned close on the success path; suppresses
+            # it while another exception is already unwinding
+            close_all([out])
+    finally:
+        close_all(readers)
 
 
 class BufferMerger:

@@ -83,12 +83,16 @@ class CountingLock:
 class IOStats:
     write_calls: int = 0
     bytes_written: int = 0
+    read_calls: int = 0
+    bytes_read: int = 0
     fallocate_calls: int = 0
     fsync_calls: int = 0
 
     def merge(self, other: "IOStats") -> None:
         self.write_calls += other.write_calls
         self.bytes_written += other.bytes_written
+        self.read_calls += other.read_calls
+        self.bytes_read += other.bytes_read
         self.fallocate_calls += other.fallocate_calls
         self.fsync_calls += other.fsync_calls
 
@@ -192,4 +196,94 @@ class WriterStats:
             "write_calls": self.io.write_calls,
             "bytes_written": self.io.bytes_written,
             "fallocate_calls": self.io.fallocate_calls,
+        }
+
+
+@dataclass
+class ReaderStats:
+    """Aggregated per-reader statistics — the read-side mirror of
+    :class:`WriterStats`.
+
+    Phase breakdown (``phases_ms``):
+      * ``io``         — time inside ``pread`` (after coalescing)
+      * ``decompress`` — summed per-page entropy-decode time
+      * ``decode``     — summed per-page unprecondition + offset-integration
+        time (writes straight into the per-column output arrays)
+      * ``wait``       — time the consumer blocked on the prefetch pipeline
+
+    ``decompress``/``decode`` are summed per-page times: a CPU-time view
+    that exceeds wall time when the decode pool is active (exactly like
+    ``WriterStats.compress_ns`` on the write side).  Thread-safe: decode
+    workers and the prefetch pipeline funnel updates through the locked
+    ``add_*`` methods.
+    """
+
+    io: IOStats = field(default_factory=IOStats)
+    clusters: int = 0
+    pages: int = 0
+    coalesced_reads: int = 0  # preads issued for page data after coalescing
+    compressed_bytes: int = 0
+    uncompressed_bytes: int = 0
+    io_ns: int = 0            # time inside pread
+    decompress_ns: int = 0    # summed per-page entropy decode
+    decode_ns: int = 0        # summed per-page unprecondition/integration
+    wait_ns: int = 0          # consumer blocked on the prefetch pipeline
+
+    def __post_init__(self) -> None:
+        self._mu = threading.Lock()
+
+    # -- race-safe mutation -------------------------------------------------
+
+    def add_cluster_read(
+        self,
+        pages: int,
+        reads: int,
+        compressed_bytes: int,
+        uncompressed_bytes: int,
+        io_ns: int,
+        decompress_ns: int,
+        decode_ns: int,
+    ) -> None:
+        with self._mu:
+            self.clusters += 1
+            self.pages += pages
+            self.coalesced_reads += reads
+            self.compressed_bytes += compressed_bytes
+            self.uncompressed_bytes += uncompressed_bytes
+            self.io_ns += io_ns
+            self.decompress_ns += decompress_ns
+            self.decode_ns += decode_ns
+
+    def add_wait_ns(self, ns: int) -> None:
+        with self._mu:
+            self.wait_ns += ns
+
+    def merge_io(self, snapshot: IOStats) -> None:
+        with self._mu:
+            self.io.merge(snapshot)
+
+    # -- reporting ----------------------------------------------------------
+
+    def phases_ms(self) -> dict:
+        return {
+            "io": self.io_ns / 1e6,
+            "decompress": self.decompress_ns / 1e6,
+            "decode": self.decode_ns / 1e6,
+            "wait": self.wait_ns / 1e6,
+        }
+
+    def as_dict(self) -> dict:
+        return {
+            "clusters": self.clusters,
+            "pages": self.pages,
+            "coalesced_reads": self.coalesced_reads,
+            "compressed_bytes": self.compressed_bytes,
+            "uncompressed_bytes": self.uncompressed_bytes,
+            "io_ms": self.io_ns / 1e6,
+            "decompress_ms": self.decompress_ns / 1e6,
+            "decode_ms": self.decode_ns / 1e6,
+            "wait_ms": self.wait_ns / 1e6,
+            "phases_ms": self.phases_ms(),
+            "read_calls": self.io.read_calls,
+            "bytes_read": self.io.bytes_read,
         }

@@ -30,6 +30,7 @@ Throughput machinery (DESIGN.md §"Write-path architecture"):
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -86,7 +87,9 @@ class _WriterBase:
     def __init__(self, schema: Schema, sink, options: Optional[WriteOptions] = None):
         self.schema = schema
         self.options = options or WriteOptions()
-        self.sink: Sink = open_sink(sink) if isinstance(sink, str) else sink
+        self.sink: Sink = (
+            open_sink(sink) if isinstance(sink, (str, os.PathLike)) else sink
+        )
         self.lock = CountingLock()
         self.stats = WriterStats()
         self._clusters: List[ClusterMeta] = []
@@ -99,14 +102,7 @@ class _WriterBase:
         # the writer-owned compression pool: ONE pool shared by every seal
         # (sequential IMT and all parallel producers), sized independently
         # of the producer count
-        self._pool = (
-            ThreadPoolExecutor(
-                max_workers=self.options.imt_workers,
-                thread_name_prefix="rntj-compress",
-            )
-            if self.options.imt_workers
-            else None
-        )
+        self._pool = comp.make_pool(self.options.imt_workers, "rntj-compress")
         # header goes first; its location is fixed so no lock is needed yet
         hdr = build_header(schema, self.options.as_dict())
         off = self.sink.reserve(len(hdr))

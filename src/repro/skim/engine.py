@@ -29,8 +29,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import (
-    BufferMerger, Collection, ColumnBatch, Leaf, ParallelWriter, RNTJReader,
-    Schema, SequentialWriter, WriteOptions, merge_files,
+    BufferMerger, Collection, ColumnBatch, Leaf, ParallelWriter, ReadOptions,
+    RNTJReader, Schema, SequentialWriter, WriteOptions, close_all, merge_files,
 )
 
 EVENT_SCHEMA = Schema([
@@ -106,11 +106,15 @@ def _synth_events(rng: np.random.Generator, n: int, id0: int) -> ColumnBatch:
 
 OUT_SCHEMA = EVENT_SCHEMA.project(KEEP_FIELDS)
 
+# every strategy streams its inputs through the read engine's prefetch
+# pipeline: cluster i+1 is read+decoded while the skim kernel chews on i
+DEFAULT_READ_OPTIONS = ReadOptions(prefetch_clusters=1)
 
-def _skim_cluster(reader: RNTJReader, ci: int, cuts: Cuts) -> Optional[ColumnBatch]:
-    s = reader.schema
-    cols = reader.read_cluster(ci)
-    n = reader.clusters[ci].n_entries
+
+def _skim_cluster_arrays(
+    s: Schema, cols: Dict[int, np.ndarray], n: int, cuts: Cuts
+) -> Optional[ColumnBatch]:
+    """The vectorized skim kernel over one cluster's column arrays."""
 
     def coll(path):
         offs = cols[s.column_of_path[path]].astype(np.int64)
@@ -160,16 +164,26 @@ def _skim_cluster(reader: RNTJReader, ci: int, cuts: Cuts) -> Optional[ColumnBat
     })
 
 
-def skim_file(in_path: str, fill, cuts: Cuts) -> int:
-    """Skim one input file into ``fill(batch)``; returns kept events."""
-    r = RNTJReader(in_path)
+def skim_file(
+    in_path: str, fill, cuts: Cuts, read_options: Optional[ReadOptions] = None
+) -> int:
+    """Skim one input file into ``fill(batch)``; returns kept events.
+
+    Streams through the read engine's prefetching cluster iterator: the
+    next cluster's I/O + decode overlaps the skim kernel and the fill.
+    """
+    r = RNTJReader(in_path, options=read_options or DEFAULT_READ_OPTIONS)
     kept = 0
-    for ci in range(r.n_clusters):
-        batch = _skim_cluster(r, ci, cuts)
-        if batch is not None:
-            fill(batch)
-            kept += batch.n_entries
-    r.close()
+    try:
+        for ci, cols in r.iter_clusters():
+            batch = _skim_cluster_arrays(
+                r.schema, cols, r.clusters[ci].n_entries, cuts
+            )
+            if batch is not None:
+                fill(batch)
+                kept += batch.n_entries
+    finally:
+        r.close()
     return kept
 
 
@@ -185,11 +199,18 @@ def skim_partitions(
     cuts: Cuts = Cuts(),
     options: Optional[WriteOptions] = None,
     imt_workers: Optional[int] = None,
+    read_options: Optional[ReadOptions] = None,
 ) -> Dict:
-    """Skim all partitions with the given strategy; returns stats."""
+    """Skim all partitions with the given strategy; returns stats.
+
+    Every resource (the thread pool, per-worker writers, merger files) is
+    released on the error path too: a worker raising propagates the
+    exception instead of leaking threads and half-written files.
+    """
     assert strategy in STRATEGIES, strategy
     options = options or WriteOptions(codec="zlib", level=1,
                                       cluster_bytes=2 * 1024 * 1024)
+    ropts = read_options or DEFAULT_READ_OPTIONS
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     kept_total = [0]
@@ -200,72 +221,82 @@ def skim_partitions(
             kept_total[0] += k
 
     pool = ThreadPoolExecutor(max_workers=n_threads)
+    try:
+        if strategy == "imt":
+            # parallelize over partitions only; page compression pool inside.
+            per_part = max(1, n_threads // max(len(partitions), 1))
+            opts = WriteOptions(**{**options.__dict__,
+                                   "imt_workers": imt_workers or per_part})
+            def run_part(part, files):
+                w = SequentialWriter(OUT_SCHEMA, str(out / f"skim_{part}.rntj"),
+                                     opts)
+                try:
+                    for f in files:
+                        add_kept(skim_file(f, w.fill_batch, cuts, ropts))
+                finally:
+                    w.close()
+            futs = [pool.submit(run_part, p, fs) for p, fs in partitions.items()]
+            for fu in futs:
+                fu.result()
 
-    if strategy == "imt":
-        # parallelize over partitions only; page compression pool inside.
-        per_part = max(1, n_threads // max(len(partitions), 1))
-        opts = WriteOptions(**{**options.__dict__,
-                               "imt_workers": imt_workers or per_part})
-        def run_part(part, files):
-            w = SequentialWriter(OUT_SCHEMA, str(out / f"skim_{part}.rntj"), opts)
-            for f in files:
-                add_kept(skim_file(f, w.fill_batch, cuts))
-            w.close()
-        futs = [pool.submit(run_part, p, fs) for p, fs in partitions.items()]
-
-    elif strategy in ("separate", "separate-null"):
-        tmp_files: Dict[int, List[str]] = {p: [] for p in partitions}
-        def run_file(part, i, f):
-            dst = ("/dev/null" if strategy == "separate-null"
-                   else str(out / f"tmp_{part}_{i}.rntj"))
-            w = SequentialWriter(OUT_SCHEMA, dst, options)
-            add_kept(skim_file(f, w.fill_batch, cuts))
-            w.close()
+        elif strategy in ("separate", "separate-null"):
+            tmp_files: Dict[int, List[str]] = {p: [] for p in partitions}
+            def run_file(part, i, f):
+                dst = ("/dev/null" if strategy == "separate-null"
+                       else str(out / f"tmp_{part}_{i}.rntj"))
+                w = SequentialWriter(OUT_SCHEMA, dst, options)
+                try:
+                    add_kept(skim_file(f, w.fill_batch, cuts, ropts))
+                finally:
+                    w.close()
+                if strategy == "separate":
+                    tmp_files[part].append(dst)
+            futs = [pool.submit(run_file, p, i, f)
+                    for p, fs in partitions.items() for i, f in enumerate(fs)]
+            for fu in futs:
+                fu.result()
             if strategy == "separate":
-                tmp_files[part].append(dst)
-        futs = [pool.submit(run_file, p, i, f)
-                for p, fs in partitions.items() for i, f in enumerate(fs)]
-        for fu in futs:
-            fu.result()
-        futs = []
-        if strategy == "separate":
-            # hadd-style merge per partition (parallel over partitions)
-            futs = [pool.submit(merge_files, tmp_files[p],
-                                str(out / f"skim_{p}.rntj"), options)
-                    for p in partitions]
+                # hadd-style merge per partition (parallel over partitions)
+                futs = [pool.submit(merge_files, tmp_files[p],
+                                    str(out / f"skim_{p}.rntj"), options)
+                        for p in partitions]
+                for fu in futs:
+                    fu.result()
 
-    elif strategy == "buffermerger":
-        mergers = {p: BufferMerger(OUT_SCHEMA, str(out / f"skim_{p}.rntj"),
-                                   options) for p in partitions}
-        def run_file(part, f):
-            bmf = mergers[part].get_file()
-            add_kept(skim_file(f, bmf.fill_batch, cuts))
-            bmf.close()
-        futs = [pool.submit(run_file, p, f)
-                for p, fs in partitions.items() for f in fs]
-        for fu in futs:
-            fu.result()
-        futs = []
-        for m in mergers.values():
-            m.close()
+        elif strategy == "buffermerger":
+            mergers = {p: BufferMerger(OUT_SCHEMA, str(out / f"skim_{p}.rntj"),
+                                       options) for p in partitions}
+            try:
+                def run_file(part, f):
+                    bmf = mergers[part].get_file()
+                    try:
+                        add_kept(skim_file(f, bmf.fill_batch, cuts, ropts))
+                    finally:
+                        bmf.close()
+                futs = [pool.submit(run_file, p, f)
+                        for p, fs in partitions.items() for f in fs]
+                for fu in futs:
+                    fu.result()
+            finally:
+                close_all(mergers.values())
 
-    else:  # parallel — the paper's contribution
-        writers = {p: ParallelWriter(OUT_SCHEMA, str(out / f"skim_{p}.rntj"),
-                                     options) for p in partitions}
-        def run_file(part, f):
-            ctx = writers[part].create_fill_context()
-            add_kept(skim_file(f, ctx.fill_batch, cuts))
-            ctx.close()
-        futs = [pool.submit(run_file, p, f)
-                for p, fs in partitions.items() for f in fs]
-        for fu in futs:
-            fu.result()
-        futs = []
-        for w in writers.values():
-            w.close()
-
-    for fu in futs:
-        fu.result()
-    pool.shutdown(wait=True)
+        else:  # parallel — the paper's contribution
+            writers = {p: ParallelWriter(OUT_SCHEMA, str(out / f"skim_{p}.rntj"),
+                                         options) for p in partitions}
+            try:
+                def run_file(part, f):
+                    ctx = writers[part].create_fill_context()
+                    try:
+                        add_kept(skim_file(f, ctx.fill_batch, cuts, ropts))
+                    finally:
+                        ctx.close()
+                futs = [pool.submit(run_file, p, f)
+                        for p, fs in partitions.items() for f in fs]
+                for fu in futs:
+                    fu.result()
+            finally:
+                close_all(writers.values())
+    finally:
+        pool.shutdown(wait=True, cancel_futures=True)
     return {"kept_events": kept_total[0], "strategy": strategy,
             "n_threads": n_threads}

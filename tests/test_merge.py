@@ -66,6 +66,59 @@ def test_merge_is_byte_verbatim(tmp_path):
         assert bin_ == bout
 
 
+def test_merge_auto_recompresses_on_codec_mismatch(tmp_path):
+    """Asking for zlib output from a codec-none input takes the re-encode
+    slow path: values survive, pages come out in the target codec."""
+    s = schema()
+    p = str(tmp_path / "raw.rntj")
+    rng = np.random.default_rng(4)
+    n = 3000
+    sizes = rng.poisson(5, n).astype(np.int64)
+    vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
+    batch = ColumnBatch.from_arrays(
+        s, n, {"id": np.arange(n), "vals": sizes, "vals._0": vals})
+    with SequentialWriter(s, p, WriteOptions(codec="none",
+                                             cluster_bytes=64 * 1024)) as w:
+        w.fill_batch(batch)
+    out = str(tmp_path / "zl.rntj")
+    merge_files([p], out, WriteOptions(codec="zlib", level=1,
+                                       cluster_bytes=64 * 1024))
+    r = RNTJReader(out)
+    np.testing.assert_array_equal(r.read_column("id"), np.arange(n))
+    np.testing.assert_array_equal(r.read_column("vals._0"), vals)
+    # the compressible id/offset pages really were transcoded to zlib
+    assert any(pg.codec == 1 for cm in r.clusters for pg in cm.pages)
+    import os
+    assert os.path.getsize(out) < os.path.getsize(p)
+
+
+def test_merge_recompress_false_forces_raw_copy(tmp_path):
+    """recompress=False keeps byte-verbatim clusters even when the
+    requested codec differs from the input's."""
+    s = schema()
+    p = str(tmp_path / "raw.rntj")
+    write_one(p, 2)  # zlib input
+    out = str(tmp_path / "none.rntj")
+    merge_files([p], out, WriteOptions(codec="none"), recompress=False)
+    rin, rout = RNTJReader(p), RNTJReader(out)
+    for cin, cout in zip(rin.clusters, rout.clusters):
+        assert (rin.sink.pread(cin.byte_offset, cin.byte_size)
+                == rout.sink.pread(cout.byte_offset, cout.byte_size))
+
+
+def test_merge_missing_input_leaks_nothing(tmp_path):
+    """A failed open mid-list must close the readers already opened."""
+    import os
+    p1 = str(tmp_path / "a.rntj")
+    write_one(p1, 0)
+    fds_before = len(os.listdir("/proc/self/fd"))
+    for _ in range(5):
+        with pytest.raises(FileNotFoundError):
+            merge_files([p1, str(tmp_path / "missing.rntj")],
+                        str(tmp_path / "o.rntj"))
+    assert len(os.listdir("/proc/self/fd")) <= fds_before
+
+
 def test_buffer_merger_threads(tmp_path):
     s = schema()
     out = str(tmp_path / "bm.rntj")

@@ -1,0 +1,327 @@
+"""Read engine: coalescing + parallel decode + prefetch vs the seed path.
+
+Property-based round-trips of random nested schemas through
+SequentialWriter/ParallelWriter and back through the rebuilt read engine,
+asserting byte- and value-identity against the seed's per-page read path
+(one pread per page, serial ``read_page``, ``np.concatenate`` per column
+— reimplemented verbatim in :func:`seed_read_cluster`).
+"""
+
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    Collection, ColumnBatch, Leaf, MemorySink, ParallelWriter, RNTJReader,
+    ReadOptions, Record, Schema, SequentialWriter, WriteOptions,
+)
+from repro.core.pages import read_page
+from repro.core.schema import KIND_OFFSET
+
+
+# ---------------------------------------------------------------------------
+# the seed's per-page read path (the pre-refactor reference)
+
+
+def seed_read_cluster(r, ci, columns=None):
+    """One pread per page, serial decode, concatenate — the old hot path."""
+    cm = r.clusters[ci]
+    want = set(columns) if columns is not None else None
+    parts = {}
+    for desc in cm.pages:
+        if want is not None and desc.column not in want:
+            continue
+        col = r.schema.columns[desc.column]
+        buf = r.sink.pread(desc.offset, desc.size)
+        parts.setdefault(desc.column, []).append(read_page(buf, desc, col, True))
+    out = {}
+    targets = want if want is not None else range(r.schema.n_columns)
+    for idx in targets:
+        col = r.schema.columns[idx]
+        chunks = parts.get(idx, [])
+        if chunks:
+            out[idx] = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+        else:
+            out[idx] = np.empty(0, dtype=col.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# random nested schemas + matching random data
+
+LEAF_TYPES = ["int64", "int32", "uint8", "float32", "float64"]
+
+
+@st.composite
+def schemas(draw):
+    def make_field(name, depth):
+        kinds = ["leaf"] if depth == 0 else ["leaf", "coll", "rec"]
+        kind = draw(st.sampled_from(kinds))
+        if kind == "leaf":
+            return Leaf(name, draw(st.sampled_from(LEAF_TYPES)))
+        if kind == "coll":
+            return Collection(name, make_field("_0", depth - 1))
+        n_sub = draw(st.integers(1, 3))
+        return Record(name, [make_field(f"r{i}", depth - 1)
+                             for i in range(n_sub)])
+
+    n_top = draw(st.integers(1, 4))
+    return Schema([make_field(f"f{i}", 2) for i in range(n_top)])
+
+
+def random_batch(schema, n, rng):
+    """Random entries for ``schema`` in decomposed columnar (sizes) form."""
+    counts, data = {}, {}
+    for col in schema.columns:
+        p = schema.parent[col.index]
+        m = n if p == -1 else counts[p]
+        if col.kind == KIND_OFFSET:
+            sizes = rng.integers(0, 4, m).astype(np.int64)
+            counts[col.index] = int(sizes.sum())
+            data[col.index] = sizes
+        else:
+            counts[col.index] = m
+            dt = col.dtype
+            if dt.kind == "f":
+                data[col.index] = rng.uniform(-100, 100, m).astype(dt)
+            elif dt.kind == "u":
+                data[col.index] = rng.integers(0, 200, m).astype(dt)
+            else:
+                data[col.index] = rng.integers(-1000, 1000, m).astype(dt)
+    batch = ColumnBatch(schema, n, data)
+    batch.validate()
+    return batch
+
+
+READ_OPTION_VARIANTS = [
+    ReadOptions(prefetch_clusters=0, decode_workers=0, coalesce_gap=-1),
+    ReadOptions(prefetch_clusters=0, decode_workers=0, coalesce_gap=0),
+    ReadOptions(prefetch_clusters=2, decode_workers=2),
+]
+
+
+def assert_engine_matches_seed(sink, schema):
+    """Every ReadOptions variant must decode byte-identically to the seed
+    per-page path, for full reads and for column projections."""
+    for ropts in READ_OPTION_VARIANTS:
+        r = RNTJReader(sink, options=ropts)
+        proj = [0, schema.n_columns - 1]
+        for ci, cols in r.iter_clusters():
+            ref = seed_read_cluster(r, ci)
+            for i in range(schema.n_columns):
+                assert cols[i].dtype == ref[i].dtype
+                assert cols[i].tobytes() == ref[i].tobytes()
+            sub = r.read_cluster(ci, columns=proj)
+            for i in proj:
+                assert sub[i].tobytes() == ref[i].tobytes()
+        r.close()
+
+
+@given(schemas(), st.integers(0, 300), st.sampled_from(["none", "zlib"]),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_roundtrip_sequential_matches_seed_path(schema, n, codec, seed):
+    rng = np.random.default_rng(seed)
+    batch = random_batch(schema, n, rng)
+    sink = MemorySink()
+    opts = WriteOptions(codec=codec, cluster_bytes=4096, page_size=512)
+    with SequentialWriter(schema, sink, opts) as w:
+        if n:
+            w.fill_batch(batch)
+    assert_engine_matches_seed(sink, schema)
+    # value identity against the source batch, through the pipeline
+    r = RNTJReader(sink, options=ReadOptions(prefetch_clusters=2,
+                                             decode_workers=2))
+    assert r.n_entries == n
+    for col in schema.columns:
+        got = r.read_column(col.path)
+        if col.kind == KIND_OFFSET:
+            np.testing.assert_array_equal(got, np.cumsum(batch.data[col.index]))
+        else:
+            np.testing.assert_array_equal(got, batch.data[col.index])
+    r.close()
+
+
+@given(schemas(), st.integers(1, 150), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_roundtrip_parallel_matches_seed_path(schema, n, seed):
+    rng = np.random.default_rng(seed)
+    batches = [random_batch(schema, n, rng) for _ in range(2)]
+    sink = MemorySink()
+    w = ParallelWriter(schema, sink, WriteOptions(codec="zlib",
+                                                  cluster_bytes=2048,
+                                                  page_size=512))
+
+    def producer(b):
+        ctx = w.create_fill_context()
+        ctx.fill_batch(b)
+        ctx.close()
+
+    ts = [threading.Thread(target=producer, args=(b,)) for b in batches]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    w.close()
+    assert_engine_matches_seed(sink, schema)
+    # entry conservation: leaf multisets survive regardless of cluster order
+    r = RNTJReader(sink, options=ReadOptions(prefetch_clusters=1))
+    assert r.n_entries == 2 * n
+    for col in schema.columns:
+        if col.kind != KIND_OFFSET:
+            expect = np.sort(np.concatenate([b.data[col.index]
+                                             for b in batches]))
+            np.testing.assert_array_equal(np.sort(r.read_column(col.path)),
+                                          expect)
+    r.close()
+
+
+# ---------------------------------------------------------------------------
+# edges: empty files, empty collections, projection, PathLike
+
+
+def test_empty_file_reads_cleanly():
+    schema = Schema([Leaf("id", "int64"), Collection("v", Leaf("_0", "float32"))])
+    sink = MemorySink()
+    SequentialWriter(schema, sink, WriteOptions()).close()
+    for ropts in READ_OPTION_VARIANTS:
+        r = RNTJReader(sink, options=ropts)
+        assert r.n_entries == 0 and r.n_clusters == 0
+        assert list(r.iter_clusters()) == []
+        assert len(r.read_column("v._0")) == 0
+        assert list(r.iter_entries()) == []
+        r.close()
+
+
+def test_all_empty_collections_cluster():
+    """A cluster whose collection column is all zeros has NO pages for the
+    child column; the engine must still return an empty child array."""
+    schema = Schema([Leaf("id", "int64"), Collection("v", Leaf("_0", "float32"))])
+    sink = MemorySink()
+    n = 50
+    batch = ColumnBatch.from_arrays(schema, n, {
+        "id": np.arange(n, dtype=np.int64),
+        "v": np.zeros(n, dtype=np.int64),
+        "v._0": np.empty(0, dtype=np.float32),
+    })
+    with SequentialWriter(schema, sink, WriteOptions(codec="none")) as w:
+        w.fill_batch(batch)
+    for ropts in READ_OPTION_VARIANTS:
+        r = RNTJReader(sink, options=ropts)
+        _, cols = next(iter(r.iter_clusters()))
+        assert len(cols[2]) == 0 and cols[2].dtype == np.float32
+        np.testing.assert_array_equal(cols[1], np.zeros(n, dtype=np.int64))
+        entries = list(r.iter_entries())
+        assert all(e["v"] == [] for e in entries)
+        r.close()
+
+
+def test_column_projection_reads_only_requested_pages(tmp_path):
+    schema = Schema([Leaf("id", "int64"), Collection("v", Leaf("_0", "float32"))])
+    rng = np.random.default_rng(5)
+    n = 4000
+    sizes = rng.poisson(6, n).astype(np.int64)
+    batch = ColumnBatch.from_arrays(schema, n, {
+        "id": np.arange(n, dtype=np.int64), "v": sizes,
+        "v._0": rng.uniform(0, 1, int(sizes.sum())).astype(np.float32),
+    })
+    path = str(tmp_path / "p.rntj")
+    with SequentialWriter(schema, path, WriteOptions(codec="none")) as w:
+        w.fill_batch(batch)
+    r = RNTJReader(path, options=ReadOptions(prefetch_clusters=0))
+    cols = r.read_cluster(0, columns=[0])
+    assert set(cols) == {0}
+    # only column 0's pages were read: fewer bytes than the whole cluster
+    full_bytes = sum(p.size for p in r.clusters[0].pages)
+    col0_bytes = sum(p.size for p in r.clusters[0].pages if p.column == 0)
+    assert col0_bytes < full_bytes
+    assert r.stats.compressed_bytes == col0_bytes
+    r.close()
+
+
+def test_pathlike_reader_and_writers(tmp_path):
+    schema = Schema([Leaf("id", "int64")])
+    p = tmp_path / "pathlike.rntj"  # a pathlib.Path, not str
+    with SequentialWriter(schema, p, WriteOptions()) as w:
+        w.fill({"id": 1})
+    with RNTJReader(p) as r:
+        assert r.n_entries == 1
+    p2 = tmp_path / "pathlike2.rntj"
+    w = ParallelWriter(schema, p2, WriteOptions())
+    ctx = w.create_fill_context()
+    ctx.fill({"id": 2})
+    ctx.close()
+    w.close()
+    with RNTJReader(p2) as r:
+        assert list(r.iter_entries()) == [{"id": 2}]
+
+
+def test_reader_stats_phases(tmp_path):
+    schema = Schema([Leaf("id", "int64"), Collection("v", Leaf("_0", "float32"))])
+    rng = np.random.default_rng(1)
+    n = 20_000
+    sizes = rng.poisson(5, n).astype(np.int64)
+    batch = ColumnBatch.from_arrays(schema, n, {
+        "id": np.arange(n, dtype=np.int64), "v": sizes,
+        "v._0": rng.uniform(0, 1, int(sizes.sum())).astype(np.float32),
+    })
+    path = str(tmp_path / "s.rntj")
+    with SequentialWriter(schema, path,
+                          WriteOptions(codec="zlib", cluster_bytes=256 * 1024,
+                                       page_size=8192)) as w:
+        w.fill_batch(batch)
+    r = RNTJReader(path, options=ReadOptions(prefetch_clusters=1,
+                                             decode_workers=2))
+    for _ci, _cols in r.iter_clusters():
+        pass
+    s = r.stats
+    assert s.clusters == r.n_clusters
+    assert s.pages == sum(len(c.pages) for c in r.clusters)
+    assert 0 < s.coalesced_reads <= s.pages  # coalescing actually merged
+    assert s.decompress_ns > 0 and s.decode_ns > 0
+    assert s.uncompressed_bytes >= s.compressed_bytes
+    assert set(s.phases_ms()) == {"io", "decompress", "decode", "wait"}
+    r.close()
+    assert s.io.bytes_read >= s.compressed_bytes  # merged on close
+
+
+def test_reader_init_failure_closes_file(tmp_path):
+    """A corrupt file must not leak the fd the reader opened itself."""
+    import os
+    p = tmp_path / "bad.rntj"
+    p.write_bytes(b"\x00" * 256)  # garbage anchor
+    fds_before = len(os.listdir("/proc/self/fd"))
+    for _ in range(5):
+        with pytest.raises(Exception):
+            RNTJReader(str(p))
+    assert len(os.listdir("/proc/self/fd")) <= fds_before
+
+
+def test_checksum_verification_via_engine(tmp_path):
+    """Corruption must be detected on the coalesced + pooled path too."""
+    schema = Schema([Leaf("id", "int64"), Collection("v", Leaf("_0", "float32"))])
+    rng = np.random.default_rng(2)
+    n = 2000
+    sizes = rng.poisson(5, n).astype(np.int64)
+    batch = ColumnBatch.from_arrays(schema, n, {
+        "id": np.arange(n, dtype=np.int64), "v": sizes,
+        "v._0": rng.uniform(0, 1, int(sizes.sum())).astype(np.float32),
+    })
+    path = str(tmp_path / "c.rntj")
+    with SequentialWriter(schema, path, WriteOptions()) as w:
+        w.fill_batch(batch)
+    r = RNTJReader(path)
+    page0 = r.clusters[0].pages[0]
+    r.close()
+    with open(path, "r+b") as f:
+        f.seek(page0.offset + page0.size // 2)
+        f.write(b"\xff\xfe")
+    for ropts in READ_OPTION_VARIANTS:
+        r = RNTJReader(path, options=ropts)
+        with pytest.raises(IOError):
+            for _ in r.iter_clusters():
+                pass
+        r.close()

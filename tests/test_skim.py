@@ -56,6 +56,32 @@ def test_skim_semantics(dataset, tmp_path):
             break
 
 
+@pytest.mark.parametrize("strategy",
+                         ["imt", "separate", "buffermerger", "parallel"])
+def test_skim_cleanup_on_worker_failure(tmp_path, strategy):
+    """A corrupt input makes a worker raise: the exception propagates and
+    every pool/writer/merger is shut down instead of leaking threads."""
+    import threading
+    import time
+
+    parts = make_agc_dataset(str(tmp_path / "in"), n_partitions=2,
+                             files_per_partition=2, events_per_file=400,
+                             seed=7)
+    bad = parts[1][1]
+    size = __import__("os").path.getsize(bad)
+    with open(bad, "r+b") as f:  # smash the anchor
+        f.seek(size - 64)
+        f.write(b"\x00" * 64)
+    before = threading.active_count()
+    with pytest.raises(Exception):
+        skim_partitions(parts, str(tmp_path / f"o_{strategy}"), strategy,
+                        n_threads=4)
+    deadline = time.time() + 10
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.05)
+    assert threading.active_count() <= before  # no leaked pool threads
+
+
 def test_skim_reduces_size(dataset, tmp_path):
     import os
     res = skim_partitions(dataset, str(tmp_path / "o"), "parallel", n_threads=4)
