@@ -1,0 +1,120 @@
+"""Shared benchmark harness for the RNT-J perf-trajectory benches.
+
+Everything the writer/reader/codec benchmarks previously duplicated:
+``sys.path`` bootstrap, the paper's synthetic nested-event workloads
+(incompressible uniform floats and detector-style quantized values),
+workload prebuilding (RNG cost stays out of the timings), the runtime
+*parallel-capacity probe* (measured 2-thread zlib scaling — pooled/
+pipelined speedups are bounded by it, and shared CI containers often
+expose far less than ``cpu_count`` suggests), and file building.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+import zlib
+from pathlib import Path
+from typing import Callable, Dict, List
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+if str(REPO_ROOT / "benchmarks") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
+
+from repro.core import (  # noqa: E402
+    Collection, ColumnBatch, Leaf, Schema, SequentialWriter, WriteOptions,
+)
+
+EVENT_SCHEMA = Schema([
+    Leaf("id", "int64"),
+    Collection("vals", Leaf("_0", "float32")),
+])
+
+
+def synth_batch(rng: np.random.Generator, n: int, id0: int = 0) -> ColumnBatch:
+    """The paper's synthetic events: incompressible uniform floats."""
+    sizes = rng.poisson(5, n).astype(np.int64)
+    vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
+    return ColumnBatch.from_arrays(
+        EVENT_SCHEMA, n,
+        {"id": np.arange(id0, id0 + n), "vals": sizes, "vals._0": vals},
+    )
+
+
+def hep_batch(rng: np.random.Generator, n: int, id0: int = 0) -> ColumnBatch:
+    """Detector-style values: limited dynamic range, 1/64 quantization —
+    compresses like real physics data rather than white noise."""
+    sizes = rng.poisson(5, n).astype(np.int64)
+    vals = (rng.gamma(2.0, 15.0, int(sizes.sum())).astype(np.float32) * 64)
+    vals = (np.round(vals) / 64).astype(np.float32)
+    return ColumnBatch.from_arrays(
+        EVENT_SCHEMA, n,
+        {"id": np.arange(id0, id0 + n), "vals": sizes, "vals._0": vals},
+    )
+
+
+WORKLOADS: Dict[str, Callable] = {"uniform": synth_batch, "hep": hep_batch}
+
+
+def prebuild(workload: str, entries: int, batch_entries: int) -> List[ColumnBatch]:
+    """Generate the workload up front so RNG cost stays out of the timing."""
+    make = WORKLOADS[workload]
+    rng = np.random.default_rng(0)
+    batches, done = [], 0
+    while done < entries:
+        n = min(batch_entries, entries - done)
+        batches.append(make(rng, n, id0=done))
+        done += n
+    return batches
+
+
+def probe_parallel_capacity() -> float:
+    """Measured 2-thread zlib scaling on THIS machine right now.
+
+    1.0 means no parallel headroom (single effective core / noisy box);
+    2.0 means two full cores.  Pool/pipeline gains are bounded by this.
+    """
+    rng = np.random.default_rng(7)
+    page = rng.uniform(0, 100, 16384).astype(np.float32).tobytes()
+
+    def work(n):
+        for _ in range(n):
+            zlib.compress(page, 1)
+
+    t0 = time.perf_counter()
+    work(60)
+    serial = time.perf_counter() - t0
+    ts = [threading.Thread(target=work, args=(30,)) for _ in range(2)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    par = time.perf_counter() - t0
+    return round(serial / par, 2)
+
+
+def build_file(path, entries: int, codec: str, level: int,
+               options: WriteOptions = None, schema: Schema = None,
+               workload: str = "uniform") -> int:
+    """Write a synthetic workload file; returns its uncompressed byte size."""
+    schema = schema or EVENT_SCHEMA
+    opts = options or WriteOptions(codec=codec, level=level,
+                                   cluster_bytes=1 << 20, page_size=64 * 1024)
+    make = WORKLOADS[workload]
+    rng = np.random.default_rng(0)
+    nbytes = 0
+    with SequentialWriter(schema, str(path), opts) as w:
+        done = 0
+        while done < entries:
+            n = min(50_000, entries - done)
+            batch = make(rng, n, id0=done)
+            nbytes += sum(a.nbytes for a in batch.data.values())
+            w.fill_batch(batch)
+            done += n
+    return nbytes

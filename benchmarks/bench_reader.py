@@ -27,22 +27,16 @@ import argparse
 import json
 import os
 import shutil
-import sys
 import time
 from pathlib import Path
 from typing import Dict, List
 
-import numpy as np
-
-REPO_ROOT = Path(__file__).resolve().parent.parent
-if str(REPO_ROOT / "src") not in sys.path:
-    sys.path.insert(0, str(REPO_ROOT / "src"))
-if str(REPO_ROOT / "benchmarks") not in sys.path:
-    sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
+from _harness import (  # noqa: F401
+    EVENT_SCHEMA, REPO_ROOT, build_file, probe_parallel_capacity,
+)
 
 from repro.core import (  # noqa: E402
-    Collection, ColumnBatch, Leaf, RNTJReader, ReadOptions, Schema,
-    SequentialWriter, WriteOptions,
+    RNTJReader, ReadOptions, SequentialWriter, WriteOptions,
 )
 from repro.skim import make_agc_dataset, skim_partitions  # noqa: E402
 from repro.skim.engine import (  # noqa: E402
@@ -50,36 +44,8 @@ from repro.skim.engine import (  # noqa: E402
 )
 
 from _legacy_seed_reader import SeedRNTJReader  # noqa: E402
-from bench_writer import probe_parallel_capacity  # noqa: E402
 
 SCRATCH = REPO_ROOT / "benchmarks" / "_scratch_reader"
-
-EVENT_SCHEMA = Schema([
-    Leaf("id", "int64"),
-    Collection("vals", Leaf("_0", "float32")),
-])
-
-
-def build_file(path: Path, entries: int, codec: str, level: int) -> int:
-    """Write the synthetic workload; returns its uncompressed byte size."""
-    rng = np.random.default_rng(0)
-    opts = WriteOptions(codec=codec, level=level, cluster_bytes=1 << 20,
-                        page_size=64 * 1024)
-    nbytes = 0
-    with SequentialWriter(EVENT_SCHEMA, str(path), opts) as w:
-        done = 0
-        while done < entries:
-            n = min(50_000, entries - done)
-            sizes = rng.poisson(5, n).astype(np.int64)
-            vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
-            batch = ColumnBatch.from_arrays(EVENT_SCHEMA, n, {
-                "id": np.arange(done, done + n), "vals": sizes,
-                "vals._0": vals,
-            })
-            nbytes += sum(a.nbytes for a in batch.data.values())
-            w.fill_batch(batch)
-            done += n
-    return nbytes
 
 
 # ---------------------------------------------------------------------------

@@ -30,96 +30,21 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import threading
 import time
-import zlib
 from pathlib import Path
-from typing import Callable, Dict, List
 
-import numpy as np
-
-REPO_ROOT = Path(__file__).resolve().parent.parent
-if str(REPO_ROOT / "src") not in sys.path:
-    sys.path.insert(0, str(REPO_ROOT / "src"))
-if str(REPO_ROOT / "benchmarks") not in sys.path:
-    sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
+from _harness import (  # noqa: F401 (re-exported for older callers)
+    EVENT_SCHEMA, REPO_ROOT, WORKLOADS, hep_batch,
+    prebuild as _prebuild, probe_parallel_capacity, synth_batch,
+)
 
 from repro.core import (  # noqa: E402
-    Collection, ColumnBatch, DevNullSink, Leaf, ParallelWriter, Schema,
-    SequentialWriter, WriteOptions,
+    DevNullSink, ParallelWriter, SequentialWriter, WriteOptions,
 )
 from repro.core import compression as comp  # noqa: E402
 
 from _legacy_seed_writer import SeedSequentialWriter  # noqa: E402
-
-EVENT_SCHEMA = Schema([
-    Leaf("id", "int64"),
-    Collection("vals", Leaf("_0", "float32")),
-])
-
-
-def synth_batch(rng: np.random.Generator, n: int, id0: int = 0) -> ColumnBatch:
-    """The paper's synthetic events: incompressible uniform floats."""
-    sizes = rng.poisson(5, n).astype(np.int64)
-    vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
-    return ColumnBatch.from_arrays(
-        EVENT_SCHEMA, n,
-        {"id": np.arange(id0, id0 + n), "vals": sizes, "vals._0": vals},
-    )
-
-
-def hep_batch(rng: np.random.Generator, n: int, id0: int = 0) -> ColumnBatch:
-    """Detector-style values: limited dynamic range, 1/64 quantization —
-    compresses like real physics data rather than white noise."""
-    sizes = rng.poisson(5, n).astype(np.int64)
-    vals = (rng.gamma(2.0, 15.0, int(sizes.sum())).astype(np.float32) * 64)
-    vals = (np.round(vals) / 64).astype(np.float32)
-    return ColumnBatch.from_arrays(
-        EVENT_SCHEMA, n,
-        {"id": np.arange(id0, id0 + n), "vals": sizes, "vals._0": vals},
-    )
-
-
-WORKLOADS: Dict[str, Callable] = {"uniform": synth_batch, "hep": hep_batch}
-
-
-def _prebuild(workload: str, entries: int, batch_entries: int) -> List[ColumnBatch]:
-    """Generate the workload up front so RNG cost stays out of the timing."""
-    make = WORKLOADS[workload]
-    rng = np.random.default_rng(0)
-    batches, done = [], 0
-    while done < entries:
-        n = min(batch_entries, entries - done)
-        batches.append(make(rng, n, id0=done))
-        done += n
-    return batches
-
-
-def probe_parallel_capacity() -> float:
-    """Measured 2-thread zlib scaling on THIS machine right now.
-
-    1.0 means no parallel headroom (single effective core / noisy box);
-    2.0 means two full cores.  Pool/pipeline gains are bounded by this.
-    """
-    rng = np.random.default_rng(7)
-    page = rng.uniform(0, 100, 16384).astype(np.float32).tobytes()
-
-    def work(n):
-        for _ in range(n):
-            zlib.compress(page, 1)
-
-    t0 = time.perf_counter()
-    work(60)
-    serial = time.perf_counter() - t0
-    ts = [threading.Thread(target=work, args=(30,)) for _ in range(2)]
-    t0 = time.perf_counter()
-    for t in ts:
-        t.start()
-    for t in ts:
-        t.join()
-    par = time.perf_counter() - t0
-    return round(serial / par, 2)
 
 
 # ---------------------------------------------------------------------------

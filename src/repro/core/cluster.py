@@ -10,18 +10,33 @@ Hot-path layout: each column accumulates into a contiguous, amortized-
 doubling :class:`~repro.core.colbuf.ColumnBuffer` — appends are vectorized
 copies, offset integration happens in place on the reserved tail, and page
 extraction at seal time is a zero-copy view slice (no ``np.concatenate``).
-``seal()`` optionally distributes page compression over a writer-owned
-thread pool; zlib/lzma/bz2 release the GIL, so pages of one cluster
-compress truly in parallel.  This is the ONE compression code path shared
-by the sequential writer (IMT mode) and the parallel writer.
+
+``seal()`` is the ONE compression code path shared by the sequential
+writer (IMT mode) and the parallel writer, structured as two passes:
+
+1. **column-batched preconditioning** on the sealing thread — every
+   column's pages split/delta-encoded in a handful of vectorized calls
+   (with the Pallas ``byteshuffle`` dispatch on accelerator backends);
+2. **chunk-granular compression** — each page becomes one or more framed
+   compression jobs (pages above ``chunk_bytes`` split into independent
+   concatenated members), distributed over the writer-owned pool when one
+   is given, so a *single producer* sealing one cluster saturates the
+   pool.  zlib/lzma/bz2 (and lz4/zstd when installed) release the GIL, so
+   members compress truly in parallel; per-page CRCs fold over the
+   members incrementally.
+
+Per-column codecs resolve once per builder (``column_codecs``), and an
+optional shared :class:`~repro.core.compression.CodecPolicy` downgrades
+columns whose sampled compression ratio is not worth the CPU to raw
+storage.  The pooled and serial paths are byte-identical.
 """
 
 from __future__ import annotations
 
 import time
 import zlib
-from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass, replace as dc_replace
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,7 +44,20 @@ from . import compression as comp
 from .colbuf import ColumnBuffer
 from .encoding import EncodeScratch, integrate_sizes, precondition_column_pages
 from .pages import PageDesc, build_page, elements_per_page
-from .schema import KIND_OFFSET, OFFSET_DTYPE, ColumnBatch, Schema, decompose_entry
+from .schema import (
+    ENC_NONE,
+    KIND_OFFSET,
+    OFFSET_DTYPE,
+    ColumnBatch,
+    Schema,
+    decompose_entry,
+)
+
+_ns = time.perf_counter_ns
+
+# plan-slot sentinel: this page's codec resolves mid-seal, after the
+# column's adaptive-policy trial pages have been compressed and recorded
+_PENDING = -2
 
 
 @dataclass
@@ -37,7 +65,9 @@ class SealedCluster:
     """A serialized+compressed cluster, ready to commit anywhere.
 
     ``pages[i]`` descriptors carry cluster-relative offsets into ``blob``
-    (a bytes-like single allocation).
+    (a bytes-like single allocation).  ``codec_stats`` maps codec id ->
+    ``[pages, bytes_in, bytes_out, ns]`` so writer stats can attribute
+    bytes and time to each codec.
     """
 
     blob: bytes                    # bytes-like (bytearray from seal())
@@ -47,6 +77,7 @@ class SealedCluster:
     uncompressed_bytes: int
     seal_ns: int = 0               # wall time of the whole seal
     compress_ns: int = 0           # summed per-page build time (CPU view)
+    codec_stats: Optional[Dict[int, List[int]]] = None
 
     @property
     def size(self) -> int:
@@ -54,13 +85,6 @@ class SealedCluster:
 
     def rebase(self, base: int) -> List[PageDesc]:
         return [p.rebase(base) for p in self.pages]
-
-
-def _build_page_timed(job, codec: int, level: int, checksum: bool):
-    col, elems = job
-    t0 = time.perf_counter_ns()
-    payload, desc = build_page(col, elems, codec, level, checksum)
-    return payload, desc, time.perf_counter_ns() - t0
 
 
 class ClusterBuilder:
@@ -74,15 +98,35 @@ class ClusterBuilder:
     the column buffers keep their storage, so refilling performs no
     allocations in steady state (this is what double-buffered pipelined
     sealing relies on).
+
+    ``column_codecs`` is an optional per-column ``[(codec_id, level)]``
+    resolution (writers compute it once from ``WriteOptions`` +
+    ``ColumnSpec`` overrides); ``policy`` is the writer-shared adaptive
+    :class:`~repro.core.compression.CodecPolicy`; ``chunk_bytes`` frames
+    pages larger than it into independently compressed members; and
+    ``precondition=False`` disables split/delta encodings (every column
+    stored with ``ENC_NONE``, matching the header's ``precondition`` flag).
     """
 
     def __init__(self, schema: Schema, page_size: int, codec: int, level: int = -1,
-                 checksum: bool = True):
+                 checksum: bool = True,
+                 column_codecs: Optional[Sequence[Tuple[int, int]]] = None,
+                 chunk_bytes: int = 0,
+                 policy: Optional[comp.CodecPolicy] = None,
+                 precondition: bool = True):
         self.schema = schema
         self.page_size = page_size
         self.codec = codec
         self.level = level
         self.checksum = checksum
+        self.chunk_bytes = chunk_bytes
+        self._policy = policy
+        # effective per-column specs: encodings drop to ENC_NONE when
+        # preconditioning is disabled (the reader honors the header flag)
+        self._specs = [
+            c if precondition else dc_replace(c, encoding=ENC_NONE)
+            for c in schema.columns
+        ]
         self._page_elems = [
             elements_per_page(c, page_size) for c in schema.columns
         ]
@@ -102,6 +146,12 @@ class ClusterBuilder:
         # seal() runs on one thread at a time; the scratch amortizes the
         # column-wide preconditioning temporaries across clusters
         self._scratch = EncodeScratch()
+        # None = no explicit table: every page uses the live
+        # ``self.codec``/``self.level`` (kept mutable for tests and
+        # ad-hoc callers)
+        self._column_codecs = (
+            list(column_codecs) if column_codecs is not None else None
+        )
 
     # -- filling -----------------------------------------------------------
 
@@ -146,174 +196,287 @@ class ClusterBuilder:
         """Zero-copy view of all elements accumulated for column ``idx``."""
         return self._cols[idx].view()
 
-    def _page_jobs(self) -> List[Tuple]:
-        jobs: List[Tuple] = []
-        for col in self.schema.columns:
-            elems = self._cols[col.index].view()
-            per = self._page_elems[col.index]
-            for start in range(0, len(elems), per):
-                jobs.append((col, elems[start : start + per]))
-        return jobs
+    def _page_codec(self, column: int) -> Tuple[int, int]:
+        """(codec, level) for the column's next page, after the adaptive
+        policy's say."""
+        if self._column_codecs is not None:
+            codec, level = self._column_codecs[column]
+        else:
+            codec, level = self.codec, self.level
+        if self._policy is not None:
+            codec = self._policy.effective_codec(column, codec)
+        return codec, level
 
     def seal(self, pool=None) -> SealedCluster:
         """Serialize + compress all pages.  No lock required (paper §4.1).
 
         The single compression code path behind both ROOT-style IMT in the
         sequential writer and the shared writer-owned pool of the parallel
-        writer.  With ``pool`` (any Executor with ``map``) page builds are
-        distributed over the pool's threads; serially, whole columns are
-        preconditioned in O(1) vectorized calls and, for the ``none``
-        codec, written straight into the blob.
-        """
-        t0 = time.perf_counter_ns()
-        if pool is None:
-            blob, descs, compress_ns = self._seal_serial()
-        else:
-            jobs = self._page_jobs()
-            results = list(
-                pool.map(
-                    lambda j: _build_page_timed(
-                        j, self.codec, self.level, self.checksum
-                    ),
-                    jobs,
-                )
-            )
-            # single-allocation blob assembly
-            total = sum(r[1].size for r in results)
-            blob = bytearray(total)
-            mv = memoryview(blob)
-            descs = []
-            pos = 0
-            compress_ns = 0
-            for payload, desc, build_ns in results:
-                desc.offset = pos
-                mv[pos : pos + desc.size] = payload
-                pos += desc.size
-                descs.append(desc)
-                compress_ns += build_ns
-        sealed = SealedCluster(
-            blob=blob,
-            n_entries=self.n_entries,
-            n_elements=[len(c) for c in self._cols],
-            pages=descs,
-            uncompressed_bytes=self.uncompressed_bytes,
-            seal_ns=time.perf_counter_ns() - t0,
-            compress_ns=compress_ns,
-        )
-        self._reset()
-        return sealed
+        writer.  Pass 1 preconditions whole columns in O(1) vectorized
+        calls on this thread; pass 2 compresses chunk-granular jobs — over
+        ``pool`` (any Executor with ``map``) when given, serially
+        otherwise, with byte-identical output either way.
 
-    def _seal_serial(self):
-        """Column-batched serial seal: one precondition pass per column.
-
-        Bit-identical to the per-page path (``build_page``), minus its
-        per-page Python dispatch, temporaries and copies.
+        While the adaptive policy is still *sampling* a column, only its
+        next ``sample_pages`` pages are compressed up front (the trial);
+        the column's remaining pages are marked ``_PENDING`` and resolve
+        — mid-seal, once the trial results are recorded — to either the
+        codec or raw storage, so a doomed codec never burns more than the
+        sample on its first cluster.
         """
-        store = self.codec == comp.CODEC_NONE
-        if store:
-            # page sizes are known up front: build the blob in place
-            blob = bytearray(
-                sum(len(c) * c.dtype.itemsize for c in self._cols)
-            )
-            target = np.frombuffer(memoryview(blob), dtype=np.uint8)
-        else:
-            blob = None
-            target = None
-            parts: List[bytes] = []
-        descs: List[PageDesc] = []
-        pos = 0
-        compress_ns = 0
-        for col in self.schema.columns:
+        t0 = _ns()
+        # pass 1: column-batched preconditioning -> per-page plan
+        # [column, n_elements, raw_u8_view, codec, level] (mutable: the
+        # codec slot of _PENDING pages is resolved in pass 2).  Each
+        # column gets its own scratch key so every page's payload stays
+        # alive until assembly.
+        plan: List[List] = []
+        for col in self._specs:
             elems = self._cols[col.index].view()
             n = len(elems)
             if n == 0:
                 continue
             per = self._page_elems[col.index]
             itemb = elems.dtype.itemsize
+            codec, level = self._page_codec(col.index)
+            budget = None
+            if (
+                self._policy is not None
+                and codec != comp.CODEC_NONE
+                and self._policy.decision(col.index) is None
+            ):
+                budget = self._policy.remaining_sample(col.index)
             raw_all = precondition_column_pages(
-                elems, col.encoding, per, self._scratch
+                elems, col.encoding, per, self._scratch,
+                out_key=f"u8:{col.index}",
             )
-            for start in range(0, n, per):
+            for pi, start in enumerate(range(0, n, per)):
                 count = min(per, n - start)
-                raw = raw_all[start * itemb : (start + count) * itemb]
-                nbytes = count * itemb
-                if store:
-                    payload_len = nbytes
-                    target[pos : pos + nbytes] = raw
-                    crc_src = target[pos : pos + nbytes]
-                    used_codec = comp.CODEC_NONE
+                page_codec = (
+                    _PENDING if budget is not None and pi >= budget else codec
+                )
+                plan.append([
+                    col.index, count,
+                    raw_all[start * itemb : (start + count) * itemb],
+                    page_codec, level,
+                ])
+        # pass 2: chunk-granular compression
+        if pool is None:
+            payloads, build_ns = self._compress_serial(plan)
+        else:
+            payloads, build_ns = self._compress_pooled(plan, pool)
+        blob, descs, compress_ns, codec_stats = self._assemble(
+            plan, payloads, build_ns
+        )
+        sealed = SealedCluster(
+            blob=blob,
+            n_entries=self.n_entries,
+            n_elements=[len(c) for c in self._cols],
+            pages=descs,
+            uncompressed_bytes=self.uncompressed_bytes,
+            seal_ns=_ns() - t0,
+            compress_ns=compress_ns,
+            codec_stats=codec_stats,
+        )
+        self._reset()
+        return sealed
+
+    def _record_trial(self, ci: int, raw_len: int, size: int) -> None:
+        if self._policy is not None:
+            self._policy.record(ci, raw_len, size)
+
+    def _resolve_pending(self, ci: int) -> int:
+        """A _PENDING page's codec, once its column's trial is recorded.
+
+        Falls back to the configured codec when the sample is still short
+        (the column simply had fewer pages than the sample wants)."""
+        codec, _level = self._page_codec(ci)
+        return codec
+
+    def _compress_serial(self, plan):
+        """Compress every planned page on this thread (member-framed)."""
+        payloads: List[Optional[List[bytes]]] = []
+        build_ns: List[int] = []
+        for entry in plan:
+            ci, _count, raw, codec, level = entry
+            if codec == _PENDING:
+                # the column's trial pages precede this page in the plan,
+                # so their ratios are recorded by now
+                codec = entry[3] = self._resolve_pending(ci)
+            if codec == comp.CODEC_NONE:
+                payloads.append(None)
+                build_ns.append(0)
+                continue
+            tb = _ns()
+            parts = comp.compress_parts(raw, codec, level, self.chunk_bytes)
+            build_ns.append(_ns() - tb)
+            payloads.append(parts)
+            self._record_trial(ci, len(raw), sum(len(p) for p in parts))
+        return payloads, build_ns
+
+    def _compress_pooled(self, plan, pool):
+        """Distribute chunk-granular compression jobs over ``pool``.
+
+        Jobs are (page, member) pairs: one small page is one job, a page
+        above ``chunk_bytes`` fans out into one job per member — which is
+        how a single producer's seal saturates the whole pool.  ``map``
+        preserves order, so reassembly (and the resulting bytes) match
+        the serial path exactly.  _PENDING pages wait for the first
+        phase's trial results, then compress (or store) in a second
+        phase — an extra barrier paid only while the policy samples.
+        """
+        payloads: List[Optional[List[bytes]]] = [None] * len(plan)
+        build_ns: List[int] = [0] * len(plan)
+
+        def run(job):
+            i, a, b = job
+            _ci, _count, raw, codec, level = plan[i]
+            c = comp.require(codec)
+            if level < 0:
+                level = c.default_level
+            tb = _ns()
+            out = c.compress(memoryview(raw)[a:b], level)
+            return i, out, _ns() - tb
+
+        def submit(indices):
+            jobs: List[Tuple[int, int, int]] = []
+            for i in indices:
+                raw = plan[i][2]
+                for a, b in comp.chunk_ranges(len(raw), self.chunk_bytes):
+                    jobs.append((i, a, b))
+            for i, out, dt in pool.map(run, jobs):
+                if payloads[i] is None:
+                    payloads[i] = []
+                payloads[i].append(out)
+                build_ns[i] += dt
+            for i in indices:
+                self._record_trial(
+                    plan[i][0], len(plan[i][2]),
+                    sum(len(p) for p in payloads[i]),
+                )
+
+        pending = [i for i, e in enumerate(plan) if e[3] == _PENDING]
+        submit([
+            i for i, e in enumerate(plan)
+            if e[3] not in (comp.CODEC_NONE, _PENDING)
+        ])
+        if pending:
+            for i in pending:
+                plan[i][3] = self._resolve_pending(plan[i][0])
+            submit([i for i in pending if plan[i][3] != comp.CODEC_NONE])
+        return payloads, build_ns
+
+    def _assemble(self, plan, payloads, build_ns):
+        """Fallback decisions, checksums, and single-allocation assembly."""
+        final: List[Tuple[Optional[List[bytes]], int, int]] = []
+        total = 0
+        for (ci, _count, raw, codec, _level), parts in zip(plan, payloads):
+            nbytes = len(raw)
+            if parts is None:
+                used, size = comp.CODEC_NONE, nbytes
+                parts = None
+            else:
+                size = sum(len(p) for p in parts)
+                if size >= nbytes:
+                    # Like ROOT, store uncompressed when compression does
+                    # not shrink the page.
+                    used, size, parts = comp.CODEC_NONE, nbytes, None
                 else:
-                    tb = time.perf_counter_ns()
-                    payload = comp.compress(raw, self.codec, self.level)
-                    compress_ns += time.perf_counter_ns() - tb
-                    used_codec = self.codec
-                    if len(payload) >= nbytes:
-                        payload, used_codec = bytes(raw), comp.CODEC_NONE
-                    payload_len = len(payload)
-                    parts.append(payload)
-                    crc_src = payload
-                descs.append(PageDesc(
-                    column=col.index,
-                    n_elements=count,
-                    offset=pos,
-                    size=payload_len,
-                    uncompressed_size=nbytes,
-                    checksum=zlib.crc32(crc_src) if self.checksum else 0,
-                    codec=used_codec,
-                ))
-                pos += payload_len
-        if not store:
-            blob = bytearray(pos)
-            mv = memoryview(blob)
-            at = 0
-            for payload in parts:
-                mv[at : at + len(payload)] = payload
-                at += len(payload)
-        return blob, descs, compress_ns
+                    used = codec
+            final.append((parts, used, size))
+            total += size
+        blob = bytearray(total)
+        mv = memoryview(blob)
+        descs: List[PageDesc] = []
+        codec_stats: Dict[int, List[int]] = {}
+        compress_ns = 0
+        pos = 0
+        for (ci, count, raw, _codec, _level), (parts, used, size), ns in zip(
+            plan, final, build_ns
+        ):
+            if parts is None:
+                parts = (raw,)
+            crc = 0
+            at = pos
+            for p in parts:
+                mv[at : at + len(p)] = p
+                if self.checksum:
+                    # per-chunk CRCs fold into the page checksum
+                    # incrementally: equals the whole-payload crc32
+                    crc = zlib.crc32(p, crc)
+                at += len(p)
+            descs.append(PageDesc(
+                column=ci,
+                n_elements=count,
+                offset=pos,
+                size=size,
+                uncompressed_size=len(raw),
+                checksum=crc,
+                codec=used,
+            ))
+            pos = at
+            compress_ns += ns
+            st = codec_stats.setdefault(used, [0, 0, 0, 0])
+            st[0] += 1
+            st[1] += len(raw)
+            st[2] += size
+            st[3] += ns
+        return blob, descs, compress_ns, codec_stats
 
     # -- page draining (unbuffered mode) -------------------------------------
 
-    def drain_full_pages(self) -> List[Tuple[bytes, PageDesc]]:
+    def drain_full_pages(self, pool=None) -> List[Tuple[bytes, PageDesc, int]]:
         """Build pages for every column that holds >= one full page.
 
         Used by the page-granular ("unbuffered") writer: compressed pages
         are written out immediately, only their descriptors are retained
-        until the cluster is finalized (paper §5).
+        until the cluster is finalized (paper §5).  ``pool`` parallelizes
+        the members of chunk-framed pages.  Yields ``(payload, desc,
+        build_ns)`` so writer stats can attribute the build time per codec.
         """
-        out: List[Tuple[bytes, PageDesc]] = []
-        for col in self.schema.columns:
+        out: List[Tuple[bytes, PageDesc, int]] = []
+        for col in self._specs:
             per = self._page_elems[col.index]
             start = self._drained[col.index]
             pending = len(self._cols[col.index]) - start
             if pending < per:
                 continue
             while pending >= per:
-                elems = self._cols[col.index].view(start, start + per)
-                payload, desc = build_page(
-                    col, elems, self.codec, self.level, self.checksum,
-                )
-                out.append((payload, desc))
+                out.append(self._drain_one(col, start, start + per, pool))
                 start += per
                 pending -= per
             self._drained[col.index] = start
         return out
 
-    def drain_rest(self) -> List[Tuple[bytes, PageDesc]]:
+    def drain_rest(self, pool=None) -> List[Tuple[bytes, PageDesc, int]]:
         """Build the final partial pages (cluster finalization)."""
-        out: List[Tuple[bytes, PageDesc]] = []
-        for col in self.schema.columns:
+        out: List[Tuple[bytes, PageDesc, int]] = []
+        for col in self._specs:
             start = self._drained[col.index]
             per = self._page_elems[col.index]
             end = len(self._cols[col.index])
             while start < end:
-                elems = self._cols[col.index].view(start, start + per)
-                payload, desc = build_page(
-                    col, elems, self.codec, self.level, self.checksum,
+                payload, desc, ns = self._drain_one(
+                    col, start, start + per, pool
                 )
-                out.append((payload, desc))
+                out.append((payload, desc, ns))
                 start += desc.n_elements
             self._drained[col.index] = start
         return out
+
+    def _drain_one(self, col, start, stop, pool):
+        codec, level = self._page_codec(col.index)
+        elems = self._cols[col.index].view(start, stop)
+        t0 = _ns()
+        payload, desc = build_page(
+            col, elems, codec, level, self.checksum, self.chunk_bytes, pool,
+        )
+        build_ns = _ns() - t0
+        if self._policy is not None and codec != comp.CODEC_NONE:
+            # after an in-page raw fallback desc.size == uncompressed_size,
+            # which records as ratio 1.0 — the right signal either way
+            self._policy.record(col.index, desc.uncompressed_size, desc.size)
+        return payload, desc, build_ns
 
     def finish_unbuffered(self) -> Tuple[int, List[int], int]:
         """Return (n_entries, per-column n_elements, uncompressed) and reset."""

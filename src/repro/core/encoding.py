@@ -165,7 +165,11 @@ def _batched_split_into(a: np.ndarray, per: int, out_u8: np.ndarray) -> None:
     Writes, for each page of ``per`` elements, that page's plane-split
     bytes contiguously into ``out_u8`` — bit-identical to running
     :func:`split_encode` page by page, but the full pages go through one
-    batched strided copy instead of a Python loop.
+    batched strided copy instead of a Python loop.  Large columns
+    dispatch the full-pages block to the Pallas ``byteshuffle`` kernel
+    when an accelerator backend is available (see
+    :func:`_resolve_pallas_shuffle`); the strided numpy copy is the
+    fallback and the reference.
     """
     if a.dtype.byteorder == ">":
         a = a.astype(a.dtype.newbyteorder("<"))
@@ -175,17 +179,32 @@ def _batched_split_into(a: np.ndarray, per: int, out_u8: np.ndarray) -> None:
     head = n_full * per
     if n_full:
         src = a[:head].view(np.uint8).reshape(n_full, per, nb)
-        np.copyto(
-            out_u8[: head * nb].reshape(n_full, nb, per), src.transpose(0, 2, 1)
+        done = False
+        use_pallas = _SHUFFLE_BACKEND == "pallas" or (
+            _SHUFFLE_BACKEND == "auto" and head * nb >= _SHUFFLE_PALLAS_MIN
         )
+        if use_pallas:
+            kernel = _resolve_pallas_shuffle()
+            if kernel:
+                try:
+                    out_u8[: head * nb].reshape(n_full, nb, per)[:] = kernel(src)
+                    done = True
+                except Exception:
+                    globals()["_pallas_shuffle"] = False
+        if not done:
+            np.copyto(
+                out_u8[: head * nb].reshape(n_full, nb, per),
+                src.transpose(0, 2, 1),
+            )
     if head < n:
         _split_into(a[head:], out_u8[head * nb :])
 
 
 def precondition_column_pages(
-    arr: np.ndarray, encoding: str, per: int, scratch: Optional[EncodeScratch] = None
+    arr: np.ndarray, encoding: str, per: int,
+    scratch: Optional[EncodeScratch] = None, out_key: str = "u8",
 ) -> np.ndarray:
-    """Precondition ALL pages of a column at once (the serial-seal fast path).
+    """Precondition ALL pages of a column at once (the seal fast path).
 
     Returns a ``uint8`` array holding each page's preconditioned bytes
     back to back: page ``p`` of ``k`` elements occupies the byte range
@@ -193,7 +212,10 @@ def precondition_column_pages(
     calling :func:`precondition_buffer` per page slice, but the per-page
     Python loop, temporaries and dispatch collapse into a handful of
     vectorized column-wide operations.  The result aliases ``scratch``
-    (or ``arr`` for the ``none`` encoding) under the usual rules.
+    (or ``arr`` for the ``none`` encoding) under the usual rules;
+    ``out_key`` selects which scratch buffer holds it, so a caller that
+    needs several columns' payloads alive at once (the chunk-parallel
+    pooled seal) can give each column its own key.
     """
     a = np.ascontiguousarray(arr)
     if encoding == ENC_NONE:
@@ -201,7 +223,7 @@ def precondition_column_pages(
     if scratch is None:
         scratch = EncodeScratch()
     if encoding == ENC_SPLIT:
-        out = scratch.array("u8", np.uint8, a.nbytes)
+        out = scratch.array(out_key, np.uint8, a.nbytes)
         _batched_split_into(a, per, out)
         return out
     if encoding == ENC_DELTA_ZIGZAG_SPLIT:
@@ -218,7 +240,7 @@ def precondition_column_pages(
         np.right_shift(d, 63, out=t)
         np.left_shift(d, 1, out=d)
         np.bitwise_xor(d, t, out=d)
-        out = scratch.array("u8", np.uint8, d.nbytes)
+        out = scratch.array(out_key, np.uint8, d.nbytes)
         _batched_split_into(d.view(np.uint64), per, out)
         return out
     raise ValueError(f"unknown encoding {encoding!r}")
@@ -380,6 +402,37 @@ def unprecondition(buf: bytes, encoding: str, dtype: np.dtype, n: int) -> np.nda
 _OFFSETS_BACKEND = os.environ.get("REPRO_OFFSETS_BACKEND", "auto").lower()
 _PALLAS_MIN_ELEMS = int(os.environ.get("REPRO_OFFSETS_PALLAS_MIN", "65536"))
 _pallas_scan = None  # resolved lazily; False once ruled out
+
+# Pallas byteshuffle dispatch for split preconditioning, same shape:
+# REPRO_SHUFFLE_BACKEND = auto | numpy | pallas, with a byte threshold
+# below which the strided numpy copy always wins.
+_SHUFFLE_BACKEND = os.environ.get("REPRO_SHUFFLE_BACKEND", "auto").lower()
+_SHUFFLE_PALLAS_MIN = int(os.environ.get("REPRO_SHUFFLE_PALLAS_MIN",
+                                         str(256 * 1024)))
+_pallas_shuffle = None  # resolved lazily; False once ruled out
+
+
+def _resolve_pallas_shuffle():
+    global _pallas_shuffle
+    if _pallas_shuffle is None:
+        # Same rule as the offsets dispatch: in auto mode never pay a cold
+        # jax import inside the seal path — only consider the kernel when
+        # the application already imported jax.  Stay unresolved (don't
+        # cache the negative) so a later jax import can still enable it.
+        if _SHUFFLE_BACKEND != "pallas" and "jax" not in sys.modules:
+            return False
+        try:
+            import jax
+
+            from repro.kernels.byteshuffle import byteshuffle_pages_host
+
+            if _SHUFFLE_BACKEND != "pallas" and jax.default_backend() == "cpu":
+                _pallas_shuffle = False
+            else:
+                _pallas_shuffle = byteshuffle_pages_host
+        except Exception:
+            _pallas_shuffle = False
+    return _pallas_shuffle
 
 
 def _resolve_pallas_scan():

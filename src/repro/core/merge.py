@@ -92,10 +92,19 @@ def _reencode_clusters(reader: RNTJReader, writer: ParallelWriter) -> None:
 
 
 def _needs_reencode(
-    reader: RNTJReader, options: Optional[WriteOptions], recompress: Optional[bool]
+    reader: RNTJReader,
+    out: ParallelWriter,
+    options: Optional[WriteOptions],
+    recompress: Optional[bool],
 ) -> bool:
     if recompress is not None:
         return recompress
+    # encodings are file-level state (e.g. a precondition=False source):
+    # raw-copying clusters whose per-column encodings differ from what the
+    # output header records would silently mis-decode, so such inputs
+    # always re-encode
+    if [c.encoding for c in reader.schema.columns] != out.column_encodings():
+        return True
     if options is None:
         return False  # no target codec named: raw copy, never recompress
     src = reader.options.get("codec")
@@ -131,7 +140,7 @@ def merge_files(
         out = ParallelWriter(schema, output, options)
         try:
             for r in readers:
-                if _needs_reencode(r, options, recompress):
+                if _needs_reencode(r, out, options, recompress):
                     _reencode_clusters(r, out)
                 else:
                     _copy_clusters(r, out)

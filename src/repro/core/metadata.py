@@ -22,13 +22,13 @@ from __future__ import annotations
 import json
 import struct
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from .pages import PageDesc
-from .schema import Schema
+from .schema import ENC_NONE, Schema
 
 MAGIC = b"RNTJ"
 VERSION = 1
@@ -92,7 +92,24 @@ def build_header(schema: Schema, options: dict) -> bytes:
 
 def parse_header(buf: bytes) -> Tuple[Schema, dict]:
     d = json.loads(unwrap_envelope(buf, ENV_HEADER))
-    return Schema.from_json(json.dumps(d["schema"])), d.get("options", {})
+    schema = Schema.from_json(json.dumps(d["schema"]))
+    options = d.get("options", {})
+    encodings = options.get("encodings")
+    if encodings is not None:
+        # restore the writer's EFFECTIVE per-column encodings over the
+        # derived defaults, so ALL readers — engine and legacy
+        # page-at-a-time alike — decode exactly what was written
+        schema.columns = [
+            c if c.encoding == e else dc_replace(c, encoding=e)
+            for c, e in zip(schema.columns, encodings)
+        ]
+    elif options.get("precondition") is False:
+        # older header without the encodings list: the writer stored
+        # every column verbatim
+        schema.columns = [
+            dc_replace(c, encoding=ENC_NONE) for c in schema.columns
+        ]
+    return schema, options
 
 
 # ---------------------------------------------------------------------------

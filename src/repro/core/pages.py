@@ -73,12 +73,20 @@ def build_page(
     codec: int,
     level: int = -1,
     checksum: bool = True,
+    chunk_bytes: int = 0,
+    pool=None,
 ) -> (bytes, PageDesc):
     """Precondition + compress one page of elements.
 
     Runs with NO synchronization — this is the paper's §4.1 observation that
     serialization and compression parallelize perfectly once the unit of
     writing is relocatable.
+
+    With ``chunk_bytes > 0``, a page whose preconditioned payload exceeds
+    it is compressed as independent concatenated members (framed
+    chunking) — concurrently when ``pool`` is given — and the page
+    checksum folds over the members incrementally, which equals the
+    whole-payload CRC, so the on-disk format is unchanged.
 
     ``elements`` may be a zero-copy view into a live ColumnBuffer; the
     preconditioned bytes live in a per-thread scratch, so the returned
@@ -90,13 +98,19 @@ def build_page(
     if codec == comp.CODEC_NONE:
         # materialize: raw aliases the scratch (or the caller's buffer)
         payload = bytes(raw)
+        crc = zlib.crc32(payload) if checksum else 0
     else:
         # Like ROOT, fall back to storing uncompressed when compression
         # does not shrink the page.
-        payload = comp.compress(raw, codec, level)
-        if len(payload) >= uncompressed_size:
+        parts = comp.compress_parts(raw, codec, level, chunk_bytes, pool)
+        size = sum(len(p) for p in parts)
+        if size >= uncompressed_size:
             payload, used_codec = bytes(raw), comp.CODEC_NONE
-    crc = zlib.crc32(payload) if checksum else 0
+            crc = zlib.crc32(payload) if checksum else 0
+        else:
+            # per-chunk CRCs fold into the page checksum incrementally
+            crc = comp.crc32_parts(parts) if checksum else 0
+            payload = parts[0] if len(parts) == 1 else b"".join(parts)
     desc = PageDesc(
         column=col.index,
         n_elements=int(len(elements)),

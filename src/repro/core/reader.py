@@ -52,7 +52,7 @@ from .metadata import (
 )
 from .pages import PageDesc, _thread_scratch, decode_page_into
 from .schema import KIND_OFFSET, ColumnSpec, Schema, recompose_entries
-from .stats import ReaderStats
+from .stats import ReaderStats, _merge_codec_stats
 
 _ns = time.perf_counter_ns
 
@@ -282,10 +282,14 @@ class RNTJReader:
             t0 = _ns()
             unprecondition_pages_into(raw, col.encoding, per, dst,
                                       _thread_scratch())
-            return 0, _ns() - t0
+            nbytes = sum(d.size for d in run)
+            return 0, _ns() - t0, {
+                comp.CODEC_NONE: [len(run), nbytes, nbytes, 0]
+            }
 
         def _decode_pages(chunk):
             dec = deco = 0
+            per_codec = {}
             for d in chunk:
                 s = pos[id(d)]
                 a, b = decode_page_into(
@@ -294,7 +298,12 @@ class RNTJReader:
                 )
                 dec += a
                 deco += b
-            return dec, deco
+                st = per_codec.setdefault(d.codec, [0, 0, 0, 0])
+                st[0] += 1
+                st[1] += d.size
+                st[2] += d.uncompressed_size
+                st[3] += a
+            return dec, deco, per_codec
 
         pool = self._get_decode_pool()
         tasks = [(_decode_run, j) for j in run_jobs]
@@ -312,6 +321,9 @@ class RNTJReader:
             times = [fn(arg) for fn, arg in tasks]
         else:
             times = list(pool.map(lambda t: t[0](t[1]), tasks))
+        per_codec: Dict[int, List[int]] = {}
+        for _dec, _deco, pc in times:
+            _merge_codec_stats(per_codec, pc)
         self.stats.add_cluster_read(
             pages=len(descs),
             reads=len(ranges),
@@ -320,6 +332,7 @@ class RNTJReader:
             io_ns=io_ns,
             decompress_ns=sum(t[0] for t in times),
             decode_ns=sum(t[1] for t in times),
+            per_codec=per_codec,
         )
         return out
 

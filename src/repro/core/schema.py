@@ -27,7 +27,7 @@ producing columns::
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field as dc_field
+from dataclasses import dataclass, field as dc_field, replace as dc_replace
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -158,13 +158,24 @@ ENC_DELTA_ZIGZAG_SPLIT = "dzs"
 
 @dataclass(frozen=True)
 class ColumnSpec:
-    """A physical column of primitive fixed-size elements."""
+    """A physical column of primitive fixed-size elements.
+
+    ``codec``/``level`` are optional per-column entropy-coder overrides
+    (ROOT's per-column codec choice): ``None``/``-1`` defer to the
+    writer's ``WriteOptions`` (which may itself carry per-path overrides
+    — resolution order is ``WriteOptions.column_codecs`` >
+    ``ColumnSpec.codec`` > ``WriteOptions.codec``).  They are write-side
+    hints only: the codec actually used is recorded per page in
+    ``PageDesc.codec``, so readers never depend on these fields.
+    """
 
     index: int              # column id, dense 0..n-1
     path: str               # dotted field path, e.g. "fTracks._0.fIds"
     kind: int               # KIND_LEAF or KIND_OFFSET
     type: str               # primitive type name
     encoding: str           # preconditioning encoding id
+    codec: Optional[Any] = None   # codec name/id override (None = writer default)
+    level: int = -1               # codec level override (-1 = codec default)
 
     @property
     def dtype(self) -> np.dtype:
@@ -175,17 +186,23 @@ class ColumnSpec:
         return self.dtype.itemsize
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "index": self.index,
             "path": self.path,
             "kind": self.kind,
             "type": self.type,
             "encoding": self.encoding,
         }
+        if self.codec is not None:
+            d["codec"] = self.codec
+        if self.level >= 0:
+            d["level"] = self.level
+        return d
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "ColumnSpec":
-        return ColumnSpec(d["index"], d["path"], d["kind"], d["type"], d["encoding"])
+        return ColumnSpec(d["index"], d["path"], d["kind"], d["type"],
+                          d["encoding"], d.get("codec"), d.get("level", -1))
 
 
 def _default_encoding(kind: int, type_name: str) -> str:
@@ -272,6 +289,17 @@ class Schema:
         if missing:
             raise KeyError(f"unknown fields: {missing}")
         return Schema([by_name[n] for n in keep_fields])
+
+    def set_column_codec(self, path: str, codec, level: int = -1) -> "Schema":
+        """Attach a per-column codec override (returns ``self`` for
+        chaining).  Columns are write-side derived state — not part of
+        the serialized field tree — so this does not affect equality or
+        the on-disk header; the chosen codec lands per page in
+        ``PageDesc.codec``."""
+        idx = self.column_of_path[path]
+        self.columns[idx] = dc_replace(self.columns[idx], codec=codec,
+                                       level=level)
+        return self
 
     def __eq__(self, other: object) -> bool:
         return isinstance(other, Schema) and self.to_json() == other.to_json()

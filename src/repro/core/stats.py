@@ -22,6 +22,33 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional
+
+
+def _merge_codec_stats(into: Dict[int, List[int]],
+                       stats: Optional[Dict[int, List[int]]]) -> None:
+    """Fold one ``{codec: [pages, bytes_in, bytes_out, ns]}`` map into
+    another (the shared shape of writer and reader per-codec entries)."""
+    if not stats:
+        return
+    for cid, vals in stats.items():
+        st = into.setdefault(cid, [0, 0, 0, 0])
+        for k in range(4):
+            st[k] += vals[k]
+
+
+def _codec_stats_dict(per_codec: Dict[int, List[int]]) -> dict:
+    from . import compression as comp
+
+    return {
+        comp.codec_name(cid): {
+            "pages": st[0],
+            "bytes_in": st[1],
+            "bytes_out": st[2],
+            "ms": st[3] / 1e6,
+        }
+        for cid, st in sorted(per_codec.items())
+    }
 
 
 @dataclass
@@ -120,6 +147,9 @@ class WriterStats:
     entries: int = 0
     clusters: int = 0
     pages: int = 0
+    # codec id -> [pages, bytes_in (uncompressed), bytes_out (stored),
+    # compress_ns]: the per-codec attribution of the engine's work
+    per_codec: Dict[int, List[int]] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         self._mu = threading.Lock()
@@ -137,14 +167,22 @@ class WriterStats:
             self.entries += sealed.n_entries
             self.uncompressed_bytes += sealed.uncompressed_bytes
             self.compressed_bytes += sealed.size
+            _merge_codec_stats(self.per_codec,
+                               getattr(sealed, "codec_stats", None))
 
     def add_page(self, compressed_size: int, commit_ns: int = 0,
-                 io_ns: int = 0) -> None:
+                 io_ns: int = 0, codec: Optional[int] = None,
+                 uncompressed_size: int = 0, build_ns: int = 0) -> None:
         with self._mu:
             self.pages += 1
             self.compressed_bytes += compressed_size
             self.commit_ns += commit_ns
             self.io_ns += io_ns
+            self.compress_ns += build_ns
+            if codec is not None:
+                _merge_codec_stats(self.per_codec, {
+                    codec: [1, uncompressed_size, compressed_size, build_ns]
+                })
 
     def add_cluster_meta(self, n_entries: int, uncompressed_bytes: int) -> None:
         with self._mu:
@@ -193,6 +231,7 @@ class WriterStats:
             "commit_ms": self.commit_ns / 1e6,
             "io_ms": self.io_ns / 1e6,
             "phases_ms": self.phases_ms(),
+            "per_codec": _codec_stats_dict(self.per_codec),
             "write_calls": self.io.write_calls,
             "bytes_written": self.io.bytes_written,
             "fallocate_calls": self.io.fallocate_calls,
@@ -228,6 +267,9 @@ class ReaderStats:
     decompress_ns: int = 0    # summed per-page entropy decode
     decode_ns: int = 0        # summed per-page unprecondition/integration
     wait_ns: int = 0          # consumer blocked on the prefetch pipeline
+    # codec id -> [pages, bytes_in (stored), bytes_out (decoded),
+    # decompress_ns]: the read-side mirror of WriterStats.per_codec
+    per_codec: Dict[int, List[int]] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         self._mu = threading.Lock()
@@ -243,6 +285,7 @@ class ReaderStats:
         io_ns: int,
         decompress_ns: int,
         decode_ns: int,
+        per_codec: Optional[Dict[int, List[int]]] = None,
     ) -> None:
         with self._mu:
             self.clusters += 1
@@ -253,6 +296,7 @@ class ReaderStats:
             self.io_ns += io_ns
             self.decompress_ns += decompress_ns
             self.decode_ns += decode_ns
+            _merge_codec_stats(self.per_codec, per_codec)
 
     def add_wait_ns(self, ns: int) -> None:
         with self._mu:
@@ -284,6 +328,7 @@ class ReaderStats:
             "decode_ms": self.decode_ns / 1e6,
             "wait_ms": self.wait_ns / 1e6,
             "phases_ms": self.phases_ms(),
+            "per_codec": _codec_stats_dict(self.per_codec),
             "read_calls": self.io.read_calls,
             "bytes_read": self.io.bytes_read,
         }

@@ -67,6 +67,23 @@ class WriteOptions:
     imt_workers: int = 0                     # shared page-compression pool size
     pipelined_seal: bool = False             # double-buffered background seal+commit
     checksum: bool = True
+    # -- codec engine (DESIGN.md §5) ----------------------------------------
+    # pages whose preconditioned payload exceeds this are compressed as
+    # independent concatenated members ("framed chunking"), concurrently
+    # on the writer's pool; 0 disables framing
+    codec_chunk_bytes: int = 256 * 1024
+    # per-column codec overrides: column path -> codec name/id, or a
+    # (codec, level) pair; wins over ColumnSpec.codec and options.codec
+    column_codecs: Optional[Dict[str, object]] = None
+    # adaptive policy: sample each column's first sealed pages and fall
+    # back to raw storage (CODEC_NONE, as ROOT does) when the achieved
+    # compressed/uncompressed ratio exceeds adaptive_threshold
+    adaptive_codec: bool = False
+    adaptive_sample_pages: int = 8
+    adaptive_threshold: float = 0.9
+    # split/delta preconditioning of pages; False stores every column's
+    # elements verbatim (recorded in the header so readers decode right)
+    precondition: bool = True
 
     @property
     def codec_id(self) -> int:
@@ -78,6 +95,8 @@ class WriteOptions:
             "codec": self.codec_id,
             "cluster_bytes": self.cluster_bytes,
             "buffered": self.buffered,
+            "chunk_bytes": self.codec_chunk_bytes,
+            "precondition": self.precondition,
         }
 
 
@@ -103,16 +122,71 @@ class _WriterBase:
         # (sequential IMT and all parallel producers), sized independently
         # of the producer count
         self._pool = comp.make_pool(self.options.imt_workers, "rntj-compress")
-        # header goes first; its location is fixed so no lock is needed yet
-        hdr = build_header(schema, self.options.as_dict())
+        # codec-engine state shared by every builder of this writer: the
+        # per-column (codec, level) resolution and the adaptive policy
+        self._column_codecs = self._resolve_column_codecs()
+        self._policy = (
+            comp.CodecPolicy(
+                schema.n_columns,
+                self.options.adaptive_sample_pages,
+                self.options.adaptive_threshold,
+            )
+            if self.options.adaptive_codec
+            else None
+        )
+        # header goes first; its location is fixed so no lock is needed yet.
+        # It records the EFFECTIVE per-column encodings (a reused schema —
+        # e.g. one parsed from a precondition=False file — may carry
+        # non-default encodings): readers restore them verbatim, so what
+        # the builders encode and what readers decode can never diverge.
+        hdr_opts = self.options.as_dict()
+        hdr_opts["encodings"] = self.column_encodings()
+        hdr = build_header(schema, hdr_opts)
         off = self.sink.reserve(len(hdr))
         self.sink.pwrite(off, hdr)
         self._header_loc = (off, len(hdr))
 
+    def column_encodings(self) -> List[str]:
+        """The encodings this writer's pages actually use."""
+        if not self.options.precondition:
+            return ["none"] * self.schema.n_columns
+        return [c.encoding for c in self.schema.columns]
+
+    def _resolve_column_codecs(self):
+        """Per-column (codec_id, level): ``WriteOptions.column_codecs`` >
+        ``ColumnSpec.codec`` > ``WriteOptions.codec``.  ``None`` when no
+        override exists (builders then track the live default)."""
+        o = self.options
+        overrides = o.column_codecs or {}
+        unknown = [p for p in overrides if p not in self.schema.column_of_path]
+        if unknown:
+            raise KeyError(
+                f"column_codecs names unknown column path(s): {unknown}"
+            )
+        if not overrides and all(c.codec is None for c in self.schema.columns):
+            return None
+        out = []
+        for col in self.schema.columns:
+            codec, level = o.codec_id, o.level
+            if col.codec is not None:
+                codec, level = comp.codec_id(col.codec), col.level
+            ov = overrides.get(col.path)
+            if ov is not None:
+                if isinstance(ov, (tuple, list)):
+                    codec, level = comp.codec_id(ov[0]), int(ov[1])
+                else:
+                    codec, level = comp.codec_id(ov), -1
+            out.append((codec, level))
+        return out
+
     def _make_builder(self) -> ClusterBuilder:
         o = self.options
         return ClusterBuilder(self.schema, o.page_size, o.codec_id, o.level,
-                              o.checksum)
+                              o.checksum,
+                              column_codecs=self._column_codecs,
+                              chunk_bytes=o.codec_chunk_bytes,
+                              policy=self._policy,
+                              precondition=o.precondition)
 
     # -- commit protocol ----------------------------------------------------
 
@@ -164,7 +238,8 @@ class _WriterBase:
                 self._commit_error = e
             raise
 
-    def _commit_page(self, payload: bytes, desc: PageDesc) -> PageDesc:
+    def _commit_page(self, payload: bytes, desc: PageDesc,
+                     build_ns: int = 0) -> PageDesc:
         """Page-granular critical section (unbuffered mode)."""
         t0 = _ns()
         with self.lock:
@@ -173,7 +248,10 @@ class _WriterBase:
             self._pwrite_or_latch(off, payload)
             io_ns = _ns() - t_io
         desc.offset = off
-        self.stats.add_page(len(payload), commit_ns=_ns() - t0, io_ns=io_ns)
+        self.stats.add_page(len(payload), commit_ns=_ns() - t0, io_ns=io_ns,
+                            codec=desc.codec,
+                            uncompressed_size=desc.uncompressed_size,
+                            build_ns=build_ns)
         return desc
 
     def _commit_cluster_meta_unbuffered(
@@ -265,8 +343,17 @@ class _PipelinedSealer:
         self._spare: Optional[ClusterBuilder] = None
 
     def _run(self, builder: ClusterBuilder) -> ClusterBuilder:
-        sealed = builder.seal(self._writer._pool)
-        self._writer._commit_cluster(sealed)
+        try:
+            sealed = builder.seal(self._writer._pool)
+            self._writer._commit_cluster(sealed)
+        except BaseException as e:
+            # the cluster's data is lost (its builder was handed off):
+            # poison finalization directly, so even a caller that
+            # swallows the re-raised error at the next wait() can never
+            # close a footer over the missing entries
+            if self._writer._commit_error is None:
+                self._writer._commit_error = e
+            raise
         return builder  # drained: its buffers are reusable now
 
     def submit(self, builder: ClusterBuilder) -> ClusterBuilder:
@@ -393,8 +480,10 @@ class FillContext:
     def _maybe_flush(self) -> None:
         o = self.writer.options
         if not o.buffered:
-            for payload, desc in self.builder.drain_full_pages():
-                self._page_buf.append(self.writer._commit_page(payload, desc))
+            # the writer pool parallelizes chunk-framed page members; the
+            # drain itself runs on this producer thread
+            for payload, desc, ns in self.builder.drain_full_pages(self.writer._pool):
+                self._page_buf.append(self.writer._commit_page(payload, desc, ns))
         if self.builder.uncompressed_bytes >= o.cluster_bytes:
             self.flush_cluster()
 
@@ -409,8 +498,8 @@ class FillContext:
             else:
                 self.writer._commit_cluster(self.builder.seal(self.writer._pool))
         else:
-            for payload, desc in self.builder.drain_rest():
-                self._page_buf.append(self.writer._commit_page(payload, desc))
+            for payload, desc, ns in self.builder.drain_rest(self.writer._pool):
+                self._page_buf.append(self.writer._commit_page(payload, desc, ns))
             n_entries, n_elements, unc = self.builder.finish_unbuffered()
             self.writer._commit_cluster_meta_unbuffered(
                 n_entries, n_elements, self._page_buf, unc

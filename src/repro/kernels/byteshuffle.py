@@ -40,3 +40,62 @@ def byteshuffle(
         interpret=interpret,
     )(x)
     return out[:, :n]
+
+
+def _shuffle_pages_kernel(x_ref, o_ref):
+    # x block: (1, BN, itemsize) uint8 -> out block (1, itemsize, BN)
+    o_ref[...] = jnp.swapaxes(x_ref[...], 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def byteshuffle_pages(
+    pages: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = False
+) -> jax.Array:
+    """(P, per, itemsize) uint8 -> (P, itemsize, per): page-wise planes.
+
+    The column-batched form the seal hot path wants: every full page of a
+    column is split in one kernel launch, page ``p``'s byte planes landing
+    contiguously in ``out[p]``.  The grid walks (page, block-within-page);
+    a page is its own independent transpose, so blocks never cross page
+    boundaries.
+    """
+    n_pages, per, itemsize = pages.shape
+    blk = min(block, per)
+    pad = (-per) % blk
+    x = jnp.pad(pages, ((0, 0), (0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _shuffle_pages_kernel,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_pages, itemsize, x.shape[1]), jnp.uint8
+        ),
+        grid=(n_pages, x.shape[1] // blk),
+        in_specs=[pl.BlockSpec((1, blk, itemsize), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, itemsize, blk), lambda i, j: (i, 0, j)),
+        interpret=interpret,
+    )(x)
+    return out[:, :, :per]
+
+
+def byteshuffle_host(planes) -> "jax.Array":
+    """Numpy-in / numpy-out single-buffer entry point.
+
+    ``planes`` is the (N, itemsize) uint8 view of one contiguous
+    primitive array; returns the (itemsize, N) plane-split matrix as a
+    host array.  On a CPU-only jax backend the kernel runs in interpret
+    mode (used by tests; the dispatcher in ``repro.core.encoding`` does
+    not select this path on CPU unless forced).
+    """
+    import numpy as np
+
+    x = jnp.asarray(np.ascontiguousarray(planes), dtype=jnp.uint8)
+    interpret = jax.default_backend() == "cpu"
+    return np.asarray(byteshuffle(x, interpret=interpret))
+
+
+def byteshuffle_pages_host(pages) -> "jax.Array":
+    """Numpy-in / numpy-out page-batched entry point (seal hot path)."""
+    import numpy as np
+
+    x = jnp.asarray(np.ascontiguousarray(pages), dtype=jnp.uint8)
+    interpret = jax.default_backend() == "cpu"
+    return np.asarray(byteshuffle_pages(x, interpret=interpret))
