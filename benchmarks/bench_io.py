@@ -1,0 +1,349 @@
+"""I/O-engine benchmark — the commit path across sinks × submission modes.
+
+Measures, on the paper's synthetic nested-event workload at codec
+``none`` (so the commit path — serialize, assemble/gather, pwrite — is
+the whole story, with no entropy-coder noise):
+
+ 1. the **commit matrix** — DevNull / Memory sinks × {assembled
+    monolithic pwrite, scatter-gather pwritev, scatter + striped
+    parallel pwrite}: single-producer fill+seal+commit wall time and the
+    phase breakdown.  Scatter eliminates the cluster-assembly memcpy;
+    striping turns one big extent write into parallel sub-extent jobs.
+ 2. **write-behind vs a throttled device** — a ThrottledSink whose
+    bandwidth sits ABOVE the producer's aggregate rate (storage can keep
+    up, but a synchronous commit still serializes producer and device).
+    Write-behind must hold fill+seal throughput within ~10% of the
+    /dev/null ceiling while the synchronous path pays the full device
+    time on the producer's clock.
+ 3. a **parallel-writer cell** — 4 producers into one MemorySink file,
+    assembled vs the full engine (scatter + striped + write-behind).
+
+Every configuration's MemorySink file is asserted **byte-identical** to
+the assembled-path reference file, and the reference is cross-checked
+cluster by cluster through the vendored pre-PR-2 seed reader — the
+engine changes how bytes are *submitted*, never what they are.
+
+Emits ``BENCH_io.json`` (repo root by default).
+
+Run:  PYTHONPATH=src python benchmarks/bench_io.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from _harness import (  # noqa: F401
+    EVENT_SCHEMA, REPO_ROOT, prebuild, probe_parallel_capacity,
+)
+from _legacy_seed_reader import SeedRNTJReader
+
+from repro.core import (  # noqa: E402
+    DevNullSink, MemorySink, ParallelWriter, RNTJReader, SequentialWriter,
+    ThrottledSink, WriteOptions,
+)
+
+# big pages, moderate clusters: the commit path moves MB-scale extents
+# (where assembly memcpys and monolithic pwrites hurt) while leaving
+# enough commit points for write-behind overlap to matter
+PAGE = 256 * 1024
+CLUSTER = 2 * 1024 * 1024
+
+MODES: Dict[str, dict] = {
+    "assembled": dict(scatter_commit=False),
+    "scatter": dict(scatter_commit=True),
+    "scatter+striped": dict(scatter_commit=True, io_stripe_bytes=512 * 1024,
+                            io_workers=4),
+}
+
+
+def base_options(**over) -> WriteOptions:
+    # precondition=False + codec none + checksum off isolates the commit
+    # layer: fill, serialize-plan, (assemble?), pwrite — the bytes the
+    # paper's §5 storage wall actually moves, with no codec/encoding/CRC
+    # CPU on top of them
+    opts = dict(codec="none", page_size=PAGE, cluster_bytes=CLUSTER,
+                precondition=False, checksum=False)
+    opts.update(over)
+    return WriteOptions(**opts)
+
+
+def fill_all(writer, batches) -> float:
+    t0 = time.perf_counter()
+    for b in batches:
+        writer.fill_batch(b)
+    writer.close()
+    return time.perf_counter() - t0
+
+
+def run_single(sink_factory, batches, opts: WriteOptions, repeats: int):
+    best, stats = float("inf"), None
+    for _ in range(repeats):
+        w = SequentialWriter(EVENT_SCHEMA, sink_factory(), opts)
+        wall = fill_all(w, batches)
+        if wall < best:
+            best, stats = wall, w.stats
+    return best, stats
+
+
+def run_interleaved(sink_factory, batches, configs: Dict[str, WriteOptions],
+                    repeats: int):
+    """Best-of-N walls with the configs interleaved per round, so slow
+    drift on a shared container cancels out of their ratios."""
+    best = {name: (float("inf"), None) for name in configs}
+    for _ in range(repeats):
+        for name, opts in configs.items():
+            w = SequentialWriter(EVENT_SCHEMA, sink_factory(), opts)
+            wall = fill_all(w, batches)
+            if wall < best[name][0]:
+                best[name] = (wall, w.stats)
+    return best
+
+
+def reference_file(batches, opts: WriteOptions) -> MemorySink:
+    sink = MemorySink()
+    w = SequentialWriter(EVENT_SCHEMA, sink, opts)
+    fill_all(w, batches)
+    return sink
+
+
+def assert_identical(ref: MemorySink, sink: MemorySink, label: str) -> None:
+    if bytes(ref.buf) != bytes(sink.buf):
+        raise SystemExit(f"byte-identity violated: {label}")
+
+
+def seed_reader_crosscheck(sink: MemorySink) -> int:
+    """The unmodified pre-PR-2 seed reader must fully decode the file and
+    agree with the read engine, cluster by cluster."""
+    seed = SeedRNTJReader(sink)
+    engine = RNTJReader(sink)
+    clusters = engine.n_clusters
+    for ci in range(clusters):
+        a, b = seed.read_cluster(ci), engine.read_cluster(ci)
+        for k in b:
+            if not np.array_equal(a[k], b[k]):
+                raise SystemExit(f"seed reader mismatch: cluster {ci} col {k}")
+    return clusters
+
+
+# ---------------------------------------------------------------------------
+# 1. the commit matrix
+
+
+def run_matrix(batches, nbytes: int, repeats: int, out: dict) -> None:
+    print("== commit matrix: sink x submission mode (codec none) ==")
+    ref = reference_file(batches, base_options(**MODES["assembled"]))
+    clusters = seed_reader_crosscheck(ref)
+    print(f"  reference file: {len(ref.buf) / 1e6:.1f} MB, {clusters} "
+          "clusters, seed-reader verified")
+    out["matrix"] = []
+    # preallocated memory sink: the matrix measures the commit path's
+    # copies/submissions, not bytearray realloc traffic
+    cap = int(nbytes * 1.25)
+    sinks = (("devnull", DevNullSink), ("memory", lambda: MemorySink(cap)))
+    for sink_name, factory in sinks:
+        configs = {m: base_options(**over) for m, over in MODES.items()}
+        results = run_interleaved(factory, batches, configs, repeats)
+        for mode, (wall, stats) in results.items():
+            d = stats.as_dict()
+            rec = {
+                "sink": sink_name,
+                "mode": mode,
+                "wall_s": round(wall, 4),
+                "mb_s": round(nbytes / wall / 1e6, 1),
+                "seal_ms": round(d["seal_ms"], 1),
+                "commit_ms": round(d["commit_ms"], 1),
+                "io_ms": round(d["io_ms"], 1),
+                "write_calls": d["write_calls"],
+                "writev_calls": d["writev_calls"],
+            }
+            if sink_name == "memory":
+                sink = MemorySink()
+                fill_all(SequentialWriter(EVENT_SCHEMA, sink,
+                                          configs[mode]), batches)
+                assert_identical(ref, sink, f"{sink_name}/{mode}")
+                rec["byte_identical"] = True
+            out["matrix"].append(rec)
+            print(f"  {sink_name:7s} {mode:16s} {rec['mb_s']:8.1f} MB/s  "
+                  f"seal {rec['seal_ms']:7.1f} ms  commit {rec['commit_ms']:6.1f} ms")
+
+    def wall(sink, mode):
+        return next(r for r in out["matrix"]
+                    if r["sink"] == sink and r["mode"] == mode)["wall_s"]
+
+    # engine-best vs the assembled monolithic pwrite: striping only pays
+    # where the write itself has cost (memory/file); on devnull the win
+    # is the eliminated assembly memcpy alone
+    out["speedup_engine_best"] = {
+        s: round(
+            wall(s, "assembled")
+            / min(wall(s, "scatter"), wall(s, "scatter+striped")), 3)
+        for s in ("devnull", "memory")
+    }
+    out["speedup_scatter_striped"] = {
+        s: round(wall(s, "assembled") / wall(s, "scatter+striped"), 3)
+        for s in ("devnull", "memory")
+    }
+    for s, x in out["speedup_engine_best"].items():
+        print(f"  {s}: engine best vs assembled monolithic = {x:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# 2. write-behind vs a throttled device
+
+
+def run_write_behind(batches, nbytes: int, repeats: int, out: dict) -> None:
+    print("== write-behind: throttled sink above the producer rate ==")
+    # realistic producer config (checksums on, like every default writer):
+    # the question is purely whether queued draining hides device time
+    # realistic checksummed producer, 8 MB clusters: fewer/longer device
+    # sleeps, so the ThrottledSink model's per-sleep scheduler overshoot
+    # (0.5-2 ms on loaded CI boxes) amortizes out of the comparison
+    wb_base = dict(**MODES["scatter"], checksum=True,
+                   cluster_bytes=8 * 1024 * 1024)
+    probe_wall, _ = run_single(
+        DevNullSink, batches, base_options(**wb_base), max(1, repeats // 2)
+    )
+    bw = 2.0 * nbytes / probe_wall  # storage CAN keep up — only overlap
+    print(f"  producer rate {nbytes / probe_wall / 1e6:.0f} MB/s -> "
+          f"throttle at {bw / 1e6:.0f} MB/s")
+
+    def throttled():
+        return ThrottledSink(DevNullSink(), bw=bw)
+
+    # all three interleaved per round (incl. the devnull ceiling), so box
+    # drift cancels out of the ratios the acceptance criterion compares
+    opts_by_name = {
+        "devnull": base_options(**wb_base),
+        "sync": base_options(**wb_base),
+        # one drain worker: a single device stream needs no more, and on
+        # quota-throttled CI boxes every extra wakeup steals producer time
+        "write_behind": base_options(**wb_base,
+                                     io_inflight_bytes=32 * 1024 * 1024,
+                                     io_workers=1),
+    }
+    best = {name: (float("inf"), None) for name in opts_by_name}
+    for _ in range(repeats):
+        for name, opts in opts_by_name.items():
+            sink = DevNullSink() if name == "devnull" else throttled()
+            w = SequentialWriter(EVENT_SCHEMA, sink, opts)
+            wall = fill_all(w, batches)
+            if wall < best[name][0]:
+                best[name] = (wall, w.stats)
+    devnull_wall, _ = best["devnull"]
+    sync_wall, _ = best["sync"]
+    wb_wall, wb_stats = best["write_behind"]
+    d = wb_stats.as_dict()
+    out["write_behind"] = {
+        "throttle_mb_s": round(bw / 1e6, 1),
+        "devnull_wall_s": round(devnull_wall, 4),
+        "sync_wall_s": round(sync_wall, 4),
+        "write_behind_wall_s": round(wb_wall, 4),
+        "vs_devnull": round(wb_wall / devnull_wall, 3),
+        "sync_vs_devnull": round(sync_wall / devnull_wall, 3),
+        "io_stall_ms": round(d["io_stall_ms"], 1),
+        "io_jobs": d["io_jobs"],
+        "io_inflight_peak_bytes": d["io_inflight_peak_bytes"],
+    }
+    print(f"  devnull {devnull_wall:.3f}s | sync {sync_wall:.3f}s "
+          f"({sync_wall / devnull_wall:.2f}x) | write-behind {wb_wall:.3f}s "
+          f"({wb_wall / devnull_wall:.2f}x of devnull)")
+
+
+# ---------------------------------------------------------------------------
+# 3. parallel writers through the engine
+
+
+def run_parallel(batches, nbytes: int, n_threads: int, repeats: int,
+                 out: dict) -> None:
+    print(f"== parallel writer x{n_threads}: full engine vs assembled ==")
+
+    def run(opts: WriteOptions) -> float:
+        sink = MemorySink()
+        w = ParallelWriter(EVENT_SCHEMA, sink, opts)
+        chunks = [batches[i::n_threads] for i in range(n_threads)]
+
+        def produce(mine):
+            ctx = w.create_fill_context()
+            for b in mine:
+                ctx.fill_batch(b)
+            ctx.close()
+
+        ts = [threading.Thread(target=produce, args=(c,)) for c in chunks]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        w.close()
+        wall = time.perf_counter() - t0
+        # sanity: the parallel file stays readable with all entries
+        assert RNTJReader(sink).n_entries == sum(b.n_entries for b in batches)
+        return wall
+
+    configs = {
+        "assembled": base_options(**MODES["assembled"]),
+        "engine": base_options(**MODES["scatter"],
+                               io_inflight_bytes=8 * CLUSTER,
+                               io_workers=1),
+    }
+    walls = {name: float("inf") for name in configs}
+    for _ in range(repeats):  # interleaved: drift cancels out of the ratio
+        for name, opts in configs.items():
+            walls[name] = min(walls[name], run(opts))
+    plain, engine = walls["assembled"], walls["engine"]
+    out["parallel"] = {
+        "threads": n_threads,
+        "assembled_mb_s": round(nbytes / plain / 1e6, 1),
+        "engine_mb_s": round(nbytes / engine / 1e6, 1),
+        "speedup": round(plain / engine, 3),
+    }
+    print(f"  assembled {nbytes / plain / 1e6:8.1f} MB/s")
+    print(f"  engine    {nbytes / engine / 1e6:8.1f} MB/s "
+          f"({plain / engine:.2f}x)")
+
+
+def run(entries: int, quick: bool, out_path: Path) -> dict:
+    repeats = 2 if quick else 4
+    batches = prebuild("uniform", entries, 50_000)
+    nbytes = sum(sum(a.nbytes for a in b.data.values()) for b in batches)
+    out: dict = {
+        "benchmark": "bench_io",
+        "entries": entries,
+        "uncompressed_mb": round(nbytes / 1e6, 1),
+        "page_bytes": PAGE,
+        "cluster_bytes": CLUSTER,
+        "cpu_count": os.cpu_count(),
+        "parallel_capacity_2t": probe_parallel_capacity(),
+    }
+    print(f"workload: {out['uncompressed_mb']} MB uncompressed, "
+          f"parallel capacity {out['parallel_capacity_2t']}x")
+    run_matrix(batches, nbytes, repeats, out)
+    run_write_behind(batches, nbytes, repeats, out)
+    run_parallel(batches, nbytes, min(4, os.cpu_count() or 2), repeats, out)
+    out_path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {out_path}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--entries", type=int, default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload for CI smoke runs")
+    ap.add_argument("--out", type=str,
+                    default=str(REPO_ROOT / "BENCH_io.json"))
+    args = ap.parse_args()
+    entries = args.entries or (300_000 if args.quick else 2_500_000)
+    run(entries, args.quick, Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

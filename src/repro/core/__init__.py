@@ -40,7 +40,8 @@ from .container import (
 )
 from .stats import ReaderStats, WriterStats, CountingLock
 from .colbuf import ColumnBuffer
-from . import compression, encoding, metadata, pages, cluster, colbuf
+from .ioengine import IOEngine
+from . import compression, encoding, ioengine, metadata, pages, cluster, colbuf
 
 __all__ = [
     "Schema", "Field", "Leaf", "Collection", "Record", "ColumnSpec",
@@ -49,6 +50,7 @@ __all__ = [
     "FillContext", "write_entries", "RNTJReader", "ReadOptions",
     "BufferMerger", "merge_files", "Sink", "FileSink", "DevNullSink",
     "MemorySink", "ThrottledSink", "close_all", "open_sink", "WriterStats",
-    "ReaderStats", "CountingLock", "ColumnBuffer",
-    "compression", "encoding", "metadata", "pages", "cluster", "colbuf",
+    "ReaderStats", "CountingLock", "ColumnBuffer", "IOEngine",
+    "compression", "encoding", "ioengine", "metadata", "pages", "cluster",
+    "colbuf",
 ]

@@ -64,13 +64,25 @@ _PENDING = -2
 class SealedCluster:
     """A serialized+compressed cluster, ready to commit anywhere.
 
-    ``pages[i]`` descriptors carry cluster-relative offsets into ``blob``
-    (a bytes-like single allocation).  ``codec_stats`` maps codec id ->
+    Two carrier forms, byte-identical on disk (DESIGN.md §6):
+
+    * **assembled** — ``blob`` is a bytes-like single allocation holding
+      every page payload back to back (the reference path);
+    * **scatter-gather** — ``blob`` is ``None`` and ``iovecs`` is the
+      ordered list of page-payload buffers (bytes for compressed pages,
+      zero-copy views of the builder's detached buffers for raw pages),
+      handed to ``Sink.pwritev`` with no assembly memcpy.  The views keep
+      their backing arrays alive; the builder detached those buffers at
+      seal time, so queued write-behind commits stay valid while the
+      builder refills.
+
+    ``pages[i]`` descriptors carry cluster-relative offsets into the
+    payload stream either way.  ``codec_stats`` maps codec id ->
     ``[pages, bytes_in, bytes_out, ns]`` so writer stats can attribute
     bytes and time to each codec.
     """
 
-    blob: bytes                    # bytes-like (bytearray from seal())
+    blob: Optional[bytes]          # bytes-like (bytearray from seal())
     n_entries: int
     n_elements: List[int]          # per column
     pages: List[PageDesc]          # cluster-relative offsets
@@ -78,10 +90,27 @@ class SealedCluster:
     seal_ns: int = 0               # wall time of the whole seal
     compress_ns: int = 0           # summed per-page build time (CPU view)
     codec_stats: Optional[Dict[int, List[int]]] = None
+    iovecs: Optional[List] = None  # scatter-gather payload buffers
+    nbytes: int = -1               # total payload bytes (-1: use len(blob))
 
     @property
     def size(self) -> int:
+        if self.nbytes >= 0:
+            return self.nbytes
         return len(self.blob)
+
+    def iov_plan(self) -> List:
+        """The write plan: payload buffers in offset order (an assembled
+        cluster is simply a one-buffer plan)."""
+        if self.iovecs is not None:
+            return self.iovecs
+        return [self.blob]
+
+    def tobytes(self) -> bytes:
+        """Materialize the full payload (tests / reference comparisons)."""
+        if self.blob is not None:
+            return bytes(self.blob)
+        return b"".join(bytes(memoryview(p)) for p in self.iovecs)
 
     def rebase(self, base: int) -> List[PageDesc]:
         return [p.rebase(base) for p in self.pages]
@@ -113,13 +142,15 @@ class ClusterBuilder:
                  column_codecs: Optional[Sequence[Tuple[int, int]]] = None,
                  chunk_bytes: int = 0,
                  policy: Optional[comp.CodecPolicy] = None,
-                 precondition: bool = True):
+                 precondition: bool = True,
+                 scatter: bool = False):
         self.schema = schema
         self.page_size = page_size
         self.codec = codec
         self.level = level
         self.checksum = checksum
         self.chunk_bytes = chunk_bytes
+        self.scatter = scatter
         self._policy = policy
         # effective per-column specs: encodings drop to ENC_NONE when
         # preconditioning is disabled (the reader honors the header flag)
@@ -265,25 +296,39 @@ class ClusterBuilder:
             payloads, build_ns = self._compress_serial(plan)
         else:
             payloads, build_ns = self._compress_pooled(plan, pool)
-        blob, descs, compress_ns, codec_stats = self._assemble(
-            plan, payloads, build_ns
-        )
+        final, total = self._finalize(plan, payloads)
+        # element counts BEFORE gathering: _detach_aliased hands raw-page
+        # columns' storage to the sealed cluster, emptying the buffers
+        n_elements = [len(c) for c in self._cols]
+        if self.scatter:
+            blob = None
+            iovecs, descs, compress_ns, codec_stats = self._gather(
+                plan, final, build_ns
+            )
+        else:
+            iovecs = None
+            blob, descs, compress_ns, codec_stats = self._assemble(
+                plan, final, build_ns, total
+            )
         sealed = SealedCluster(
             blob=blob,
             n_entries=self.n_entries,
-            n_elements=[len(c) for c in self._cols],
+            n_elements=n_elements,
             pages=descs,
             uncompressed_bytes=self.uncompressed_bytes,
             seal_ns=_ns() - t0,
             compress_ns=compress_ns,
             codec_stats=codec_stats,
+            iovecs=iovecs,
+            nbytes=total,
         )
         self._reset()
         return sealed
 
-    def _record_trial(self, ci: int, raw_len: int, size: int) -> None:
+    def _record_trial(self, ci: int, raw_len: int, size: int,
+                      ns: int = 0) -> None:
         if self._policy is not None:
-            self._policy.record(ci, raw_len, size)
+            self._policy.record(ci, raw_len, size, ns)
 
     def _resolve_pending(self, ci: int) -> int:
         """A _PENDING page's codec, once its column's trial is recorded.
@@ -311,7 +356,8 @@ class ClusterBuilder:
             parts = comp.compress_parts(raw, codec, level, self.chunk_bytes)
             build_ns.append(_ns() - tb)
             payloads.append(parts)
-            self._record_trial(ci, len(raw), sum(len(p) for p in parts))
+            self._record_trial(ci, len(raw), sum(len(p) for p in parts),
+                               build_ns[-1])
         return payloads, build_ns
 
     def _compress_pooled(self, plan, pool):
@@ -352,7 +398,7 @@ class ClusterBuilder:
             for i in indices:
                 self._record_trial(
                     plan[i][0], len(plan[i][2]),
-                    sum(len(p) for p in payloads[i]),
+                    sum(len(p) for p in payloads[i]), build_ns[i],
                 )
 
         pending = [i for i, e in enumerate(plan) if e[3] == _PENDING]
@@ -366,8 +412,14 @@ class ClusterBuilder:
             submit([i for i in pending if plan[i][3] != comp.CODEC_NONE])
         return payloads, build_ns
 
-    def _assemble(self, plan, payloads, build_ns):
-        """Fallback decisions, checksums, and single-allocation assembly."""
+    def _finalize(self, plan, payloads):
+        """Per-page fallback decisions: ``[(parts|None, used_codec, size)]``.
+
+        ``parts is None`` means the page stores its raw preconditioned
+        bytes verbatim (``CODEC_NONE``) — either because no codec was
+        configured or because compression did not shrink it (ROOT's
+        store-uncompressed fallback).
+        """
         final: List[Tuple[Optional[List[bytes]], int, int]] = []
         total = 0
         for (ci, _count, raw, codec, _level), parts in zip(plan, payloads):
@@ -385,6 +437,33 @@ class ClusterBuilder:
                     used = codec
             final.append((parts, used, size))
             total += size
+        return final, total
+
+    def _page_desc(self, ci, count, raw, parts, used, size, pos):
+        """Build one page descriptor (checksum folded over the parts)."""
+        crc = 0
+        if self.checksum:
+            for p in parts:
+                # per-chunk CRCs fold into the page checksum
+                # incrementally: equals the whole-payload crc32
+                crc = zlib.crc32(p, crc)
+        members = None
+        if used != comp.CODEC_NONE and len(parts) > 1:
+            members = [len(p) for p in parts]
+        return PageDesc(
+            column=ci,
+            n_elements=count,
+            offset=pos,
+            size=size,
+            uncompressed_size=len(raw),
+            checksum=crc,
+            codec=used,
+            members=members,
+            member_chunk=self.chunk_bytes if members else 0,
+        )
+
+    def _assemble(self, plan, final, build_ns, total):
+        """Checksums + single-allocation assembly (the reference path)."""
         blob = bytearray(total)
         mv = memoryview(blob)
         descs: List[PageDesc] = []
@@ -396,25 +475,10 @@ class ClusterBuilder:
         ):
             if parts is None:
                 parts = (raw,)
-            crc = 0
-            at = pos
+            descs.append(self._page_desc(ci, count, raw, parts, used, size, pos))
             for p in parts:
-                mv[at : at + len(p)] = p
-                if self.checksum:
-                    # per-chunk CRCs fold into the page checksum
-                    # incrementally: equals the whole-payload crc32
-                    crc = zlib.crc32(p, crc)
-                at += len(p)
-            descs.append(PageDesc(
-                column=ci,
-                n_elements=count,
-                offset=pos,
-                size=size,
-                uncompressed_size=len(raw),
-                checksum=crc,
-                codec=used,
-            ))
-            pos = at
+                mv[pos : pos + len(p)] = p
+                pos += len(p)
             compress_ns += ns
             st = codec_stats.setdefault(used, [0, 0, 0, 0])
             st[0] += 1
@@ -422,6 +486,66 @@ class ClusterBuilder:
             st[2] += size
             st[3] += ns
         return blob, descs, compress_ns, codec_stats
+
+    def _gather(self, plan, final, build_ns):
+        """Zero-copy iovec plan: page payloads in offset order, no blob.
+
+        Byte-identical to :meth:`_assemble`'s blob (the benchmarks and
+        tests assert it), minus the full-cluster memcpy.  Raw-stored parts
+        are views of the builder's preconditioning buffers; those buffers
+        are detached (see :meth:`_detach_aliased`) so the plan stays valid
+        while this builder refills and the write drains in the background.
+        """
+        iovecs: List = []
+        descs: List[PageDesc] = []
+        codec_stats: Dict[int, List[int]] = {}
+        compress_ns = 0
+        pos = 0
+        alias_cols = set()
+        for (ci, count, raw, _codec, _level), (parts, used, size), ns in zip(
+            plan, final, build_ns
+        ):
+            if parts is None:
+                parts = (raw,)
+                alias_cols.add(ci)
+            descs.append(self._page_desc(ci, count, raw, parts, used, size, pos))
+            for p in parts:
+                # normalize ndarray views to memoryviews: every sink's
+                # pwritev (and bytearray slice assignment) accepts those
+                iovecs.append(memoryview(p) if isinstance(p, np.ndarray) else p)
+                pos += len(p)
+            compress_ns += ns
+            st = codec_stats.setdefault(used, [0, 0, 0, 0])
+            st[0] += 1
+            st[1] += len(raw)
+            st[2] += size
+            st[3] += ns
+        self._detach_aliased(alias_cols)
+        return iovecs, descs, compress_ns, codec_stats
+
+    def _detach_aliased(self, alias_cols) -> None:
+        """Hand ownership of raw-aliased buffers to the sealed cluster.
+
+        A raw-stored part is a view of either this builder's per-column
+        preconditioning scratch (split/dzs encodings) or the live
+        :class:`ColumnBuffer` storage (``none`` encoding).  numpy views
+        keep their base arrays alive, so the only hazard is *reuse*: the
+        next fill/seal of this builder would overwrite the bytes before a
+        write-behind commit drains them.  Dropping the scratch slot /
+        detaching the ColumnBuffer storage makes the next cluster allocate
+        fresh buffers — an O(1) allocation instead of the O(bytes)
+        assembly memcpy the scatter path exists to avoid.  Columns whose
+        pages all compressed keep their buffers for steady-state reuse.
+        """
+        if not alias_cols:
+            return
+        for col in self._specs:
+            if col.index not in alias_cols:
+                continue
+            if col.encoding == ENC_NONE:
+                self._cols[col.index].detach()
+            else:
+                self._scratch._bufs.pop(f"u8:{col.index}", None)
 
     # -- page draining (unbuffered mode) -------------------------------------
 
@@ -475,7 +599,8 @@ class ClusterBuilder:
         if self._policy is not None and codec != comp.CODEC_NONE:
             # after an in-page raw fallback desc.size == uncompressed_size,
             # which records as ratio 1.0 — the right signal either way
-            self._policy.record(col.index, desc.uncompressed_size, desc.size)
+            self._policy.record(col.index, desc.uncompressed_size, desc.size,
+                                build_ns)
         return payload, desc, build_ns
 
     def finish_unbuffered(self) -> Tuple[int, List[int], int]:

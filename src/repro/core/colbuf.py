@@ -99,3 +99,17 @@ class ColumnBuffer:
     def reset(self) -> None:
         """Forget the contents but keep the allocated storage for reuse."""
         self._len = 0
+
+    def detach(self) -> np.ndarray:
+        """Give up the current storage and start over with a fresh array.
+
+        Used by the scatter-gather seal: zero-copy views of the old
+        storage stay valid (numpy views keep their base alive) while this
+        buffer refills into new storage — the next :meth:`extend` pays one
+        allocation instead of the assembly memcpy it replaces.  Returns
+        the detached array.
+        """
+        old = self._data
+        self._data = np.empty(max(len(old), 1), dtype=self.dtype)
+        self._len = 0
+        return old

@@ -303,16 +303,33 @@ class CodecPolicy:
     otherwise.  Decisions are monotonic and thread-safe — concurrent
     producers share one policy, and pages already written under the trial
     codec stay valid because ``PageDesc.codec`` is per page.
+
+    With ``rate_aware=True`` the decision also weighs measured
+    **bandwidths**, not ratio alone: the commit path feeds the sink's
+    observed drain rate through :meth:`observe_drain`, and a column whose
+    ratio misses the threshold is still kept when its *savings rate* —
+    bytes removed per second of compression CPU,
+    ``(in - out) / compress_time`` — beats what the sink can drain.  A
+    throttled disk (drain slower than the savings rate) keeps compression
+    that a /dev/null-fast sink would drop, which is exactly the paper's
+    storage-bandwidth-is-the-wall regime.  While no drain observation
+    exists yet, a would-drop column keeps sampling (up to
+    ``4 * sample_pages`` pages) instead of locking a decision the rate
+    data could reverse.
     """
 
     def __init__(self, n_columns: int, sample_pages: int = 8,
-                 threshold: float = 0.9):
+                 threshold: float = 0.9, rate_aware: bool = False):
         self.sample_pages = sample_pages
         self.threshold = threshold
+        self.rate_aware = rate_aware
         self._lock = threading.Lock()
         self._pages = [0] * n_columns
         self._bytes_in = [0] * n_columns
         self._bytes_out = [0] * n_columns
+        self._ns = [0] * n_columns       # compression CPU time of the sample
+        self._drain_bytes = 0
+        self._drain_ns = 0
         # None = sampling; True = keep the configured codec; False = raw
         self._keep: List[Optional[bool]] = [None] * n_columns
 
@@ -322,7 +339,22 @@ class CodecPolicy:
             return codec
         return CODEC_NONE
 
-    def record(self, column: int, raw_size: int, payload_size: int) -> None:
+    def observe_drain(self, nbytes: int, ns: int) -> None:
+        """Account one drained write: the sink's observed bandwidth."""
+        if not self.rate_aware:
+            return
+        with self._lock:
+            self._drain_bytes += nbytes
+            self._drain_ns += ns
+
+    def _drain_rate(self) -> Optional[float]:
+        """Observed sink bandwidth in bytes/s (None before any write)."""
+        if not self._drain_ns:
+            return None
+        return self._drain_bytes / (self._drain_ns / 1e9)
+
+    def record(self, column: int, raw_size: int, payload_size: int,
+               ns: int = 0) -> None:
         """Account one compressed trial page; lock the decision once the
         sample is complete."""
         with self._lock:
@@ -331,9 +363,28 @@ class CodecPolicy:
             self._pages[column] += 1
             self._bytes_in[column] += raw_size
             self._bytes_out[column] += payload_size
-            if self._pages[column] >= self.sample_pages:
-                ratio = self._bytes_out[column] / max(1, self._bytes_in[column])
-                self._keep[column] = ratio <= self.threshold
+            self._ns[column] += ns
+            if self._pages[column] < self.sample_pages:
+                return
+            ratio = self._bytes_out[column] / max(1, self._bytes_in[column])
+            if ratio <= self.threshold:
+                self._keep[column] = True
+                return
+            if not self.rate_aware:
+                self._keep[column] = False
+                return
+            # ratio alone says drop — but if the sink drains slower than
+            # this codec removes bytes, compression still buys wall time
+            drain = self._drain_rate()
+            if drain is None:
+                # no bandwidth signal yet: keep sampling (bounded)
+                if self._pages[column] >= 4 * self.sample_pages:
+                    self._keep[column] = False
+                return
+            saved = self._bytes_in[column] - self._bytes_out[column]
+            cpu_s = self._ns[column] / 1e9
+            savings_rate = saved / cpu_s if cpu_s > 0 else 0.0
+            self._keep[column] = savings_rate >= drain
 
     def decision(self, column: int) -> Optional[bool]:
         """None while sampling, else whether the codec was kept."""
@@ -348,9 +399,12 @@ class CodecPolicy:
 
     def as_dict(self) -> dict:
         with self._lock:
+            drain = self._drain_rate()
             return {
                 "sample_pages": self.sample_pages,
                 "threshold": self.threshold,
+                "rate_aware": self.rate_aware,
+                "drain_mb_s": round(drain / 1e6, 2) if drain else None,
                 "columns": [
                     {
                         "pages": p,

@@ -1,0 +1,328 @@
+"""The sink-side I/O engine: scatter-gather, striped, write-behind commits.
+
+The paper's evaluation (§5) scales the CPU side of parallel writing until
+it is "only limited by storage bandwidth" — this module makes our commit
+path actually behave that way (DESIGN.md §6).  Three cooperating levers,
+each individually optional:
+
+* **scatter-gather** — a sealed cluster's iovec plan goes to
+  ``Sink.pwritev`` with no assembly memcpy (the plan comes from
+  ``ClusterBuilder._gather``; this engine only chooses *how* to submit);
+* **striping** — an extent larger than ``stripe_bytes`` splits into
+  independent sub-extent jobs at computed offsets inside the reserved
+  extent, executed concurrently on the engine pool, so ONE producer can
+  keep a deep device queue busy the way chunked compression keeps the
+  codec pool busy;
+* **write-behind** — with ``inflight_bytes > 0`` a commit only *enqueues*
+  its extent; producers seal cluster N+1..N+k while earlier extents
+  drain.  ``admit()`` is the backpressure gate (called before the
+  writer's critical section, so a stalled producer never holds the
+  commit lock), errors poison the writer through ``on_error`` exactly
+  like a synchronous failed ``pwrite``, and ``drain()`` is the
+  drain-before-footer barrier ``close()`` runs.
+
+The fsync policy rides here too: ``"on_close"`` (default; the writer's
+close() fsyncs, as always), ``"every_cluster"`` (fsync when an extent's
+last stripe lands), or an ``int`` byte interval (fsync each time that
+many bytes have landed since the previous fsync).
+
+With every lever off the engine degenerates to exactly the seed's
+behavior: one synchronous ``pwrite``/``pwritev`` on the committing
+thread.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional, Tuple
+
+_ns = time.perf_counter_ns
+
+# pool size when striping / write-behind is enabled without an explicit
+# WriteOptions.io_workers: enough concurrent submissions to keep an NVMe
+# queue (or a sleeping ThrottledSink window) busy without thread bloat
+DEFAULT_IO_WORKERS = 4
+
+FSYNC_ON_CLOSE = "on_close"
+FSYNC_EVERY_CLUSTER = "every_cluster"
+
+
+class _ExtentGroup:
+    """One logical extent (a cluster or page) split into 1..n stripe jobs."""
+
+    __slots__ = ("remaining", "nbytes", "owner")
+
+    def __init__(self, remaining: int, nbytes: int, owner):
+        self.remaining = remaining
+        self.nbytes = nbytes
+        # the SealedCluster (or any object) whose buffers back the iovecs:
+        # referenced until the last stripe lands, then released
+        self.owner = owner
+
+
+class IOEngine:
+    """Positioned-write executor for one writer's sink.
+
+    ``write_extent(off, parts, nbytes)`` is the single entry point used by
+    every commit path (buffered clusters, unbuffered pages, merge's raw
+    cluster copies).  Synchronous mode writes on the calling thread
+    (striped over the pool when configured) and returns the measured
+    io_ns; write-behind mode enqueues and returns 0 — the workers add
+    their io time to ``stats`` directly and report drained bytes through
+    ``on_drain`` (the rate-aware codec policy's bandwidth signal).
+    """
+
+    def __init__(
+        self,
+        sink,
+        workers: int = 0,
+        inflight_bytes: int = 0,
+        stripe_bytes: int = 0,
+        fsync_policy=FSYNC_ON_CLOSE,
+        stats=None,
+        on_error: Optional[Callable] = None,
+        on_drain: Optional[Callable] = None,
+    ):
+        self.sink = sink
+        self.stripe_bytes = int(stripe_bytes)
+        self.inflight_bytes = int(inflight_bytes)
+        self.stats = stats
+        self._on_error = on_error
+        self._on_drain = on_drain
+        if not workers and (self.stripe_bytes > 0 or self.inflight_bytes > 0):
+            workers = DEFAULT_IO_WORKERS
+        self._pool = (
+            ThreadPoolExecutor(max_workers=workers, thread_name_prefix="rntj-io")
+            if workers
+            else None
+        )
+        self._cv = threading.Condition()
+        self._inflight = 0      # admitted write-behind bytes not yet drained
+        self._pending = 0       # queued/running async jobs
+        self._error: Optional[BaseException] = None
+        # busy-window drain accounting for on_drain: concurrent jobs must
+        # not each report their own wall time (that would under-report the
+        # sink's bandwidth by the concurrency factor) — instead bytes
+        # accumulate and are reported over the union busy window whenever
+        # the last running job finishes
+        self._running = 0
+        self._busy_start = 0
+        self._drained_bytes = 0
+        # fsync policy state
+        self._fsync_every = fsync_policy == FSYNC_EVERY_CLUSTER
+        self._fsync_interval = (
+            int(fsync_policy) if isinstance(fsync_policy, int) else 0
+        )
+        self._since_fsync = 0
+        self._fsync_lock = threading.Lock()
+
+    # -- mode ----------------------------------------------------------------
+
+    @property
+    def async_mode(self) -> bool:
+        """True when commits are queued (write-behind) instead of written
+        on the committing thread."""
+        return self.inflight_bytes > 0 and self._pool is not None
+
+    # -- backpressure ---------------------------------------------------------
+
+    def admit(self, nbytes: int) -> None:
+        """Block until ``nbytes`` fits in the in-flight budget.
+
+        Called by producers BEFORE the writer's critical section: a
+        producer stalled on storage must never stall the other producers'
+        commits.  An extent larger than the whole budget is admitted alone
+        (the engine never deadlocks on one oversized cluster).  No-op in
+        synchronous mode.
+        """
+        if not self.async_mode:
+            return
+        t0 = _ns()
+        with self._cv:
+            while self._inflight and self._inflight + nbytes > self.inflight_bytes:
+                self._cv.wait()
+            self._inflight += nbytes
+        stall = _ns() - t0
+        if self.stats is not None and stall:
+            self.stats.add_io_stall_ns(stall)
+
+    def _release(self, nbytes: int) -> None:
+        with self._cv:
+            self._inflight -= nbytes
+            self._cv.notify_all()
+
+    # -- submission -----------------------------------------------------------
+
+    def write_extent(self, off: int, parts: List, nbytes: int,
+                     owner=None) -> int:
+        """Write ``parts`` contiguously at ``off`` — inline, striped, or
+        queued.  Returns the io_ns spent on THIS thread (0 when queued).
+
+        The caller has already ``admit()``ed ``nbytes`` in write-behind
+        mode and already reserved the extent; stripes never overlap, so
+        no ordering between jobs is needed.  A failed write calls
+        ``on_error`` (the writer's commit-poison hook) — synchronous
+        failures also raise, exactly like the direct ``pwrite`` they
+        replace.
+        """
+        stripes = self._stripes(off, parts, nbytes)
+        if not self.async_mode:
+            t0 = _ns()
+            try:
+                if len(stripes) == 1 or self._pool is None:
+                    for s_off, s_parts, _n in stripes:
+                        self._pwritev(s_off, s_parts)
+                else:
+                    futs = [
+                        self._pool.submit(self._pwritev, s_off, s_parts)
+                        for s_off, s_parts, _n in stripes
+                    ]
+                    for f in futs:
+                        f.result()
+            except BaseException as e:
+                self._fail(e)
+                raise
+            io_ns = _ns() - t0
+            self._extent_done(nbytes)
+            if self._on_drain is not None:
+                self._on_drain(nbytes, io_ns)
+            return io_ns
+        # write-behind: enqueue one job per stripe
+        if self._error is not None:
+            # the writer is poisoned: drop the bytes (finalization will
+            # refuse anyway) but keep the budget accounting balanced
+            self._release(nbytes)
+            return 0
+        group = _ExtentGroup(len(stripes), nbytes, owner)
+        with self._cv:
+            self._pending += len(stripes)
+            depth = self._pending
+        if self.stats is not None:
+            for _ in stripes:
+                self.stats.note_io_job(depth, self._inflight)
+        for s_off, s_parts, s_n in stripes:
+            self._pool.submit(self._run_job, group, s_off, s_parts, s_n)
+        return 0
+
+    def _stripes(self, off: int, parts: List, nbytes: int
+                 ) -> List[Tuple[int, List, int]]:
+        """Split an extent's iovec plan into ``[(offset, parts, nbytes)]``
+        stripe sub-extents of at most ``stripe_bytes`` each."""
+        if (
+            self.stripe_bytes <= 0
+            or nbytes <= self.stripe_bytes
+            or self._pool is None
+        ):
+            return [(off, list(parts), nbytes)]
+        out: List[Tuple[int, List, int]] = []
+        cur: List = []
+        cur_n = 0
+        cur_off = off
+        for part in parts:
+            mv = memoryview(part)
+            pos = 0
+            while pos < len(mv):
+                take = min(len(mv) - pos, self.stripe_bytes - cur_n)
+                cur.append(mv[pos : pos + take])
+                cur_n += take
+                pos += take
+                if cur_n == self.stripe_bytes:
+                    out.append((cur_off, cur, cur_n))
+                    cur_off += cur_n
+                    cur, cur_n = [], 0
+        if cur:
+            out.append((cur_off, cur, cur_n))
+        return out
+
+    def _pwritev(self, off: int, parts: List) -> None:
+        if len(parts) == 1:
+            self.sink.pwrite(off, parts[0])
+        else:
+            self.sink.pwritev(off, parts)
+
+    def _run_job(self, group: _ExtentGroup, off: int, parts: List,
+                 nbytes: int) -> None:
+        t0 = _ns()
+        with self._cv:
+            if self._running == 0:
+                self._busy_start = t0
+            self._running += 1
+        try:
+            if self._error is None:
+                self._pwritev(off, parts)
+        except BaseException as e:
+            self._fail(e)
+        finally:
+            io_ns = _ns() - t0
+            if self.stats is not None:
+                self.stats.add_io_ns(io_ns)
+            last = False
+            drained = None
+            with self._cv:
+                self._running -= 1
+                self._drained_bytes += nbytes
+                if self._running == 0:
+                    # window closed: report accumulated bytes over the
+                    # union busy time — the sink's actual drain bandwidth
+                    drained = (self._drained_bytes, _ns() - self._busy_start)
+                    self._drained_bytes = 0
+                self._pending -= 1
+                self._inflight -= nbytes
+                group.remaining -= 1
+                last = group.remaining == 0
+                self._cv.notify_all()
+            if drained is not None and self._on_drain is not None:
+                self._on_drain(*drained)
+            if last:
+                group.owner = None  # release the sealed cluster's buffers
+                if self._error is None:
+                    try:
+                        self._extent_done(group.nbytes)
+                    except BaseException as e:
+                        self._fail(e)
+
+    def _fail(self, e: BaseException) -> None:
+        with self._cv:
+            if self._error is None:
+                self._error = e
+            self._cv.notify_all()
+        if self._on_error is not None:
+            self._on_error(e)
+
+    # -- fsync policy ---------------------------------------------------------
+
+    def _extent_done(self, nbytes: int) -> None:
+        """Apply the every-cluster / byte-interval fsync policy after an
+        extent's bytes have fully landed."""
+        if self._fsync_every:
+            self.sink.fsync()
+        elif self._fsync_interval:
+            due = False
+            with self._fsync_lock:
+                self._since_fsync += nbytes
+                if self._since_fsync >= self._fsync_interval:
+                    self._since_fsync = 0
+                    due = True
+            if due:
+                self.sink.fsync()
+
+    # -- drain / shutdown ------------------------------------------------------
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    def drain(self) -> None:
+        """Block until every queued write job has finished (successfully
+        or not).  The drain-before-footer barrier: any failure is already
+        latched in the writer via ``on_error``; this never raises."""
+        with self._cv:
+            while self._pending:
+                self._cv.wait()
+
+    def close(self) -> None:
+        self.drain()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

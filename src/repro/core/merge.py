@@ -27,7 +27,10 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
 
     The critical section per cluster is the same reserve+metadata protocol
     as parallel writing — relocatability makes this a pure byte copy, no
-    decompression and no re-encoding.
+    decompression and no re-encoding.  The bytes go out through the
+    writer's I/O engine, so merges inherit striping and write-behind from
+    the output's ``WriteOptions`` for free (framed-member side-car records
+    ride along on the rebased descriptors).
     """
     for idx, cm in enumerate(reader.clusters):
         if cm.byte_size:
@@ -46,6 +49,7 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
             blob = b"".join(parts)
             cm = ClusterMeta(cm.first_entry, cm.n_entries, cm.n_elements, descs, 0, len(blob))
             base = 0
+        writer._io.admit(len(blob))
         with writer.lock:
             off = writer.sink.reserve(len(blob))
             first_entry = writer._n_entries
@@ -60,7 +64,7 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
                     byte_size=len(blob),
                 )
             )
-            writer.sink.pwrite(off, blob)
+            writer._submit_or_latch(off, [blob], len(blob))
         writer.stats.clusters += 1
         writer.stats.entries += cm.n_entries
         writer.stats.pages += len(cm.pages)

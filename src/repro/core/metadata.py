@@ -36,6 +36,7 @@ VERSION = 1
 ENV_HEADER = 1
 ENV_PAGELIST = 2
 ENV_FOOTER = 3
+ENV_MEMBERS = 4   # optional framed-member side-car (DESIGN.md §6.4)
 
 _ENV_HDR = struct.Struct("<4sHxxQ")  # magic, type, pad, payload_len
 _ENV_MAGIC = b"RJEV"
@@ -178,6 +179,52 @@ def parse_pagelist(buf: bytes) -> List[ClusterMeta]:
                         pages, boff, bsize)
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# framed-member side-car (optional)
+
+
+def build_member_sidecar(clusters: List[ClusterMeta]) -> Optional[bytes]:
+    """Optional side-car recording chunk-framed pages' member layout.
+
+    For every page compressed as multiple independent members (DESIGN.md
+    §5.2) it records the compressed byte size of each member plus the
+    uncompressed bytes a full member decodes to — which is exactly what
+    the read engine needs to decompress one page's members as parallel
+    pool jobs instead of looping a decompressor serially.  Returns
+    ``None`` when no page is framed (the envelope is then omitted and the
+    footer carries no locator: old files and unframed files are
+    indistinguishable and decode exactly as before).
+    """
+    recs: List[bytes] = []
+    n = 0
+    for ci, cm in enumerate(clusters):
+        for pi, p in enumerate(cm.pages):
+            if p.members and len(p.members) > 1:
+                recs.append(struct.pack("<IIII", ci, pi, p.member_chunk,
+                                        len(p.members)))
+                recs.append(np.asarray(p.members, dtype="<u4").tobytes())
+                n += 1
+    if not n:
+        return None
+    payload = struct.pack("<I", n) + b"".join(recs)
+    return wrap_envelope(ENV_MEMBERS, payload)
+
+
+def parse_member_sidecar(buf: bytes, clusters: List[ClusterMeta]) -> None:
+    """Attach the side-car's member layouts to the parsed page descriptors."""
+    payload = unwrap_envelope(buf, ENV_MEMBERS)
+    (n,) = struct.unpack_from("<I", payload, 0)
+    pos = 4
+    for _ in range(n):
+        ci, pi, chunk, k = struct.unpack_from("<IIII", payload, pos)
+        pos += 16
+        sizes = np.frombuffer(payload, dtype="<u4", count=k, offset=pos)
+        pos += 4 * k
+        page = clusters[ci].pages[pi]
+        page.members = [int(s) for s in sizes]
+        page.member_chunk = int(chunk)
 
 
 # ---------------------------------------------------------------------------

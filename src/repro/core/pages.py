@@ -45,6 +45,15 @@ class PageDesc:
 
     ``offset`` is cluster-relative while the cluster is sealed-but-uncommitted
     (that is the relocatability property), and absolute once committed.
+
+    ``members``/``member_chunk`` describe the framed-chunk layout of a
+    compressed page (DESIGN.md §5.2): the compressed byte size of each
+    independent member and the uncompressed bytes every full member
+    decodes to.  They are NOT part of the fixed page record — they ride
+    in the optional member side-car envelope (metadata.py) so the read
+    engine can decompress a page's members as parallel pool jobs; files
+    without the side-car (or pages without framing) decode exactly as
+    before.
     """
 
     column: int
@@ -54,6 +63,8 @@ class PageDesc:
     uncompressed_size: int
     checksum: int
     codec: int
+    members: Optional[List[int]] = None  # per-member compressed sizes
+    member_chunk: int = 0                # uncompressed bytes per full member
 
     def rebase(self, base: int) -> "PageDesc":
         return PageDesc(
@@ -64,6 +75,8 @@ class PageDesc:
             self.uncompressed_size,
             self.checksum,
             self.codec,
+            self.members,
+            self.member_chunk,
         )
 
 
@@ -95,6 +108,7 @@ def build_page(
     raw = precondition_buffer(elements, col.encoding, _thread_scratch())
     uncompressed_size = len(raw)
     used_codec = codec
+    members = None
     if codec == comp.CODEC_NONE:
         # materialize: raw aliases the scratch (or the caller's buffer)
         payload = bytes(raw)
@@ -111,6 +125,8 @@ def build_page(
             # per-chunk CRCs fold into the page checksum incrementally
             crc = comp.crc32_parts(parts) if checksum else 0
             payload = parts[0] if len(parts) == 1 else b"".join(parts)
+            if len(parts) > 1:
+                members = [len(p) for p in parts]
     desc = PageDesc(
         column=col.index,
         n_elements=int(len(elements)),
@@ -119,6 +135,8 @@ def build_page(
         uncompressed_size=uncompressed_size,
         checksum=crc,
         codec=used_codec,
+        members=members,
+        member_chunk=chunk_bytes if members else 0,
     )
     return payload, desc
 

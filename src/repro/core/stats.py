@@ -109,6 +109,7 @@ class CountingLock:
 @dataclass
 class IOStats:
     write_calls: int = 0
+    writev_calls: int = 0     # vectored (scatter-gather) submissions
     bytes_written: int = 0
     read_calls: int = 0
     bytes_read: int = 0
@@ -117,6 +118,7 @@ class IOStats:
 
     def merge(self, other: "IOStats") -> None:
         self.write_calls += other.write_calls
+        self.writev_calls += other.writev_calls
         self.bytes_written += other.bytes_written
         self.read_calls += other.read_calls
         self.bytes_read += other.bytes_read
@@ -143,7 +145,12 @@ class WriterStats:
     seal_ns: int = 0         # wall time in serialization+compression (no lock held)
     compress_ns: int = 0     # summed per-page build time (CPU view of seal)
     commit_ns: int = 0       # time in commit path (reserve+metadata+write)
-    io_ns: int = 0           # time inside pwrite (subset of commit_ns)
+    io_ns: int = 0           # time inside pwrite/pwritev (any thread)
+    # -- I/O engine (write-behind / striping, DESIGN.md §6) -----------------
+    io_stall_ns: int = 0     # producer time blocked on the in-flight budget
+    io_jobs: int = 0         # write jobs executed by the engine
+    io_queue_peak: int = 0   # max write jobs queued/running at once
+    io_inflight_peak: int = 0  # max write-behind bytes in flight at once
     entries: int = 0
     clusters: int = 0
     pages: int = 0
@@ -194,6 +201,26 @@ class WriterStats:
         with self._mu:
             self.fill_ns += ns
 
+    def add_io_ns(self, ns: int) -> None:
+        """Time inside pwrite/pwritev on an engine worker (write-behind:
+        the io phase no longer happens on the committing thread)."""
+        with self._mu:
+            self.io_ns += ns
+
+    def add_io_stall_ns(self, ns: int) -> None:
+        with self._mu:
+            self.io_stall_ns += ns
+
+    def note_io_job(self, queued: int, inflight: int) -> None:
+        """One engine write job observed with ``queued`` jobs outstanding
+        and ``inflight`` write-behind bytes admitted."""
+        with self._mu:
+            self.io_jobs += 1
+            if queued > self.io_queue_peak:
+                self.io_queue_peak = queued
+            if inflight > self.io_inflight_peak:
+                self.io_inflight_peak = inflight
+
     def merge_lock(self, snapshot: LockStats) -> None:
         with self._mu:
             self.lock.merge(snapshot)
@@ -230,9 +257,14 @@ class WriterStats:
             "compress_ms": self.compress_ns / 1e6,
             "commit_ms": self.commit_ns / 1e6,
             "io_ms": self.io_ns / 1e6,
+            "io_stall_ms": self.io_stall_ns / 1e6,
+            "io_jobs": self.io_jobs,
+            "io_queue_peak": self.io_queue_peak,
+            "io_inflight_peak_bytes": self.io_inflight_peak,
             "phases_ms": self.phases_ms(),
             "per_codec": _codec_stats_dict(self.per_codec),
             "write_calls": self.io.write_calls,
+            "writev_calls": self.io.writev_calls,
             "bytes_written": self.io.bytes_written,
             "fallocate_calls": self.io.fallocate_calls,
         }

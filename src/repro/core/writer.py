@@ -26,6 +26,15 @@ Throughput machinery (DESIGN.md §"Write-path architecture"):
     compresses and commits on a background thread, the producer keeps
     filling the next builder.  The paper's opt-2 moves the *write* out of
     the critical path; this moves the entire seal phase off the producer.
+
+I/O engine (DESIGN.md §6): every commit path funnels through one
+:class:`~repro.core.ioengine.IOEngine` per writer — scatter-gather
+``pwritev`` commits of un-assembled iovec plans (``scatter_commit``),
+striped parallel sub-extent writes (``io_stripe_bytes``), and bounded
+write-behind with producer backpressure (``io_inflight_bytes``), plus
+the fsync policy knob.  ``close()`` drains the engine before the footer
+is ever built, and engine write failures poison finalization through
+the same ``_commit_error`` latch as a synchronous failed ``pwrite``.
 """
 
 from __future__ import annotations
@@ -40,12 +49,14 @@ from typing import Dict, List, Optional, Sequence
 from . import compression as comp
 from .cluster import ClusterBuilder, SealedCluster
 from .container import Sink, open_sink
+from .ioengine import FSYNC_ON_CLOSE, IOEngine
 from .metadata import (
     ANCHOR_SIZE,
     ClusterMeta,
     build_anchor,
     build_footer,
     build_header,
+    build_member_sidecar,
     build_pagelist,
 )
 from .pages import DEFAULT_PAGE_SIZE, PageDesc
@@ -84,6 +95,26 @@ class WriteOptions:
     # split/delta preconditioning of pages; False stores every column's
     # elements verbatim (recorded in the header so readers decode right)
     precondition: bool = True
+    # -- I/O engine (DESIGN.md §6) -------------------------------------------
+    # seal clusters to a zero-copy iovec plan committed via pwritev
+    # (scatter-gather) instead of assembling a blob; the assembled path
+    # stays as the byte-identical reference
+    scatter_commit: bool = True
+    # clusters above this size split into independent parallel stripe
+    # writes at computed offsets inside the reserved extent (0 = off)
+    io_stripe_bytes: int = 0
+    # write-behind budget: producers seal ahead while up to this many
+    # bytes of committed extents drain in the background (0 = synchronous
+    # commit, the paper's base protocol)
+    io_inflight_bytes: int = 0
+    # engine pool size; 0 = auto (4) when striping/write-behind is on
+    io_workers: int = 0
+    # "on_close" | "every_cluster" | int byte interval between fsyncs
+    fsync_policy: object = FSYNC_ON_CLOSE
+    # rate-aware adaptive codec: weigh each column's measured savings
+    # rate (bytes removed per CPU second) against the sink's observed
+    # drain bandwidth — a slow sink keeps compression a fast sink drops
+    adaptive_rate_aware: bool = False
 
     @property
     def codec_id(self) -> int:
@@ -130,9 +161,26 @@ class _WriterBase:
                 schema.n_columns,
                 self.options.adaptive_sample_pages,
                 self.options.adaptive_threshold,
+                rate_aware=self.options.adaptive_rate_aware,
             )
             if self.options.adaptive_codec
             else None
+        )
+        # the writer's I/O engine: one per writer, shared by every commit
+        # path (clusters, unbuffered pages, merge's raw copies).  Write
+        # failures poison finalization through _commit_error; drained
+        # bytes feed the rate-aware codec policy its bandwidth signal.
+        self._io = IOEngine(
+            self.sink,
+            workers=self.options.io_workers,
+            inflight_bytes=self.options.io_inflight_bytes,
+            stripe_bytes=self.options.io_stripe_bytes,
+            fsync_policy=self.options.fsync_policy,
+            stats=self.stats,
+            on_error=self._poison,
+            on_drain=(
+                self._policy.observe_drain if self._policy is not None else None
+            ),
         )
         # header goes first; its location is fixed so no lock is needed yet.
         # It records the EFFECTIVE per-column encodings (a reused schema —
@@ -186,14 +234,23 @@ class _WriterBase:
                               column_codecs=self._column_codecs,
                               chunk_bytes=o.codec_chunk_bytes,
                               policy=self._policy,
-                              precondition=o.precondition)
+                              precondition=o.precondition,
+                              scatter=o.scatter_commit)
 
     # -- commit protocol ----------------------------------------------------
 
     def _commit_cluster(self, sealed: SealedCluster) -> None:
-        """The paper's critical section (§4.2/§4.3), buffered mode."""
+        """The paper's critical section (§4.2/§4.3), buffered mode.
+
+        With write-behind (``io_inflight_bytes > 0``) the backpressure
+        gate runs BEFORE the critical section — a producer stalled on
+        storage never blocks the other producers' commits — and the
+        critical section only enqueues the extent; the engine's workers
+        drain it while this producer seals ahead.
+        """
         opts = self.options
         t0 = _ns()
+        self._io.admit(sealed.size)
         io_ns = 0
         with self.lock:
             off = self.sink.reserve(sealed.size)
@@ -212,41 +269,48 @@ class _WriterBase:
                 )
             )
             if not opts.write_outside_lock:
-                t_io = _ns()
-                self._pwrite_or_latch(off, sealed.blob)
-                io_ns = _ns() - t_io
+                io_ns = self._submit_or_latch(off, sealed.iov_plan(),
+                                              sealed.size, owner=sealed)
         if opts.write_outside_lock:
             # opt-2: the extent is reserved and the metadata final — the
             # actual bytes go out truly in parallel (paper §5).
-            t_io = _ns()
-            self._pwrite_or_latch(off, sealed.blob)
-            io_ns = _ns() - t_io
+            io_ns = self._submit_or_latch(off, sealed.iov_plan(),
+                                          sealed.size, owner=sealed)
         self.stats.add_sealed_cluster(sealed, commit_ns=_ns() - t0, io_ns=io_ns)
 
-    def _pwrite_or_latch(self, off: int, blob) -> None:
-        """Write cluster bytes; on failure, poison finalization.
+    def _poison(self, e: BaseException) -> None:
+        """First seal/commit failure latches here; close() then refuses to
+        finalize — a footer must never reference bytes that never landed."""
+        if self._commit_error is None:
+            self._commit_error = e
+
+    def _submit_or_latch(self, off: int, parts, nbytes: int,
+                         owner=None) -> int:
+        """Hand an extent to the I/O engine; on failure, poison
+        finalization.
 
         The metadata for this extent is already appended (the paper's
         commit protocol publishes it inside the critical section), so a
         failed write must prevent close() from emitting a footer that
-        references bytes that never landed.
+        references bytes that never landed.  The engine's own error hook
+        covers failures inside the write; this wrapper additionally
+        latches anything raised before submission.  Returns the io time
+        spent on this thread (0 when the engine queued the write).
         """
         try:
-            self.sink.pwrite(off, blob)
+            return self._io.write_extent(off, parts, nbytes, owner=owner)
         except BaseException as e:
-            if self._commit_error is None:
-                self._commit_error = e
+            self._poison(e)
             raise
 
     def _commit_page(self, payload: bytes, desc: PageDesc,
                      build_ns: int = 0) -> PageDesc:
         """Page-granular critical section (unbuffered mode)."""
         t0 = _ns()
+        self._io.admit(len(payload))
         with self.lock:
             off = self.sink.reserve(len(payload))
-            t_io = _ns()
-            self._pwrite_or_latch(off, payload)
-            io_ns = _ns() - t_io
+            io_ns = self._submit_or_latch(off, [payload], len(payload))
         desc.offset = off
         self.stats.add_page(len(payload), commit_ns=_ns() - t0, io_ns=io_ns,
                             codec=desc.codec,
@@ -275,13 +339,23 @@ class _WriterBase:
         try:
             if self._pool is not None:
                 self._pool.shutdown(wait=True)
+            # drain-before-footer: every queued write-behind extent must
+            # land (or fail, poisoning _commit_error via the engine's
+            # error hook) before any finalization byte is even built
+            self._io.drain()
             if self._commit_error is None:
                 with self.lock:
+                    extra = None
+                    sc = build_member_sidecar(self._clusters)
+                    if sc is not None:
+                        sc_off = self.sink.reserve(len(sc))
+                        self.sink.pwrite(sc_off, sc)
+                        extra = {"members": [sc_off, len(sc)]}
                     pl = build_pagelist(self._clusters, self.schema.n_columns)
                     pl_off = self.sink.reserve(len(pl))
                     self.sink.pwrite(pl_off, pl)
                     ftr = build_footer(self._n_entries, len(self._clusters),
-                                       (pl_off, len(pl)))
+                                       (pl_off, len(pl)), extra=extra)
                     f_off = self.sink.reserve(len(ftr))
                     self.sink.pwrite(f_off, ftr)
                     anchor = build_anchor(
@@ -299,6 +373,7 @@ class _WriterBase:
                 self.sink.fsync()
         finally:
             # resources are released on every path, even a poisoned one
+            self._io.close()
             self.stats.merge_lock(self.lock.snapshot())
             self.stats.merge_io(self.sink.io.snapshot())
             self.sink.close()
@@ -351,8 +426,7 @@ class _PipelinedSealer:
             # poison finalization directly, so even a caller that
             # swallows the re-raised error at the next wait() can never
             # close a footer over the missing entries
-            if self._writer._commit_error is None:
-                self._writer._commit_error = e
+            self._writer._poison(e)
             raise
         return builder  # drained: its buffers are reusable now
 

@@ -206,10 +206,16 @@ def skim_partitions(
     Every resource (the thread pool, per-worker writers, merger files) is
     released on the error path too: a worker raising propagates the
     exception instead of leaking threads and half-written files.
+
+    The output writers inherit the I/O engine (DESIGN.md §6) straight
+    from ``WriteOptions``: the default enables bounded write-behind, so a
+    skim worker seals its next cluster while the previous extent drains
+    instead of stalling inside the commit on output-device latency.
     """
     assert strategy in STRATEGIES, strategy
     options = options or WriteOptions(codec="zlib", level=1,
-                                      cluster_bytes=2 * 1024 * 1024)
+                                      cluster_bytes=2 * 1024 * 1024,
+                                      io_inflight_bytes=16 * 1024 * 1024)
     ropts = read_options or DEFAULT_READ_OPTIONS
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,554 @@
+"""I/O engine tests (ISSUE 4): scatter-gather commit, striping,
+write-behind, fsync policy, the member side-car, the rate-aware codec
+policy, and MemorySink reserve-time growth."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Collection,
+    ColumnBatch,
+    DevNullSink,
+    FileSink,
+    Leaf,
+    MemorySink,
+    ParallelWriter,
+    ReadOptions,
+    RNTJReader,
+    Schema,
+    SequentialWriter,
+    Sink,
+    ThrottledSink,
+    WriteOptions,
+    merge_files,
+)
+from repro.core.compression import CODEC_NONE, CodecPolicy
+from repro.core.ioengine import IOEngine
+
+
+def vec_schema():
+    return Schema([
+        Leaf("id", "int64"),
+        Collection("vals", Leaf("_0", "float32")),
+    ])
+
+
+def make_batch(schema, rng, n, id0=0, poisson=5):
+    sizes = rng.poisson(poisson, n).astype(np.int64)
+    vals = rng.uniform(0, 100, int(sizes.sum())).astype(np.float32)
+    return ColumnBatch.from_arrays(
+        schema, n,
+        {"id": np.arange(id0, id0 + n), "vals": sizes, "vals._0": vals},
+    )
+
+
+def write_file(sink, opts, entries=4000, seed=0, batches=4):
+    schema = vec_schema()
+    rng = np.random.default_rng(seed)
+    per = entries // batches
+    with SequentialWriter(schema, sink, opts) as w:
+        for i in range(batches):
+            w.fill_batch(make_batch(schema, rng, per, id0=i * per))
+        stats = w.stats
+    return stats
+
+
+BASE = dict(codec="zlib", level=1, cluster_bytes=1 << 17,
+            page_size=8 * 1024, codec_chunk_bytes=4 * 1024)
+
+
+# ---------------------------------------------------------------------------
+# scatter-gather commit: byte-identical to the assembled reference path
+
+
+@pytest.mark.parametrize("codec", ["none", "zlib"])
+def test_scatter_commit_byte_identical(codec):
+    opts = {**BASE, "codec": codec}
+    a, b = MemorySink(), MemorySink()
+    write_file(a, WriteOptions(**opts, scatter_commit=False))
+    write_file(b, WriteOptions(**opts, scatter_commit=True))
+    assert bytes(a.buf) == bytes(b.buf)
+    # the scatter path actually used vectored submissions
+    assert b.io.writev_calls > 0
+
+
+def test_scatter_identical_with_striping_and_write_behind():
+    a, b = MemorySink(), MemorySink()
+    write_file(a, WriteOptions(**BASE, scatter_commit=False))
+    write_file(b, WriteOptions(**BASE, scatter_commit=True,
+                               io_stripe_bytes=8 * 1024,
+                               io_inflight_bytes=1 << 20,
+                               pipelined_seal=True, imt_workers=2))
+    assert bytes(a.buf) == bytes(b.buf)
+
+
+def test_scatter_adaptive_raw_pages_roundtrip():
+    """Adaptive fallback stores raw pages as zero-copy views of detached
+    builder buffers; they must survive builder reuse across clusters."""
+    sink = MemorySink()
+    write_file(sink, WriteOptions(**BASE, scatter_commit=True,
+                                  adaptive_codec=True,
+                                  adaptive_sample_pages=2,
+                                  adaptive_threshold=0.5))
+    r = RNTJReader(sink)
+    rng = np.random.default_rng(0)
+    exp = [make_batch(vec_schema(), rng, 1000, id0=i * 1000) for i in range(4)]
+    vals = np.concatenate([b.data[2] for b in exp])
+    np.testing.assert_array_equal(r.read_column("vals._0"), vals)
+    codecs = {p.codec for cm in r.clusters for p in cm.pages}
+    assert CODEC_NONE in codecs  # the policy did drop something to raw
+
+
+def test_detached_buffers_survive_queued_write_behind():
+    """The detach hazard: with write-behind, a queued scatter commit's raw
+    views must stay valid while the SAME builder refills the next cluster
+    behind a slow sink."""
+    inner = MemorySink()
+    slow = ThrottledSink(inner, bw=3e6)  # ~3 MB/s: writes lag the producer
+    schema = vec_schema()
+    rng = np.random.default_rng(7)
+    opts = WriteOptions(codec="none", cluster_bytes=1 << 16,
+                        scatter_commit=True, io_inflight_bytes=4 << 20,
+                        pipelined_seal=True)
+    with SequentialWriter(schema, slow, opts) as w:
+        for i in range(8):
+            w.fill_batch(make_batch(schema, rng, 500, id0=i * 500))
+    rng = np.random.default_rng(7)
+    exp = np.concatenate(
+        [make_batch(schema, rng, 500, id0=i * 500).data[0] for i in range(8)]
+    )
+    r = RNTJReader(inner)
+    np.testing.assert_array_equal(r.read_column("id"), exp)
+
+
+# ---------------------------------------------------------------------------
+# pwritev: every sink, loop fallback, file correctness
+
+
+def test_pwritev_file_sink(tmp_path):
+    p = tmp_path / "v.bin"
+    s = FileSink(str(p))
+    off = s.reserve(10)
+    parts = [b"abc", b"", b"defg", memoryview(np.frombuffer(b"hij", np.uint8))]
+    s.pwritev(off, parts)
+    s.close()
+    assert p.read_bytes() == b"abcdefghij"
+
+
+def test_pwritev_memory_and_devnull_accounting():
+    m = MemorySink()
+    m.reserve(6)
+    m.pwritev(0, [b"foo", b"bar"])
+    assert bytes(m.buf[:6]) == b"foobar"
+    assert m.io.writev_calls == 1 and m.io.bytes_written == 6
+
+    d = DevNullSink()
+    d.pwritev(0, [b"xx", b"yyy"])
+    assert d.io.writev_calls == 1 and d.io.bytes_written == 5
+
+
+def test_pwritev_loop_fallback_for_custom_sinks():
+    """A bare Sink subclass that only implements pwrite still works (and
+    is how fault-injection sinks keep intercepting every byte)."""
+    writes = []
+
+    class LoggingSink(Sink):
+        def pwrite(self, offset, data):
+            writes.append((offset, bytes(data)))
+            self._count_write(1, len(data))
+
+    s = LoggingSink()
+    s.pwritev(100, [b"ab", b"", b"cde"])
+    assert writes == [(100, b"ab"), (102, b"cde")]
+    assert s.io.write_calls == 2 and s.io.bytes_written == 5
+
+
+def test_pwritev_throttled_charges_once():
+    inner = MemorySink()
+    t = ThrottledSink(inner, bw=1e9)
+    t.reserve(8)
+    t.pwritev(0, [b"aaaa", b"bbbb"])
+    assert bytes(inner.buf[:8]) == b"aaaabbbb"
+    assert t.io.writev_calls == 1
+
+
+# ---------------------------------------------------------------------------
+# striping
+
+
+def test_striped_write_matches_monolithic(tmp_path):
+    a, b = MemorySink(), MemorySink()
+    write_file(a, WriteOptions(**BASE))
+    write_file(b, WriteOptions(**BASE, io_stripe_bytes=4 * 1024))
+    assert bytes(a.buf) == bytes(b.buf)
+
+
+def test_engine_stripes_cover_extent_exactly():
+    eng = IOEngine(DevNullSink(), workers=2, stripe_bytes=10)
+    parts = [b"a" * 7, b"b" * 9, b"c" * 12]
+    stripes = eng._stripes(1000, parts, 28)
+    # offsets contiguous from 1000, each stripe <= 10 bytes, total 28
+    assert [s[0] for s in stripes] == [1000, 1010, 1020]
+    assert [s[2] for s in stripes] == [10, 10, 8]
+    flat = b"".join(bytes(mv) for _off, ps, _n in stripes for mv in ps)
+    assert flat == b"".join(parts)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# write-behind: backpressure, stats, drain-before-footer
+
+
+def test_write_behind_roundtrip_and_stats():
+    inner = MemorySink()
+    slow = ThrottledSink(inner, bw=5e6)
+    stats = write_file(slow, WriteOptions(**BASE, io_inflight_bytes=1 << 20,
+                                          io_stripe_bytes=16 * 1024))
+    d = stats.as_dict()
+    assert d["io_jobs"] > 0
+    assert d["io_inflight_peak_bytes"] > 0
+    r = RNTJReader(inner)
+    assert r.n_entries == 4000
+
+
+def test_write_behind_backpressure_blocks_producer():
+    """A budget smaller than one cluster forces the producer to stall
+    until the previous extent drains: inflight never exceeds one extent
+    and the stall shows up in the stats."""
+    inner = MemorySink()
+    slow = ThrottledSink(inner, bw=2e6)
+    stats = write_file(slow, WriteOptions(**{**BASE, "codec": "none"},
+                                          io_inflight_bytes=1))
+    assert stats.as_dict()["io_stall_ms"] > 0
+    assert RNTJReader(inner).n_entries == 4000
+
+
+def test_drain_before_footer_ordering():
+    """Finalization bytes (pagelist/footer/anchor) must be written only
+    after every queued cluster extent has landed."""
+    order = []
+
+    class OrderSink(MemorySink):
+        def pwrite(self, offset, data):
+            order.append(("w", offset, len(data)))
+            super().pwrite(offset, data)
+
+    sink = OrderSink()
+    write_file(sink, WriteOptions(**BASE, io_inflight_bytes=8 << 20))
+    r = RNTJReader(sink)
+    data_end = max(cm.byte_offset + cm.byte_size for cm in r.clusters)
+    # every write at/after data_end (the metadata tail) must come after
+    # every cluster write in submission order
+    tail_first = min(i for i, (_k, off, _n) in enumerate(order)
+                     if off >= data_end)
+    last_cluster = max(i for i, (_k, off, _n) in enumerate(order)
+                       if off < data_end and off > 0)
+    assert last_cluster < tail_first
+
+
+# ---------------------------------------------------------------------------
+# commit-error poisoning under write-behind (buffered + unbuffered)
+
+
+class _FailingSink(MemorySink):
+    """Fails cluster/page-sized writes after the first N."""
+
+    def __init__(self, allowed=0, threshold=512):
+        super().__init__()
+        self._allowed = allowed
+        self._threshold = threshold
+        self._mu = threading.Lock()
+
+    def pwrite(self, offset, data):
+        if len(data) > self._threshold:
+            with self._mu:
+                if self._allowed <= 0:
+                    raise IOError("injected ENOSPC")
+                self._allowed -= 1
+        super().pwrite(offset, data)
+
+
+@pytest.mark.parametrize("buffered", [True, False])
+def test_failed_queued_write_poisons_finalization(buffered):
+    schema = vec_schema()
+    sink = _FailingSink(allowed=1)
+    opts = WriteOptions(**BASE, buffered=buffered,
+                        io_inflight_bytes=16 << 20)
+    w = ParallelWriter(schema, sink, opts)
+    ctx = w.create_fill_context()
+    rng = np.random.default_rng(0)
+    try:
+        for i in range(20):
+            ctx.fill_batch(make_batch(schema, rng, 500, id0=i * 500))
+        ctx.close()
+    except Exception:
+        pass  # queued mode may or may not surface it here
+    with pytest.raises(RuntimeError, match="NOT finalized") as ei:
+        w.close()
+    assert isinstance(ei.value.__cause__, IOError)  # the original error
+    with pytest.raises(Exception):
+        RNTJReader(sink)  # no valid footer/anchor
+
+
+def test_failed_striped_write_poisons_finalization():
+    schema = vec_schema()
+    sink = _FailingSink(allowed=2, threshold=2048)
+    opts = WriteOptions(**{**BASE, "codec": "none"},
+                        io_stripe_bytes=4 * 1024,
+                        io_inflight_bytes=16 << 20)
+    w = SequentialWriter(schema, sink, opts)
+    rng = np.random.default_rng(1)
+    try:
+        for i in range(16):
+            w.fill_batch(make_batch(schema, rng, 500, id0=i * 500))
+    except Exception:
+        pass
+    with pytest.raises(RuntimeError, match="NOT finalized"):
+        w.close()
+
+
+def test_failed_synchronous_striped_write_raises_inline():
+    schema = vec_schema()
+    sink = _FailingSink(allowed=0, threshold=2048)
+    opts = WriteOptions(**{**BASE, "codec": "none"}, io_stripe_bytes=4 * 1024)
+    w = SequentialWriter(schema, sink, opts)
+    rng = np.random.default_rng(1)
+    with pytest.raises(IOError, match="ENOSPC"):
+        for i in range(16):
+            w.fill_batch(make_batch(schema, rng, 500, id0=i * 500))
+        w.flush_cluster()
+    with pytest.raises(RuntimeError, match="NOT finalized"):
+        w.close()
+
+
+# ---------------------------------------------------------------------------
+# fsync policy
+
+
+def test_fsync_every_cluster():
+    sink = MemorySink()
+    write_file(sink, WriteOptions(**BASE, fsync_policy="every_cluster"))
+    # one per committed cluster + the unconditional close fsync
+    r = RNTJReader(sink)
+    assert sink.io.fsync_calls == r.n_clusters + 1
+
+
+def test_fsync_byte_interval():
+    sink = MemorySink()
+    write_file(sink, WriteOptions(**BASE, fsync_policy=64 * 1024))
+    assert sink.io.fsync_calls > 1  # interval fsyncs + close fsync
+
+
+def test_fsync_on_close_unchanged():
+    sink = MemorySink()
+    write_file(sink, WriteOptions(**BASE))
+    assert sink.io.fsync_calls == 1
+
+
+# ---------------------------------------------------------------------------
+# MemorySink: reserve-time growth, no lock on the write path
+
+
+def test_memory_sink_grows_at_reserve():
+    m = MemorySink()
+    off = m.reserve(1000)
+    assert len(m.buf) >= off + 1000
+
+
+def test_memory_sink_no_grow_lock_on_reserved_writes():
+    """The contention regression: after reserve(), parallel pwrites never
+    touch the grow lock (no serialization on reallocation)."""
+    m = MemorySink()
+    acquisitions = []
+
+    class CountingLockProxy:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __enter__(self):
+            acquisitions.append(1)
+            return self._inner.__enter__()
+
+        def __exit__(self, *exc):
+            return self._inner.__exit__(*exc)
+
+    offs = [m.reserve(10_000) for _ in range(16)]
+    m._grow_lock = CountingLockProxy(m._grow_lock)
+    ts = [
+        threading.Thread(target=m.pwrite, args=(off, bytes([i % 256]) * 10_000))
+        for i, off in enumerate(offs)
+    ]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert acquisitions == []  # in-bounds writes: lock-free
+    for i, off in enumerate(offs):
+        assert m.buf[off] == i % 256 and m.buf[off + 9999] == i % 256
+
+
+def test_memory_sink_unreserved_write_still_grows():
+    m = MemorySink()
+    m.pwrite(100, b"zz")  # direct use without reserve: fallback grow path
+    assert bytes(m.buf[100:102]) == b"zz"
+
+
+def test_memory_sink_close_keeps_unreserved_writes():
+    """Preallocated sink + direct in-bounds writes without reserve():
+    close() must trim only padding, never written data."""
+    m = MemorySink(capacity=1024)
+    m.pwrite(0, b"hello world")
+    m.pwritev(11, [b" and", b" more"])
+    m.close()
+    assert bytes(m.buf) == b"hello world and more"
+
+
+# ---------------------------------------------------------------------------
+# member side-car: parallel member decompression + compatibility
+
+
+def _member_file(chunk=4 * 1024):
+    sink = MemorySink()
+    write_file(sink, WriteOptions(**{**BASE, "page_size": 32 * 1024,
+                                     "codec_chunk_bytes": chunk}))
+    return sink
+
+
+def test_sidecar_written_and_parsed():
+    sink = _member_file()
+    r = RNTJReader(sink)
+    framed = [p for cm in r.clusters for p in cm.pages if p.members]
+    assert framed, "expected chunk-framed pages"
+    for p in framed:
+        assert sum(p.members) == p.size
+        assert p.member_chunk == 4 * 1024
+
+
+def test_parallel_member_decode_matches_serial():
+    sink = _member_file()
+    serial = RNTJReader(sink, options=ReadOptions(decode_workers=0))
+    par = RNTJReader(
+        sink, options=ReadOptions(decode_workers=3, parallel_members=True)
+    )
+    for path in ("id", "vals", "vals._0"):
+        np.testing.assert_array_equal(
+            serial.read_column(path), par.read_column(path)
+        )
+    par.close()
+
+
+def test_unframed_file_has_no_sidecar_and_roundtrips():
+    sink = MemorySink()
+    write_file(sink, WriteOptions(**{**BASE, "codec_chunk_bytes": 0}))
+    r = RNTJReader(
+        sink, options=ReadOptions(decode_workers=2, parallel_members=True)
+    )
+    assert all(p.members is None for cm in r.clusters for p in cm.pages)
+    assert r.n_entries == 4000
+    assert len(r.read_column("id")) == 4000
+
+
+def test_corrupt_sidecar_record_falls_back_to_serial_decode():
+    sink = _member_file()
+    r = RNTJReader(
+        sink, options=ReadOptions(decode_workers=2, parallel_members=True)
+    )
+    # sabotage the in-memory member records: inconsistent sizes must make
+    # the page decode serially, not wrongly
+    for cm in r.clusters:
+        for p in cm.pages:
+            if p.members:
+                p.members = [p.size + 1]  # does not tile the payload
+    assert len(r.read_column("id")) == 4000
+
+
+def test_merge_preserves_member_sidecar():
+    import tempfile
+    import os
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = []
+        for i in range(2):
+            p = os.path.join(d, f"in{i}.rntj")
+            write_file(p, WriteOptions(**{**BASE, "page_size": 32 * 1024}),
+                       seed=i)
+            paths.append(p)
+        out = os.path.join(d, "merged.rntj")
+        merge_files(paths, out)
+        r = RNTJReader(out)
+        framed = [p for cm in r.clusters for p in cm.pages if p.members]
+        assert framed  # the raw fast path carried the member records over
+        serial = RNTJReader(out, options=ReadOptions(decode_workers=0))
+        par = RNTJReader(
+            out, options=ReadOptions(decode_workers=3, parallel_members=True)
+        )
+        np.testing.assert_array_equal(
+            serial.read_column("vals._0"), par.read_column("vals._0")
+        )
+
+
+# ---------------------------------------------------------------------------
+# rate-aware adaptive codec policy
+
+
+def test_rate_aware_policy_keeps_codec_on_slow_sink():
+    pol = CodecPolicy(1, sample_pages=2, threshold=0.5, rate_aware=True)
+    pol.observe_drain(1_000_000, int(1e9))  # 1 MB/s drain
+    # ratio 0.8 misses the threshold, but saves 200 KB per 0.01 s of CPU
+    # (20 MB/s savings rate) — far above the 1 MB/s drain: keep
+    pol.record(0, 500_000, 400_000, ns=int(5e6))
+    pol.record(0, 500_000, 400_000, ns=int(5e6))
+    assert pol.decision(0) is True
+
+
+def test_rate_aware_policy_drops_codec_on_fast_sink():
+    pol = CodecPolicy(1, sample_pages=2, threshold=0.5, rate_aware=True)
+    pol.observe_drain(10_000_000_000, int(1e9))  # 10 GB/s drain
+    pol.record(0, 500_000, 400_000, ns=int(5e6))
+    pol.record(0, 500_000, 400_000, ns=int(5e6))
+    assert pol.decision(0) is False
+
+
+def test_rate_aware_policy_defers_until_drain_observed():
+    pol = CodecPolicy(1, sample_pages=2, threshold=0.5, rate_aware=True)
+    pol.record(0, 1000, 900, ns=1000)
+    pol.record(0, 1000, 900, ns=1000)
+    assert pol.decision(0) is None  # would drop, but no bandwidth signal yet
+    pol.observe_drain(1000, int(1e9))  # 1 KB/s: pathologically slow
+    pol.record(0, 1000, 900, ns=1000)
+    assert pol.decision(0) is True
+
+
+def test_rate_aware_deferral_is_bounded():
+    pol = CodecPolicy(1, sample_pages=2, threshold=0.5, rate_aware=True)
+    for _ in range(8):  # 4 * sample_pages with no drain signal
+        pol.record(0, 1000, 900, ns=1000)
+    assert pol.decision(0) is False  # forced ratio-only decision
+
+
+def test_ratio_rule_unchanged_without_rate_aware():
+    pol = CodecPolicy(1, sample_pages=2, threshold=0.5)
+    pol.record(0, 1000, 900)
+    pol.record(0, 1000, 900)
+    assert pol.decision(0) is False
+
+
+def test_rate_aware_end_to_end_throttled_vs_fast():
+    schema = vec_schema()
+
+    def run(sink):
+        opts = WriteOptions(codec="zlib", level=1, cluster_bytes=1 << 18,
+                            adaptive_codec=True, adaptive_sample_pages=4,
+                            adaptive_threshold=0.8, adaptive_rate_aware=True)
+        rng = np.random.default_rng(0)
+        w = SequentialWriter(schema, sink, opts)
+        for i in range(8):
+            w.fill_batch(make_batch(schema, rng, 8000, id0=i * 8000))
+        keep = w._policy.decision(2)  # the incompressible float column
+        w.close()
+        return keep
+
+    assert run(DevNullSink()) is False          # fast sink: not worth CPU
+    assert run(ThrottledSink(DevNullSink(), bw=2e6)) is True  # slow: worth it
