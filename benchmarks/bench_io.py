@@ -5,25 +5,32 @@ Measures, on the paper's synthetic nested-event workload at codec
 the whole story, with no entropy-coder noise):
 
  1. the **commit matrix** — DevNull / Memory sinks × {assembled
-    monolithic pwrite, scatter-gather pwritev, scatter + striped
-    parallel pwrite}: single-producer fill+seal+commit wall time and the
-    phase breakdown.  Scatter eliminates the cluster-assembly memcpy;
-    striping turns one big extent write into parallel sub-extent jobs.
+    monolithic pwrite, scatter-gather pwritev (buffer pool on and off),
+    scatter + striped parallel pwrite, scatter + write-behind through
+    the emulated submission ring}: single-producer fill+seal+commit wall
+    time, the phase breakdown, and each cell's buffer-pool hit rate.
+    Scatter eliminates the cluster-assembly memcpy; the pool eliminates
+    the per-detach allocation it left behind; striping turns one big
+    extent write into parallel sub-extent jobs; the ring turns
+    per-stripe executor futures into deque appends (DESIGN.md §6.7/§6.8).
  2. **write-behind vs a throttled device** — a ThrottledSink whose
     bandwidth sits ABOVE the producer's aggregate rate (storage can keep
     up, but a synchronous commit still serializes producer and device).
     Write-behind must hold fill+seal throughput within ~10% of the
     /dev/null ceiling while the synchronous path pays the full device
-    time on the producer's clock.
+    time on the producer's clock.  Both submission backends are
+    measured: the ring (default) and the PR-4 executor path
+    (``io_ring="off"``).
  3. a **parallel-writer cell** — 4 producers into one MemorySink file,
-    assembled vs the full engine (scatter + striped + write-behind).
+    assembled vs the full engine (scatter + ring write-behind).
 
 Every configuration's MemorySink file is asserted **byte-identical** to
 the assembled-path reference file, and the reference is cross-checked
 cluster by cluster through the vendored pre-PR-2 seed reader — the
 engine changes how bytes are *submitted*, never what they are.
 
-Emits ``BENCH_io.json`` (repo root by default).
+Emits ``BENCH_io.json`` (repo root by default); the field schema is
+documented in ``benchmarks/README.md``.
 
 Run:  PYTHONPATH=src python benchmarks/bench_io.py [--quick]
 """
@@ -59,8 +66,14 @@ CLUSTER = 2 * 1024 * 1024
 MODES: Dict[str, dict] = {
     "assembled": dict(scatter_commit=False),
     "scatter": dict(scatter_commit=True),
+    "scatter+nopool": dict(scatter_commit=True, buffer_pool_bytes=0),
     "scatter+striped": dict(scatter_commit=True, io_stripe_bytes=512 * 1024,
                             io_workers=4),
+    # async submission: queued commits through the emulated ring (one
+    # drain worker — a single sink stream needs no more)
+    "scatter+ring": dict(scatter_commit=True,
+                         io_inflight_bytes=32 * 1024 * 1024,
+                         io_ring="emulated", io_workers=1),
 }
 
 
@@ -153,6 +166,7 @@ def run_matrix(batches, nbytes: int, repeats: int, out: dict) -> None:
         results = run_interleaved(factory, batches, configs, repeats)
         for mode, (wall, stats) in results.items():
             d = stats.as_dict()
+            pool_total = d["pool_hits"] + d["pool_misses"]
             rec = {
                 "sink": sink_name,
                 "mode": mode,
@@ -161,8 +175,12 @@ def run_matrix(batches, nbytes: int, repeats: int, out: dict) -> None:
                 "seal_ms": round(d["seal_ms"], 1),
                 "commit_ms": round(d["commit_ms"], 1),
                 "io_ms": round(d["io_ms"], 1),
+                "io_submit_ms": round(d["io_submit_ms"], 2),
                 "write_calls": d["write_calls"],
                 "writev_calls": d["writev_calls"],
+                "pool_hit_rate": (
+                    round(d["pool_hits"] / pool_total, 3) if pool_total else None
+                ),
             }
             if sink_name == "memory":
                 sink = MemorySink()
@@ -181,18 +199,28 @@ def run_matrix(batches, nbytes: int, repeats: int, out: dict) -> None:
     # engine-best vs the assembled monolithic pwrite: striping only pays
     # where the write itself has cost (memory/file); on devnull the win
     # is the eliminated assembly memcpy alone
+    engine_modes = ("scatter", "scatter+striped", "scatter+ring")
     out["speedup_engine_best"] = {
         s: round(
-            wall(s, "assembled")
-            / min(wall(s, "scatter"), wall(s, "scatter+striped")), 3)
+            wall(s, "assembled") / min(wall(s, m) for m in engine_modes), 3)
         for s in ("devnull", "memory")
     }
     out["speedup_scatter_striped"] = {
         s: round(wall(s, "assembled") / wall(s, "scatter+striped"), 3)
         for s in ("devnull", "memory")
     }
+    out["speedup_pool"] = {
+        s: round(wall(s, "scatter+nopool") / wall(s, "scatter"), 3)
+        for s in ("devnull", "memory")
+    }
+    out["speedup_ring"] = {
+        s: round(wall(s, "assembled") / wall(s, "scatter+ring"), 3)
+        for s in ("devnull", "memory")
+    }
     for s, x in out["speedup_engine_best"].items():
-        print(f"  {s}: engine best vs assembled monolithic = {x:.2f}x")
+        print(f"  {s}: engine best vs assembled monolithic = {x:.2f}x "
+              f"(pool {out['speedup_pool'][s]:.2f}x, "
+              f"ring {out['speedup_ring'][s]:.2f}x)")
 
 
 # ---------------------------------------------------------------------------
@@ -218,8 +246,10 @@ def run_write_behind(batches, nbytes: int, repeats: int, out: dict) -> None:
     def throttled():
         return ThrottledSink(DevNullSink(), bw=bw)
 
-    # all three interleaved per round (incl. the devnull ceiling), so box
-    # drift cancels out of the ratios the acceptance criterion compares
+    # all configs interleaved per round (incl. the devnull ceiling), so
+    # box drift cancels out of the ratios the acceptance criterion
+    # compares.  Both async submission backends are measured: the ring
+    # (default; one deque append per extent) and the PR-4 executor path.
     opts_by_name = {
         "devnull": base_options(**wb_base),
         "sync": base_options(**wb_base),
@@ -227,7 +257,10 @@ def run_write_behind(batches, nbytes: int, repeats: int, out: dict) -> None:
         # quota-throttled CI boxes every extra wakeup steals producer time
         "write_behind": base_options(**wb_base,
                                      io_inflight_bytes=32 * 1024 * 1024,
-                                     io_workers=1),
+                                     io_ring="emulated", io_workers=1),
+        "write_behind_executor": base_options(**wb_base,
+                                              io_inflight_bytes=32 * 1024 * 1024,
+                                              io_ring="off", io_workers=1),
     }
     best = {name: (float("inf"), None) for name in opts_by_name}
     for _ in range(repeats):
@@ -240,21 +273,30 @@ def run_write_behind(batches, nbytes: int, repeats: int, out: dict) -> None:
     devnull_wall, _ = best["devnull"]
     sync_wall, _ = best["sync"]
     wb_wall, wb_stats = best["write_behind"]
+    exec_wall, _ = best["write_behind_executor"]
     d = wb_stats.as_dict()
+    pool_total = d["pool_hits"] + d["pool_misses"]
     out["write_behind"] = {
         "throttle_mb_s": round(bw / 1e6, 1),
         "devnull_wall_s": round(devnull_wall, 4),
         "sync_wall_s": round(sync_wall, 4),
         "write_behind_wall_s": round(wb_wall, 4),
+        "write_behind_executor_wall_s": round(exec_wall, 4),
         "vs_devnull": round(wb_wall / devnull_wall, 3),
+        "executor_vs_devnull": round(exec_wall / devnull_wall, 3),
         "sync_vs_devnull": round(sync_wall / devnull_wall, 3),
         "io_stall_ms": round(d["io_stall_ms"], 1),
+        "io_submit_ms": round(d["io_submit_ms"], 2),
         "io_jobs": d["io_jobs"],
         "io_inflight_peak_bytes": d["io_inflight_peak_bytes"],
+        "pool_hit_rate": (
+            round(d["pool_hits"] / pool_total, 3) if pool_total else None
+        ),
     }
     print(f"  devnull {devnull_wall:.3f}s | sync {sync_wall:.3f}s "
-          f"({sync_wall / devnull_wall:.2f}x) | write-behind {wb_wall:.3f}s "
-          f"({wb_wall / devnull_wall:.2f}x of devnull)")
+          f"({sync_wall / devnull_wall:.2f}x) | ring {wb_wall:.3f}s "
+          f"({wb_wall / devnull_wall:.2f}x of devnull) | executor "
+          f"{exec_wall:.3f}s ({exec_wall / devnull_wall:.2f}x)")
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,11 @@ metric compared against the paper).
   roofline  dry-run summary             (EXPERIMENTS §Roofline; requires
             benchmarks/results/dryrun/*.json from repro.launch.dryrun)
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+``--list`` enumerates every runnable benchmark (the figure harnesses
+above plus the per-engine ``bench_*.py`` scripts and the JSON each one
+emits — the same names benchmarks/README.md documents) and exits.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick | --list]
 """
 
 from __future__ import annotations
@@ -24,12 +28,38 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import fig2_devnull, fig3_ssd, fig4_hdd, fig5_skim, roofline
 
+# every runnable benchmark: (name, invocation, emitted artifact).
+# benchmarks/README.md documents the same names and JSON schemas —
+# keep the two lists in sync (test_system checks --list works).
+BENCHMARKS = [
+    ("bench_writer", "python benchmarks/bench_writer.py", "BENCH_writer.json"),
+    ("bench_reader", "python benchmarks/bench_reader.py", "BENCH_reader.json"),
+    ("bench_codec", "python benchmarks/bench_codec.py", "BENCH_codec.json"),
+    ("bench_io", "python benchmarks/bench_io.py", "BENCH_io.json"),
+    ("fig2_devnull", "python -m benchmarks.run", "stdout CSV row"),
+    ("fig3_ssd", "python -m benchmarks.run", "stdout CSV row"),
+    ("fig4_hdd", "python -m benchmarks.run", "stdout CSV row"),
+    ("fig5_skim", "python -m benchmarks.run", "stdout CSV row"),
+    ("roofline", "python -m benchmarks.run", "stdout CSV row"),
+]
+
+
+def list_benchmarks() -> None:
+    print(f"{'name':14s}  {'run with':36s}  emits")
+    for name, cmd, emits in BENCHMARKS:
+        print(f"{name:14s}  {cmd:36s}  {emits}")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--entries", type=int, default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate every benchmark + emitted JSON and exit")
     args = ap.parse_args()
+    if args.list:
+        list_benchmarks()
+        return
     entries = args.entries or (100_000 if args.quick else 200_000)
     events = 3_000 if args.quick else 8_000
 

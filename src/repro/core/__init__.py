@@ -32,6 +32,7 @@ from .merge import BufferMerger, merge_files
 from .container import (
     Sink,
     FileSink,
+    AsyncFileSink,
     DevNullSink,
     MemorySink,
     ThrottledSink,
@@ -40,17 +41,22 @@ from .container import (
 )
 from .stats import ReaderStats, WriterStats, CountingLock
 from .colbuf import ColumnBuffer
+from .bufpool import BufferPool, PoolStats, Recyclable
 from .ioengine import IOEngine
-from . import compression, encoding, ioengine, metadata, pages, cluster, colbuf
+from . import (
+    bufpool, compression, encoding, ioengine, metadata, pages, cluster,
+    colbuf,
+)
 
 __all__ = [
     "Schema", "Field", "Leaf", "Collection", "Record", "ColumnSpec",
     "ColumnBatch", "KIND_LEAF", "KIND_OFFSET", "decompose_entry",
     "recompose_entries", "WriteOptions", "SequentialWriter", "ParallelWriter",
     "FillContext", "write_entries", "RNTJReader", "ReadOptions",
-    "BufferMerger", "merge_files", "Sink", "FileSink", "DevNullSink",
-    "MemorySink", "ThrottledSink", "close_all", "open_sink", "WriterStats",
-    "ReaderStats", "CountingLock", "ColumnBuffer", "IOEngine",
-    "compression", "encoding", "ioengine", "metadata", "pages", "cluster",
-    "colbuf",
+    "BufferMerger", "merge_files", "Sink", "FileSink", "AsyncFileSink",
+    "DevNullSink", "MemorySink", "ThrottledSink", "close_all", "open_sink",
+    "WriterStats", "ReaderStats", "CountingLock", "ColumnBuffer",
+    "BufferPool", "PoolStats", "Recyclable", "IOEngine",
+    "bufpool", "compression", "encoding", "ioengine", "metadata", "pages",
+    "cluster", "colbuf",
 ]

@@ -92,6 +92,11 @@ class SealedCluster:
     codec_stats: Optional[Dict[int, List[int]]] = None
     iovecs: Optional[List] = None  # scatter-gather payload buffers
     nbytes: int = -1               # total payload bytes (-1: use len(blob))
+    # detached buffers backing raw-stored iovecs, returned to the
+    # writer's BufferPool by the I/O engine once this cluster's last
+    # write lands (this object and its iovecs must not be read after
+    # that point — DESIGN.md §6.8)
+    recycle: Optional[List] = None
 
     @property
     def size(self) -> int:
@@ -143,7 +148,8 @@ class ClusterBuilder:
                  chunk_bytes: int = 0,
                  policy: Optional[comp.CodecPolicy] = None,
                  precondition: bool = True,
-                 scatter: bool = False):
+                 scatter: bool = False,
+                 buffer_pool=None):
         self.schema = schema
         self.page_size = page_size
         self.codec = codec
@@ -151,6 +157,10 @@ class ClusterBuilder:
         self.checksum = checksum
         self.chunk_bytes = chunk_bytes
         self.scatter = scatter
+        # writer-shared BufferPool (DESIGN.md §6.8): column storage and
+        # preconditioning scratch draw from it, and seal() hands detached
+        # buffers to the sealed cluster for completion-time recycling
+        self._bufpool = buffer_pool
         self._policy = policy
         # effective per-column specs: encodings drop to ENC_NONE when
         # preconditioning is disabled (the reader honors the header flag)
@@ -165,6 +175,7 @@ class ClusterBuilder:
             ColumnBuffer(
                 OFFSET_DTYPE if c.kind == KIND_OFFSET else c.dtype,
                 capacity=self._page_elems[c.index],
+                pool=buffer_pool,
             )
             for c in schema.columns
         ]
@@ -175,8 +186,9 @@ class ClusterBuilder:
         # unbuffered mode: elements already drained into standalone pages
         self._drained: List[int] = [0] * schema.n_columns
         # seal() runs on one thread at a time; the scratch amortizes the
-        # column-wide preconditioning temporaries across clusters
-        self._scratch = EncodeScratch()
+        # column-wide preconditioning temporaries across clusters (and
+        # recycles them through the pool when one is attached)
+        self._scratch = EncodeScratch(pool=buffer_pool)
         # None = no explicit table: every page uses the live
         # ``self.codec``/``self.level`` (kept mutable for tests and
         # ad-hoc callers)
@@ -300,9 +312,10 @@ class ClusterBuilder:
         # element counts BEFORE gathering: _detach_aliased hands raw-page
         # columns' storage to the sealed cluster, emptying the buffers
         n_elements = [len(c) for c in self._cols]
+        recycle = None
         if self.scatter:
             blob = None
-            iovecs, descs, compress_ns, codec_stats = self._gather(
+            iovecs, descs, compress_ns, codec_stats, recycle = self._gather(
                 plan, final, build_ns
             )
         else:
@@ -321,6 +334,7 @@ class ClusterBuilder:
             codec_stats=codec_stats,
             iovecs=iovecs,
             nbytes=total,
+            recycle=recycle,
         )
         self._reset()
         return sealed
@@ -520,10 +534,10 @@ class ClusterBuilder:
             st[1] += len(raw)
             st[2] += size
             st[3] += ns
-        self._detach_aliased(alias_cols)
-        return iovecs, descs, compress_ns, codec_stats
+        recycle = self._detach_aliased(alias_cols)
+        return iovecs, descs, compress_ns, codec_stats, recycle
 
-    def _detach_aliased(self, alias_cols) -> None:
+    def _detach_aliased(self, alias_cols) -> Optional[List]:
         """Hand ownership of raw-aliased buffers to the sealed cluster.
 
         A raw-stored part is a view of either this builder's per-column
@@ -533,19 +547,28 @@ class ClusterBuilder:
         next fill/seal of this builder would overwrite the bytes before a
         write-behind commit drains them.  Dropping the scratch slot /
         detaching the ColumnBuffer storage makes the next cluster allocate
-        fresh buffers — an O(1) allocation instead of the O(bytes)
-        assembly memcpy the scatter path exists to avoid.  Columns whose
-        pages all compressed keep their buffers for steady-state reuse.
+        fresh buffers — recycled from the writer's :class:`BufferPool`
+        when one is attached, a fresh O(1) allocation otherwise; either
+        way no O(bytes) assembly memcpy.  Columns whose pages all
+        compressed keep their buffers for steady-state reuse.
+
+        Returns the detached arrays so the sealed cluster can carry them
+        to the I/O engine, which returns them to the pool when the
+        cluster's last write lands (``SealedCluster.recycle``).
         """
         if not alias_cols:
-            return
+            return None
+        detached: List = []
         for col in self._specs:
             if col.index not in alias_cols:
                 continue
             if col.encoding == ENC_NONE:
-                self._cols[col.index].detach()
+                detached.append(self._cols[col.index].detach())
             else:
-                self._scratch._bufs.pop(f"u8:{col.index}", None)
+                buf = self._scratch._bufs.pop(f"u8:{col.index}", None)
+                if buf is not None:
+                    detached.append(buf)
+        return detached if self._bufpool is not None else None
 
     # -- page draining (unbuffered mode) -------------------------------------
 
@@ -594,6 +617,7 @@ class ClusterBuilder:
         t0 = _ns()
         payload, desc = build_page(
             col, elems, codec, level, self.checksum, self.chunk_bytes, pool,
+            buffer_pool=self._bufpool,
         )
         build_ns = _ns() - t0
         if self._policy is not None and codec != comp.CODEC_NONE:

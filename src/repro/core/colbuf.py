@@ -14,6 +14,12 @@ Offset columns additionally use :meth:`reserve`: the builder reserves the
 tail slice and integrates collection sizes into cluster-relative end
 offsets directly in place (``np.cumsum(..., out=tail)``), avoiding the
 temporary the seed allocated per batch.
+
+With a :class:`~repro.core.bufpool.BufferPool` attached, storage is drawn
+from the pool's power-of-two size classes instead of ``np.empty`` — so
+:meth:`detach` (the scatter-gather seal handing storage to a queued
+commit) recycles instead of allocating once the I/O engine returns the
+previous cluster's buffers on write completion (DESIGN.md §6.8).
 """
 
 from __future__ import annotations
@@ -28,12 +34,21 @@ DEFAULT_CAPACITY = 1024
 class ColumnBuffer:
     """Amortized-doubling contiguous buffer of primitive elements."""
 
-    __slots__ = ("dtype", "_data", "_len")
+    __slots__ = ("dtype", "pool", "_data", "_len")
 
-    def __init__(self, dtype, capacity: int = DEFAULT_CAPACITY):
+    def __init__(self, dtype, capacity: int = DEFAULT_CAPACITY, pool=None):
         self.dtype = np.dtype(dtype)
-        self._data = np.empty(max(int(capacity), 1), dtype=self.dtype)
+        self.pool = pool
+        self._data = self._alloc(max(int(capacity), 1))
         self._len = 0
+
+    def _alloc(self, n_elems: int) -> np.ndarray:
+        """Storage for ``n_elems`` elements — pooled when a pool is set
+        (the returned view keeps the pooled base array alive)."""
+        if self.pool is not None:
+            raw = self.pool.take(n_elems * self.dtype.itemsize)
+            return raw.view(self.dtype)
+        return np.empty(n_elems, dtype=self.dtype)
 
     # -- introspection -----------------------------------------------------
 
@@ -53,9 +68,13 @@ class ColumnBuffer:
     def _grow(self, need: int) -> None:
         cap = len(self._data)
         new_cap = max(need, 2 * cap)
-        data = np.empty(new_cap, dtype=self.dtype)
+        data = self._alloc(new_cap)
         data[: self._len] = self._data[: self._len]
-        self._data = data
+        old, self._data = self._data, data
+        if self.pool is not None:
+            # the outgrown storage is aliased by nothing durable (views
+            # are documented invalid after extend/reserve): recycle it
+            self.pool.put(old)
 
     # -- filling -----------------------------------------------------------
 
@@ -105,11 +124,13 @@ class ColumnBuffer:
 
         Used by the scatter-gather seal: zero-copy views of the old
         storage stay valid (numpy views keep their base alive) while this
-        buffer refills into new storage — the next :meth:`extend` pays one
-        allocation instead of the assembly memcpy it replaces.  Returns
-        the detached array.
+        buffer refills into new storage.  With a pool, the replacement is
+        recycled from the pool's size classes and the detached array is
+        returned to the pool by the I/O engine when the queued write that
+        references it lands — steady-state detaching is then
+        allocation-free.  Returns the detached array.
         """
         old = self._data
-        self._data = np.empty(max(len(old), 1), dtype=self.dtype)
+        self._data = self._alloc(max(len(old), 1))
         self._len = 0
         return old

@@ -316,6 +316,9 @@ class CodecPolicy:
     exists yet, a would-drop column keeps sampling (up to
     ``4 * sample_pages`` pages) instead of locking a decision the rate
     data could reverse.
+
+    Constructor parameters are tabulated in DESIGN.md §7.3 (the writer
+    builds one from the ``adaptive_*`` fields of DESIGN.md §7.1).
     """
 
     def __init__(self, n_columns: int, sample_pages: int = 8,

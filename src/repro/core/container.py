@@ -7,6 +7,8 @@ done by the writer's critical section) and *write bytes at an offset*
 
 Sinks:
   * :class:`FileSink`      — a real file, ``os.pwrite`` + optional fallocate.
+  * :class:`AsyncFileSink` — a FileSink advertising native ring submission
+    (io_uring via the thin liburing binding, DESIGN.md §6.7).
   * :class:`DevNullSink`   — infinitely fast storage (paper Fig. 2).
   * :class:`ThrottledSink` — bandwidth-limited wrapper to emulate the SSD /
     HDD of Figs. 3–4 on this container (token-bucket on write completion).
@@ -102,6 +104,28 @@ class Sink:
     def pread(self, offset: int, size: int) -> bytes:
         raise NotImplementedError
 
+    def pread_into(self, offset: int, buf) -> int:
+        """Read ``len(buf)`` bytes at ``offset`` into a caller-provided
+        writable buffer; returns the byte count.
+
+        The allocation-free read primitive the buffer pool wants: the
+        merge fast path and the read engine pass pooled buffers here
+        instead of taking a fresh ``bytes`` from :meth:`pread` per call.
+        The base implementation copies through :meth:`pread` so every
+        sink (including test subclasses) works unchanged; ``FileSink``
+        overrides it with ``os.preadv``.  A short read raises — the
+        caller's buffer may be recycled pool storage, and silently
+        leaving a stale tail would corrupt whatever the bytes feed.
+        """
+        mv = memoryview(buf)
+        data = self.pread(offset, len(mv))
+        if len(data) != len(mv):
+            raise EOFError(
+                f"short read at {offset}: {len(data)} of {len(mv)} bytes"
+            )
+        mv[:] = data
+        return len(data)
+
     def _count_write(self, calls: int, nbytes: int) -> None:
         with self._stat_lock:
             self.io.write_calls += calls
@@ -168,6 +192,11 @@ class FileSink(Sink):
         i = 0
         while i < len(bufs):
             n = os.pwritev(self.fd, bufs[i : i + IOV_MAX], offset + pos)
+            if n <= 0:  # no progress: raising beats spinning forever
+                raise IOError(
+                    f"pwritev wrote 0 of {total - pos} bytes at "
+                    f"{offset + pos} of {self.path}"
+                )
             calls += 1
             pos += n
             # advance past fully written buffers; re-slice a partial one
@@ -198,6 +227,24 @@ class FileSink(Sink):
         self._count_read(calls, size)
         return bytes(out)
 
+    def pread_into(self, offset: int, buf) -> int:
+        """Zero-allocation positioned read via ``os.preadv`` (short reads
+        resumed), used by pooled-buffer readers (merge's raw copies)."""
+        if type(self).pread is not FileSink.pread or not hasattr(os, "preadv"):
+            return super().pread_into(offset, buf)
+        mv = memoryview(buf)
+        size = len(mv)
+        pos = 0
+        calls = 0
+        while pos < size:
+            n = os.preadv(self.fd, [mv[pos:]], offset + pos)
+            if n <= 0:
+                raise EOFError(f"short read at {offset}+{pos} of {self.path}")
+            pos += n
+            calls += 1
+        self._count_read(calls, size)
+        return size
+
     def fallocate(self, offset: int, size: int) -> None:
         super().fallocate(offset, size)
         if size <= 0:
@@ -219,6 +266,33 @@ class FileSink(Sink):
 
     def readable(self) -> bool:
         return True
+
+
+class AsyncFileSink(FileSink):
+    """A :class:`FileSink` that opts into **native ring submission**.
+
+    With write-behind enabled (``WriteOptions.io_inflight_bytes > 0``)
+    and ``io_ring`` in auto mode, the I/O engine submits this sink's
+    queued extents through an io_uring submission ring when the thin
+    ctypes/liburing binding loads (DESIGN.md §6.7) — batched kernel
+    submission instead of one completion thread call per write.  On
+    platforms without liburing the engine transparently uses its
+    emulated ring: same bytes, same accounting, same failure semantics.
+
+    Synchronous operations (header, footer, reads) behave exactly like
+    :class:`FileSink` — this class only *advertises* the capability via
+    :attr:`native_ring`; a subclass that overrides :meth:`pwrite` or
+    :meth:`pwritev` (fault injection, instrumentation) stops advertising
+    it, because a kernel ring would bypass the override.
+    """
+
+    @property
+    def native_ring(self) -> bool:
+        return (
+            type(self).pwrite is FileSink.pwrite
+            and type(self).pwritev is FileSink.pwritev
+            and self.fd >= 0
+        )
 
 
 class DevNullSink(Sink):
@@ -317,6 +391,20 @@ class MemorySink(Sink):
         out = bytes(self.buf[offset : offset + size])
         self._count_read(1, len(out))
         return out
+
+    def pread_into(self, offset: int, buf) -> int:
+        if type(self).pread is not MemorySink.pread:
+            return super().pread_into(offset, buf)
+        mv = memoryview(buf)
+        n = len(mv)
+        src = memoryview(self.buf)[offset : offset + n]
+        if len(src) != n:  # same contract as every other pread_into
+            raise EOFError(
+                f"short read at {offset}: {len(src)} of {n} bytes"
+            )
+        mv[:] = src
+        self._count_read(1, n)
+        return n
 
     def readable(self) -> bool:
         return True
@@ -418,10 +506,21 @@ class ThrottledSink(Sink):
         return self.inner.readable()
 
 
-def open_sink(path, create: bool = True) -> Sink:
+def open_sink(path, create: bool = True, async_io: bool = False) -> Sink:
+    """Resolve a path-ish spec to a sink.
+
+    ``/dev/null``/``devnull``/``null:`` → :class:`DevNullSink`; ``mem:``
+    → :class:`MemorySink`; an ``async:`` prefix (or ``async_io=True``)
+    → :class:`AsyncFileSink`, which lets the I/O engine use io_uring
+    ring submission when available; anything else → :class:`FileSink`.
+    """
     path = os.fspath(path)  # accept str and os.PathLike alike
     if path in ("/dev/null", "devnull", "null:"):
         return DevNullSink()
     if path == "mem:":
         return MemorySink()
+    if path.startswith("async:"):
+        return AsyncFileSink(path[len("async:"):], create=create)
+    if async_io:
+        return AsyncFileSink(path, create=create)
     return FileSink(path, create=create)

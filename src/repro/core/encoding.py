@@ -98,15 +98,31 @@ class EncodeScratch:
     One instance per thread (pages.py keeps them thread-local): a page
     build reuses the same scratch arrays instead of allocating fresh
     intermediates for the split transpose and the delta/zigzag stages.
+
+    With a :class:`~repro.core.bufpool.BufferPool` attached (the
+    cluster builder's writer-shared pool), scratch storage is drawn
+    from — and outgrown buffers returned to — the pool's power-of-two
+    size classes, so the scatter-gather seal's detached scratch slots
+    recycle instead of reallocating (DESIGN.md §6.8).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, pool=None) -> None:
         self._bufs: dict = {}
+        self._pool = pool
 
     def array(self, key: str, dtype, n: int) -> np.ndarray:
+        dtype = np.dtype(dtype)
         buf = self._bufs.get(key)
         if buf is None or len(buf) < n:
-            buf = np.empty(max(n, 4096), dtype=dtype)
+            if self._pool is not None:
+                if buf is not None:
+                    # outgrown and referenced by nothing durable (detached
+                    # slots were popped, compressed payloads are copies)
+                    self._pool.put(buf)
+                raw = self._pool.take(max(n, 4096) * dtype.itemsize)
+                buf = raw.view(dtype)
+            else:
+                buf = np.empty(max(n, 4096), dtype=dtype)
             self._bufs[key] = buf
         return buf[:n]
 
@@ -398,7 +414,8 @@ def unprecondition(buf: bytes, encoding: str, dtype: np.dtype, n: int) -> np.nda
 
 # Pallas offsets_scan dispatch: REPRO_OFFSETS_BACKEND = auto | numpy | pallas.
 # "auto" only selects the kernel on an accelerator backend (tpu/gpu); the
-# CPU interpret path exists for correctness tests, not speed.
+# CPU interpret path exists for correctness tests, not speed.  All REPRO_*
+# environment variables are tabulated in DESIGN.md §7.4.
 _OFFSETS_BACKEND = os.environ.get("REPRO_OFFSETS_BACKEND", "auto").lower()
 _PALLAS_MIN_ELEMS = int(os.environ.get("REPRO_OFFSETS_PALLAS_MIN", "65536"))
 _pallas_scan = None  # resolved lazily; False once ruled out

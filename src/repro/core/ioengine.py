@@ -1,8 +1,8 @@
-"""The sink-side I/O engine: scatter-gather, striped, write-behind commits.
+"""The sink-side I/O engine: scatter-gather, striped, async-ring commits.
 
 The paper's evaluation (§5) scales the CPU side of parallel writing until
 it is "only limited by storage bandwidth" — this module makes our commit
-path actually behave that way (DESIGN.md §6).  Three cooperating levers,
+path actually behave that way (DESIGN.md §6).  Four cooperating levers,
 each individually optional:
 
 * **scatter-gather** — a sealed cluster's iovec plan goes to
@@ -10,16 +10,31 @@ each individually optional:
   ``ClusterBuilder._gather``; this engine only chooses *how* to submit);
 * **striping** — an extent larger than ``stripe_bytes`` splits into
   independent sub-extent jobs at computed offsets inside the reserved
-  extent, executed concurrently on the engine pool, so ONE producer can
-  keep a deep device queue busy the way chunked compression keeps the
-  codec pool busy;
+  extent, executed concurrently, so ONE producer can keep a deep device
+  queue busy the way chunked compression keeps the codec pool busy;
 * **write-behind** — with ``inflight_bytes > 0`` a commit only *enqueues*
   its extent; producers seal cluster N+1..N+k while earlier extents
   drain.  ``admit()`` is the backpressure gate (called before the
   writer's critical section, so a stalled producer never holds the
   commit lock), errors poison the writer through ``on_error`` exactly
   like a synchronous failed ``pwrite``, and ``drain()`` is the
-  drain-before-footer barrier ``close()`` runs.
+  drain-before-footer barrier ``close()`` runs;
+* **ring submission** (DESIGN.md §6.7) — queued extents go onto a
+  **submission ring** instead of one executor future per stripe: an
+  io_uring ring through a thin ctypes/liburing binding when the library
+  loads and the sink is a real fd (``AsyncFileSink``), otherwise a
+  completion-thread + ``pwritev`` emulation whose observable behavior —
+  ``io_inflight_bytes`` accounting, poisoning, drain-before-footer
+  ordering, byte output — is identical on every platform.  A producer's
+  submit cost drops to one deque append + notify (``io_submit_ns``
+  counts it), and completions fold back through the same accounting as
+  the executor path.
+
+The engine also closes the commit path's last allocation: with a
+:class:`~repro.core.bufpool.BufferPool` attached, an extent owner's
+detached scatter buffers are **returned to the pool when the extent's
+last write lands** — never earlier, because a queued commit's iovecs
+alias them until then (DESIGN.md §6.8).
 
 The fsync policy rides here too: ``"on_close"`` (default; the writer's
 close() fsyncs, as always), ``"every_cluster"`` (fsync when an extent's
@@ -33,10 +48,16 @@ thread.
 
 from __future__ import annotations
 
+import ctypes
+import ctypes.util
+import os
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Tuple
+
+import numpy as _np
 
 _ns = time.perf_counter_ns
 
@@ -48,6 +69,11 @@ DEFAULT_IO_WORKERS = 4
 FSYNC_ON_CLOSE = "on_close"
 FSYNC_EVERY_CLUSTER = "every_cluster"
 
+RING_AUTO = "auto"
+RING_EMULATED = "emulated"
+RING_URING = "uring"
+RING_OFF = "off"
+
 
 class _ExtentGroup:
     """One logical extent (a cluster or page) split into 1..n stripe jobs."""
@@ -58,8 +84,425 @@ class _ExtentGroup:
         self.remaining = remaining
         self.nbytes = nbytes
         # the SealedCluster (or any object) whose buffers back the iovecs:
-        # referenced until the last stripe lands, then released
+        # referenced until the last stripe lands, then recycled + released
         self.owner = owner
+
+
+# ---------------------------------------------------------------------------
+# submission rings
+
+
+class _RingOp:
+    __slots__ = ("group", "off", "parts", "nbytes")
+
+    def __init__(self, group, off, parts, nbytes):
+        self.group = group
+        self.off = off
+        self.parts = parts
+        self.nbytes = nbytes
+
+
+class EmulatedRing:
+    """Completion-thread + ``pwritev`` emulation of the submission ring.
+
+    Producers append ops under one condition variable (a deque append —
+    no future allocation, no executor work-queue churn); ``workers``
+    completion threads pop small batches and execute them through the
+    engine's normal job body, so accounting, poisoning and drain
+    semantics are *identical* to the io_uring backend and to the
+    executor path it replaces.
+    """
+
+    # ops claimed per lock acquisition: amortizes wakeups without letting
+    # one thread hoard the queue
+    BATCH = 8
+
+    def __init__(self, engine: "IOEngine", workers: int):
+        self._engine = engine
+        self._cv = threading.Condition()
+        self._ops: deque = deque()
+        self._stop = False
+        self._workers = max(1, workers)
+        # completion threads start lazily at the first submit, so a
+        # writer that never enters write-behind (or a skim spawning many
+        # writers) pays no idle threads — matching the executor path
+        self._threads: List[threading.Thread] = []
+
+    def _ensure_threads(self) -> None:
+        if self._threads:
+            return
+        self._threads = [
+            threading.Thread(
+                target=self._loop, daemon=True, name=f"rntj-ring-{i}"
+            )
+            for i in range(self._workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, group, off, parts, nbytes) -> None:
+        with self._cv:
+            self._ensure_threads()
+            self._ops.append(_RingOp(group, off, parts, nbytes))
+            self._cv.notify()
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._ops and not self._stop:
+                    self._cv.wait()
+                if not self._ops:
+                    return  # stopping and drained
+                batch = [
+                    self._ops.popleft()
+                    for _ in range(min(len(self._ops), self.BATCH))
+                ]
+            for op in batch:
+                self._engine._run_job(op.group, op.off, op.parts, op.nbytes)
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join()
+
+
+# -- io_uring (thin ctypes/liburing binding) --------------------------------
+#
+# Only engaged when (a) liburing.so loads, (b) the sink advertises a raw
+# fd with no pwrite override (AsyncFileSink), and (c) REPRO_IO_URING is
+# not "0".  The emulated ring above is the behavioral reference; this
+# backend must be observationally identical (same bytes, same poisoning,
+# same drain ordering) — it only changes *how* queued writes reach the
+# kernel: batched SQE submission, no thread per write.
+
+IORING_OP_WRITEV = 2
+_URING_DEPTH = 256
+
+
+class _IoUringSqe(ctypes.Structure):  # kernel UAPI, 64 bytes, stable
+    _fields_ = [
+        ("opcode", ctypes.c_uint8), ("flags", ctypes.c_uint8),
+        ("ioprio", ctypes.c_uint16), ("fd", ctypes.c_int32),
+        ("off", ctypes.c_uint64), ("addr", ctypes.c_uint64),
+        ("len", ctypes.c_uint32), ("rw_flags", ctypes.c_uint32),
+        ("user_data", ctypes.c_uint64), ("buf_index", ctypes.c_uint16),
+        ("personality", ctypes.c_uint16), ("splice_fd_in", ctypes.c_int32),
+        ("pad2", ctypes.c_uint64 * 2),
+    ]
+
+
+class _IoUringCqe(ctypes.Structure):  # kernel UAPI, stable
+    _fields_ = [
+        ("user_data", ctypes.c_uint64), ("res", ctypes.c_int32),
+        ("flags", ctypes.c_uint32),
+    ]
+
+
+class _IoUringSq(ctypes.Structure):  # liburing 2.x ABI
+    _fields_ = [
+        ("khead", ctypes.POINTER(ctypes.c_uint)),
+        ("ktail", ctypes.POINTER(ctypes.c_uint)),
+        ("kring_mask", ctypes.POINTER(ctypes.c_uint)),
+        ("kring_entries", ctypes.POINTER(ctypes.c_uint)),
+        ("kflags", ctypes.POINTER(ctypes.c_uint)),
+        ("kdropped", ctypes.POINTER(ctypes.c_uint)),
+        ("array", ctypes.POINTER(ctypes.c_uint)),
+        ("sqes", ctypes.POINTER(_IoUringSqe)),
+        ("sqe_head", ctypes.c_uint), ("sqe_tail", ctypes.c_uint),
+        ("ring_sz", ctypes.c_size_t), ("ring_ptr", ctypes.c_void_p),
+        ("pad", ctypes.c_uint * 4),
+    ]
+
+
+class _IoUringCq(ctypes.Structure):  # liburing 2.x ABI
+    _fields_ = [
+        ("khead", ctypes.POINTER(ctypes.c_uint)),
+        ("ktail", ctypes.POINTER(ctypes.c_uint)),
+        ("kring_mask", ctypes.POINTER(ctypes.c_uint)),
+        ("kring_entries", ctypes.POINTER(ctypes.c_uint)),
+        ("kflags", ctypes.POINTER(ctypes.c_uint)),
+        ("koverflow", ctypes.POINTER(ctypes.c_uint)),
+        ("cqes", ctypes.POINTER(_IoUringCqe)),
+        ("ring_sz", ctypes.c_size_t), ("ring_ptr", ctypes.c_void_p),
+        ("pad", ctypes.c_uint * 4),
+    ]
+
+
+class _IoUring(ctypes.Structure):
+    _fields_ = [
+        ("sq", _IoUringSq), ("cq", _IoUringCq),
+        ("flags", ctypes.c_uint), ("ring_fd", ctypes.c_int),
+        ("features", ctypes.c_uint), ("enter_ring_fd", ctypes.c_int),
+        ("int_flags", ctypes.c_uint8), ("pad", ctypes.c_uint8 * 3),
+        ("pad2", ctypes.c_uint),
+    ]
+
+
+class _Iovec(ctypes.Structure):
+    _fields_ = [("iov_base", ctypes.c_void_p), ("iov_len", ctypes.c_size_t)]
+
+
+_liburing = None          # loaded library handle; False once ruled out
+_liburing_lock = threading.Lock()
+
+
+def load_liburing():
+    """The liburing handle, or ``None`` when unavailable.
+
+    ``REPRO_IO_URING=0`` disables loading outright (the emulated ring is
+    then the only async backend); any load/symbol failure also resolves
+    to ``None`` — callers fall back, they never crash.
+    """
+    global _liburing
+    with _liburing_lock:
+        if _liburing is None:
+            if os.environ.get("REPRO_IO_URING", "").strip() == "0":
+                _liburing = False
+            else:
+                _liburing = _try_load_liburing() or False
+    return _liburing or None
+
+
+def _try_load_liburing():
+    name = ctypes.util.find_library("uring")
+    candidates = [name] if name else []
+    candidates += ["liburing.so.2", "liburing.so.1", "liburing.so"]
+    for cand in candidates:
+        if not cand:
+            continue
+        try:
+            lib = ctypes.CDLL(cand, use_errno=True)
+            for sym in ("io_uring_queue_init", "io_uring_get_sqe",
+                        "io_uring_submit", "__io_uring_get_cqe",
+                        "io_uring_queue_exit"):
+                getattr(lib, sym)
+            lib.io_uring_queue_init.restype = ctypes.c_int
+            lib.io_uring_submit.restype = ctypes.c_int
+            lib.io_uring_get_sqe.restype = ctypes.POINTER(_IoUringSqe)
+            lib.__io_uring_get_cqe.restype = ctypes.c_int
+            return lib
+        except (OSError, AttributeError):
+            continue
+    return None
+
+
+class UringRing:
+    """io_uring submission ring over a raw file descriptor.
+
+    One event-loop thread both flushes queued ops as batched SQEs (one
+    ``io_uring_submit`` syscall for a whole burst — the submission cost
+    the executor path paid per stripe) and reaps CQEs, folding each
+    completion back through the engine's normal accounting.  Buffers and
+    iovec arrays are pinned in ``_live`` from submit to completion.
+    """
+
+    def __init__(self, engine: "IOEngine", fd: int, lib=None,
+                 depth: int = _URING_DEPTH):
+        self._engine = engine
+        self._fd = fd
+        self._lib = lib or load_liburing()
+        if self._lib is None:
+            raise ValueError(
+                "io_uring requested but liburing is not loadable on this "
+                "platform (and REPRO_IO_URING may disable it); use the "
+                "emulated ring instead"
+            )
+        self._ring = _IoUring()
+        rc = self._lib.io_uring_queue_init(
+            ctypes.c_uint(depth), ctypes.byref(self._ring), ctypes.c_uint(0)
+        )
+        if rc < 0:
+            raise OSError(-rc, "io_uring_queue_init failed")
+        self._cv = threading.Condition()
+        self._ops: deque = deque()
+        self._stop = False
+        self._live = {}  # user_data -> (op, iovec array, pinned parts, t0)
+        self._next_id = 1
+        self._seen_fence = threading.Lock()  # memory fence for CQ-head store
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="rntj-uring"
+        )
+        self._thread.start()
+
+    def submit(self, group, off, parts, nbytes) -> None:
+        with self._cv:
+            self._ops.append(_RingOp(group, off, parts, nbytes))
+            self._cv.notify()
+
+    # -- event loop ----------------------------------------------------------
+
+    def _prep(self, op: _RingOp) -> bool:
+        sqe = self._lib.io_uring_get_sqe(ctypes.byref(self._ring))
+        if not sqe:
+            return False  # SQ full: flush + reap first
+        parts = [memoryview(p) for p in op.parts if len(p)]
+        iov = (_Iovec * max(1, len(parts)))()
+        # read-only views reject ctypes.from_buffer; a zero-copy numpy
+        # wrap exposes the address either way, and pinning the wrapper
+        # (plus the view it holds) keeps the bytes alive until the CQE
+        pinned = []
+        for i, mv in enumerate(parts):
+            arr = _np.frombuffer(mv, dtype=_np.uint8)
+            iov[i].iov_base = arr.ctypes.data
+            iov[i].iov_len = arr.nbytes
+            pinned.append(arr)
+        uid = self._next_id
+        self._next_id += 1
+        s = sqe.contents
+        s.opcode = IORING_OP_WRITEV
+        s.flags = 0
+        s.ioprio = 0
+        s.fd = self._fd
+        s.off = op.off
+        s.addr = ctypes.cast(iov, ctypes.c_void_p).value or 0
+        s.len = len(parts)
+        s.rw_flags = 0
+        s.user_data = uid
+        s.buf_index = 0
+        s.personality = 0
+        s.splice_fd_in = 0
+        self._live[uid] = (op, iov, pinned, self._engine._job_begin())
+        return True
+
+    def _reap(self, wait: bool) -> int:
+        cqe_pp = ctypes.POINTER(_IoUringCqe)()
+        rc = self._lib.__io_uring_get_cqe(
+            ctypes.byref(self._ring), ctypes.byref(cqe_pp),
+            ctypes.c_uint(0), ctypes.c_uint(1 if wait else 0), None,
+        )
+        if rc < 0 or not cqe_pp:
+            return 0
+        cqe = cqe_pp.contents
+        uid, res = cqe.user_data, cqe.res
+        # mark seen: advance the CQ head.  The store must not become
+        # visible before the field loads above (liburing uses a release
+        # store); pure ctypes has no atomics, so acquire/release a lock —
+        # a full fence on CPython — between the loads and the store.
+        with self._seen_fence:
+            self._ring.cq.khead.contents.value = (
+                self._ring.cq.khead.contents.value + 1
+            )
+        entry = self._live.pop(uid, None)
+        if entry is None:
+            return 1
+        op, _iov, _pinned, t0 = entry
+        err = None
+        if res > 0:
+            # the kernel wrote past the Sink API: account what landed so
+            # IOStats stays truthful on the native ring path too (a
+            # partial write's resumed tail is counted by sink.pwrite)
+            self._engine.sink._count_writev(1, res)
+        if res < 0:
+            err = OSError(-res, os.strerror(-res))
+        elif res != op.nbytes:
+            # a partial vectored write: finish it synchronously through
+            # the engine (correctness first; partials are rare here)
+            try:
+                self._engine._pwritev_resume(op.off, op.parts, res)
+            except BaseException as e:  # noqa: BLE001
+                err = e
+        self._engine._job_end(op.group, op.nbytes, t0, err)
+        return 1
+
+    def _submit_prepared(self) -> Optional[OSError]:
+        """Flush prepared SQEs to the kernel.  On failure, fail every
+        in-flight op (their SQEs never reached — or will never leave —
+        the kernel, so no CQE will ever arrive; silently dropping them
+        would hang ``drain()`` forever).  Poisoning through ``_job_end``
+        matches a failed synchronous ``pwrite``; returns the error."""
+        rc = self._lib.io_uring_submit(ctypes.byref(self._ring))
+        if rc >= 0:
+            return None
+        err = OSError(-rc, os.strerror(-rc))
+        for uid in list(self._live):
+            op, _iov, _pinned, t0 = self._live.pop(uid)
+            self._engine._job_end(op.group, op.nbytes, t0, err)
+        return err
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._ops and not self._stop and not self._live:
+                    self._cv.wait()
+                if self._stop and not self._ops and not self._live:
+                    return
+                batch = list(self._ops)
+                self._ops.clear()
+            err = None
+            for i, op in enumerate(batch):
+                while err is None and not self._prep(op):
+                    # SQ full: flush prepared SQEs, then reap for room
+                    err = self._submit_prepared()
+                    if err is None:
+                        self._reap(wait=True)
+                if err is not None:
+                    # submission is dead: fail this op and the rest of
+                    # the batch (never prepped into _live; _job_begin
+                    # here keeps the engine's running-window balanced)
+                    for rest in batch[i:]:
+                        self._engine._job_end(
+                            rest.group, rest.nbytes,
+                            self._engine._job_begin(), err,
+                        )
+                    break
+            if err is None and batch:
+                self._submit_prepared()
+            # reap whatever is ready; block only when nothing new can be
+            # submitted and completions are still owed
+            while self._reap(wait=False):
+                pass
+            if self._live:
+                with self._cv:
+                    if self._ops or self._stop:
+                        continue
+                self._reap(wait=True)
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join()
+        self._lib.io_uring_queue_exit(ctypes.byref(self._ring))
+
+
+def make_ring(engine: "IOEngine", mode, workers: int):
+    """Resolve a ring ``mode`` to a backend (or ``None`` for the
+    executor path): ``"uring"`` requires the liburing binding + a native
+    async sink and raises otherwise; ``"auto"`` prefers io_uring when
+    both are available and falls back to the emulation; ``"emulated"``
+    forces the emulation; ``"off"``/falsy keeps the PR-4 executor
+    submission."""
+    if not mode or mode == RING_OFF:
+        return None
+    if mode is True:
+        mode = RING_AUTO
+    if mode not in (RING_AUTO, RING_EMULATED, RING_URING):
+        raise ValueError(f"unknown io_ring mode {mode!r}")
+    sink = engine.sink
+    fd = getattr(sink, "fd", None)
+    # only a sink that advertises native ring capability (AsyncFileSink:
+    # a real fd AND no pwrite override — instrumentation/fault-injection
+    # subclasses must keep seeing every byte) may bypass Sink.pwritev
+    native = bool(getattr(sink, "native_ring", False)) and isinstance(fd, int)
+    if mode == RING_URING:
+        if not native:
+            raise ValueError(
+                "io_ring='uring' needs an AsyncFileSink (a real fd with no "
+                "pwrite override)"
+            )
+        return UringRing(engine, fd)
+    if mode == RING_AUTO and native and load_liburing() is not None:
+        try:
+            return UringRing(engine, fd)
+        except (OSError, ValueError):
+            pass  # kernel without io_uring etc.: fall through to emulation
+    return EmulatedRing(engine, workers)
+
+
+# ---------------------------------------------------------------------------
+# the engine
 
 
 class IOEngine:
@@ -69,9 +512,12 @@ class IOEngine:
     every commit path (buffered clusters, unbuffered pages, merge's raw
     cluster copies).  Synchronous mode writes on the calling thread
     (striped over the pool when configured) and returns the measured
-    io_ns; write-behind mode enqueues and returns 0 — the workers add
-    their io time to ``stats`` directly and report drained bytes through
-    ``on_drain`` (the rate-aware codec policy's bandwidth signal).
+    io_ns; write-behind mode enqueues — onto the submission ring when one
+    is configured (``ring=``), else as executor jobs — and returns 0: the
+    workers add their io time to ``stats`` directly and report drained
+    bytes through ``on_drain`` (the rate-aware codec policy's bandwidth
+    signal).  ``buffer_pool`` receives an extent owner's recyclable
+    buffers when its last write lands.
     """
 
     def __init__(
@@ -84,18 +530,28 @@ class IOEngine:
         stats=None,
         on_error: Optional[Callable] = None,
         on_drain: Optional[Callable] = None,
+        ring=RING_OFF,
+        buffer_pool=None,
     ):
         self.sink = sink
         self.stripe_bytes = int(stripe_bytes)
         self.inflight_bytes = int(inflight_bytes)
         self.stats = stats
+        self.buffer_pool = buffer_pool
         self._on_error = on_error
         self._on_drain = on_drain
         if not workers and (self.stripe_bytes > 0 or self.inflight_bytes > 0):
             workers = DEFAULT_IO_WORKERS
+        self._workers = workers
+        # the submission ring exists only in write-behind mode; when it
+        # does, it owns all queued submissions and the executor would be
+        # dead weight — create one or the other, never both
+        self._ring = (
+            make_ring(self, ring, workers) if self.inflight_bytes > 0 else None
+        )
         self._pool = (
             ThreadPoolExecutor(max_workers=workers, thread_name_prefix="rntj-io")
-            if workers
+            if workers and self._ring is None
             else None
         )
         self._cv = threading.Condition()
@@ -124,7 +580,15 @@ class IOEngine:
     def async_mode(self) -> bool:
         """True when commits are queued (write-behind) instead of written
         on the committing thread."""
-        return self.inflight_bytes > 0 and self._pool is not None
+        return self.inflight_bytes > 0 and (
+            self._pool is not None or self._ring is not None
+        )
+
+    @property
+    def ring(self):
+        """The active submission ring backend, or ``None`` (executor
+        submission / synchronous mode)."""
+        return self._ring
 
     # -- backpressure ---------------------------------------------------------
 
@@ -186,6 +650,7 @@ class IOEngine:
                 raise
             io_ns = _ns() - t0
             self._extent_done(nbytes)
+            self._recycle(owner)
             if self._on_drain is not None:
                 self._on_drain(nbytes, io_ns)
             return io_ns
@@ -195,6 +660,7 @@ class IOEngine:
             # refuse anyway) but keep the budget accounting balanced
             self._release(nbytes)
             return 0
+        t0 = _ns()
         group = _ExtentGroup(len(stripes), nbytes, owner)
         with self._cv:
             self._pending += len(stripes)
@@ -202,8 +668,14 @@ class IOEngine:
         if self.stats is not None:
             for _ in stripes:
                 self.stats.note_io_job(depth, self._inflight)
-        for s_off, s_parts, s_n in stripes:
-            self._pool.submit(self._run_job, group, s_off, s_parts, s_n)
+        if self._ring is not None:
+            for s_off, s_parts, s_n in stripes:
+                self._ring.submit(group, s_off, s_parts, s_n)
+        else:
+            for s_off, s_parts, s_n in stripes:
+                self._pool.submit(self._run_job, group, s_off, s_parts, s_n)
+        if self.stats is not None:
+            self.stats.add_io_submit_ns(_ns() - t0)
         return 0
 
     def _stripes(self, off: int, parts: List, nbytes: int
@@ -213,7 +685,7 @@ class IOEngine:
         if (
             self.stripe_bytes <= 0
             or nbytes <= self.stripe_bytes
-            or self._pool is None
+            or (self._pool is None and self._ring is None)
         ):
             return [(off, list(parts), nbytes)]
         out: List[Tuple[int, List, int]] = []
@@ -242,46 +714,91 @@ class IOEngine:
         else:
             self.sink.pwritev(off, parts)
 
-    def _run_job(self, group: _ExtentGroup, off: int, parts: List,
-                 nbytes: int) -> None:
+    def _pwritev_resume(self, off: int, parts: List, written: int) -> None:
+        """Finish a partially completed vectored write from byte
+        ``written`` onward (io_uring short-write recovery)."""
+        pos = 0
+        for p in parts:
+            mv = memoryview(p)
+            n = len(mv)
+            if written >= pos + n:
+                pos += n
+                continue
+            skip = max(0, written - pos)
+            self.sink.pwrite(off + pos + skip, mv[skip:])
+            pos += n
+
+    # -- job body (executor and ring workers share it) ------------------------
+
+    def _job_begin(self) -> int:
         t0 = _ns()
         with self._cv:
             if self._running == 0:
                 self._busy_start = t0
             self._running += 1
+        return t0
+
+    def _job_end(self, group: _ExtentGroup, nbytes: int, t0: int,
+                 err: Optional[BaseException]) -> None:
+        """Completion fold shared by every async backend: stats, budget
+        release, busy-window drain reporting, last-stripe recycling +
+        fsync, poisoning."""
+        io_ns = _ns() - t0
+        if err is not None:
+            self._fail(err)
+        if self.stats is not None:
+            self.stats.add_io_ns(io_ns)
+        last = False
+        drained = None
+        with self._cv:
+            self._running -= 1
+            self._drained_bytes += nbytes
+            if self._running == 0:
+                # window closed: report accumulated bytes over the
+                # union busy time — the sink's actual drain bandwidth
+                drained = (self._drained_bytes, _ns() - self._busy_start)
+                self._drained_bytes = 0
+            self._pending -= 1
+            self._inflight -= nbytes
+            group.remaining -= 1
+            last = group.remaining == 0
+            self._cv.notify_all()
+        if drained is not None and self._on_drain is not None:
+            self._on_drain(*drained)
+        if last:
+            # the extent's final byte has landed (or failed): only now is
+            # it safe to hand its buffers back to the pool — a queued
+            # write referenced them until this moment
+            self._recycle(group.owner)
+            group.owner = None  # release the sealed cluster's buffers
+            if self._error is None:
+                try:
+                    self._extent_done(group.nbytes)
+                except BaseException as e:
+                    self._fail(e)
+
+    def _run_job(self, group: _ExtentGroup, off: int, parts: List,
+                 nbytes: int) -> None:
+        t0 = self._job_begin()
+        err = None
         try:
             if self._error is None:
                 self._pwritev(off, parts)
         except BaseException as e:
-            self._fail(e)
-        finally:
-            io_ns = _ns() - t0
-            if self.stats is not None:
-                self.stats.add_io_ns(io_ns)
-            last = False
-            drained = None
-            with self._cv:
-                self._running -= 1
-                self._drained_bytes += nbytes
-                if self._running == 0:
-                    # window closed: report accumulated bytes over the
-                    # union busy time — the sink's actual drain bandwidth
-                    drained = (self._drained_bytes, _ns() - self._busy_start)
-                    self._drained_bytes = 0
-                self._pending -= 1
-                self._inflight -= nbytes
-                group.remaining -= 1
-                last = group.remaining == 0
-                self._cv.notify_all()
-            if drained is not None and self._on_drain is not None:
-                self._on_drain(*drained)
-            if last:
-                group.owner = None  # release the sealed cluster's buffers
-                if self._error is None:
-                    try:
-                        self._extent_done(group.nbytes)
-                    except BaseException as e:
-                        self._fail(e)
+            err = e
+        self._job_end(group, nbytes, t0, err)
+
+    def _recycle(self, owner) -> None:
+        """Return an extent owner's pooled buffers (``owner.recycle``)."""
+        if owner is None or self.buffer_pool is None:
+            return
+        bufs = getattr(owner, "recycle", None)
+        if bufs:
+            self.buffer_pool.put_all(bufs)
+            try:
+                owner.recycle = None
+            except AttributeError:
+                pass
 
     def _fail(self, e: BaseException) -> None:
         with self._cv:
@@ -324,5 +841,8 @@ class IOEngine:
 
     def close(self) -> None:
         self.drain()
+        if self._ring is not None:
+            self._ring.close()
+            self._ring = None
         if self._pool is not None:
             self._pool.shutdown(wait=True)

@@ -14,6 +14,7 @@ from __future__ import annotations
 import threading
 from typing import List, Optional, Sequence
 
+from .bufpool import Recyclable
 from .container import MemorySink, close_all
 from .encoding import offsets_to_sizes
 from .metadata import ClusterMeta
@@ -30,23 +31,43 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
     decompression and no re-encoding.  The bytes go out through the
     writer's I/O engine, so merges inherit striping and write-behind from
     the output's ``WriteOptions`` for free (framed-member side-car records
-    ride along on the rebased descriptors).
+    ride along on the rebased descriptors).  With a writer buffer pool
+    the copy buffer is pooled too — ``pread_into`` a recycled buffer,
+    returned by the engine when the cluster's write lands — so the merge
+    path performs no per-cluster allocation in steady state.
     """
+    pool = writer._bufpool
     for idx, cm in enumerate(reader.clusters):
+        owner = None
         if cm.byte_size:
-            blob = reader.sink.pread(cm.byte_offset, cm.byte_size)
+            if pool is not None:
+                blob = pool.take_view(cm.byte_size)
+                reader.sink.pread_into(cm.byte_offset, blob)
+                owner = Recyclable([blob.obj])
+            else:
+                blob = reader.sink.pread(cm.byte_offset, cm.byte_size)
             base = cm.byte_offset
         else:
             # unbuffered-mode source: pages are scattered; gather them.
-            parts, descs = [], []
+            pages = sorted(cm.pages, key=lambda p: p.offset)
+            descs = []
             pos = 0
-            for p in sorted(cm.pages, key=lambda p: p.offset):
-                parts.append(reader.sink.pread(p.offset, p.size))
+            for p in pages:
                 q = p.rebase(-p.offset)  # zero-base
                 q.offset = pos
                 pos += p.size
                 descs.append(q)
-            blob = b"".join(parts)
+            if pool is not None:
+                blob = pool.take_view(pos)
+                for p, q in zip(pages, descs):
+                    reader.sink.pread_into(
+                        p.offset, blob[q.offset : q.offset + p.size]
+                    )
+                owner = Recyclable([blob.obj])
+            else:
+                blob = b"".join(
+                    reader.sink.pread(p.offset, p.size) for p in pages
+                )
             cm = ClusterMeta(cm.first_entry, cm.n_entries, cm.n_elements, descs, 0, len(blob))
             base = 0
         writer._io.admit(len(blob))
@@ -64,7 +85,7 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
                     byte_size=len(blob),
                 )
             )
-            writer._submit_or_latch(off, [blob], len(blob))
+            writer._submit_or_latch(off, [blob], len(blob), owner=owner)
         writer.stats.clusters += 1
         writer.stats.entries += cm.n_entries
         writer.stats.pages += len(cm.pages)

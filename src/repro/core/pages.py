@@ -88,6 +88,7 @@ def build_page(
     checksum: bool = True,
     chunk_bytes: int = 0,
     pool=None,
+    buffer_pool=None,
 ) -> (bytes, PageDesc):
     """Precondition + compress one page of elements.
 
@@ -103,15 +104,27 @@ def build_page(
 
     ``elements`` may be a zero-copy view into a live ColumnBuffer; the
     preconditioned bytes live in a per-thread scratch, so the returned
-    payload is always an independent ``bytes`` object.
+    payload is always independent of the caller's buffers.  With a
+    ``buffer_pool``, a raw-stored payload is a memoryview of a pooled
+    buffer instead of a fresh ``bytes`` copy — the unbuffered commit
+    path hands it to the I/O engine, which returns the buffer to the
+    pool once the page's write lands (DESIGN.md §6.8).
     """
+
+    def materialize(raw_buf):
+        if buffer_pool is None:
+            return bytes(raw_buf)
+        buf = buffer_pool.take(len(raw_buf))
+        buf[: len(raw_buf)] = raw_buf
+        return memoryview(buf)[: len(raw_buf)]
+
     raw = precondition_buffer(elements, col.encoding, _thread_scratch())
     uncompressed_size = len(raw)
     used_codec = codec
     members = None
     if codec == comp.CODEC_NONE:
         # materialize: raw aliases the scratch (or the caller's buffer)
-        payload = bytes(raw)
+        payload = materialize(raw)
         crc = zlib.crc32(payload) if checksum else 0
     else:
         # Like ROOT, fall back to storing uncompressed when compression
@@ -119,7 +132,7 @@ def build_page(
         parts = comp.compress_parts(raw, codec, level, chunk_bytes, pool)
         size = sum(len(p) for p in parts)
         if size >= uncompressed_size:
-            payload, used_codec = bytes(raw), comp.CODEC_NONE
+            payload, used_codec = materialize(raw), comp.CODEC_NONE
             crc = zlib.crc32(payload) if checksum else 0
         else:
             # per-chunk CRCs fold into the page checksum incrementally

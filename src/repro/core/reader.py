@@ -40,6 +40,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import compression as comp
+from .bufpool import make_pool as make_buffer_pool
 from .container import FileSink, Sink
 from .encoding import unprecondition_pages_into
 from .encoding import unprecondition_into
@@ -99,6 +100,17 @@ class ReadOptions:
       side-car, decompress a chunked page's members as independent
       pool jobs (needs ``decode_workers``); files without the side-car
       (or with it disabled) decode members serially inside one job.
+    * ``buffer_pool_bytes`` — residency bound of the reader-owned
+      :class:`~repro.core.bufpool.BufferPool` (member-decompress scratch
+      always recycles through it; 0 disables pooling).
+    * ``recycle_buffers`` — draw the per-column decode output arrays from
+      the pool and let :meth:`RNTJReader.iter_clusters` return the
+      previous cluster's arrays once the consumer advances.  The yielded
+      arrays are then only valid until the next iteration — strictly a
+      streaming contract (``iter_entries``/``read_column`` never recycle,
+      they may hold views across clusters).
+
+    The full option table lives in DESIGN.md §7.
     """
 
     coalesce_gap: int = 256 * 1024
@@ -106,6 +118,8 @@ class ReadOptions:
     decode_workers: int = 0
     prefetch_clusters: int = 1
     parallel_members: bool = True
+    buffer_pool_bytes: int = 32 * 1024 * 1024
+    recycle_buffers: bool = False
 
 
 class RNTJReader:
@@ -126,6 +140,10 @@ class RNTJReader:
         self._decode_pool = None
         self._prefetch_pool = None
         self._pool_lock = threading.Lock()
+        # reader-owned buffer pool: member-decompress scratch always
+        # recycles through it; decode output arrays do too when
+        # recycle_buffers is on (DESIGN.md §6.8)
+        self._bufpool = make_buffer_pool(self.read_options.buffer_pool_bytes)
         self._closed = False
         try:
             if not self.sink.readable():
@@ -192,6 +210,27 @@ class RNTJReader:
     def n_clusters(self) -> int:
         return len(self.clusters)
 
+    def _alloc_column(self, ci: int, count: int) -> np.ndarray:
+        """One decode output array — drawn from the reader's buffer pool
+        when ``recycle_buffers`` is on (returned via :meth:`recycle`)."""
+        dtype = self.schema.columns[ci].dtype
+        if self._bufpool is not None and self.read_options.recycle_buffers:
+            raw = self._bufpool.take(count * dtype.itemsize)
+            return raw.view(dtype)[:count]
+        return np.empty(count, dtype=dtype)
+
+    def recycle(self, cols: Dict[int, np.ndarray]) -> None:
+        """Return a cluster's decoded arrays to the reader's pool.
+
+        Only call this when nothing references the arrays (or views of
+        them) anymore; ``iter_clusters`` does it automatically for the
+        previous cluster when ``ReadOptions.recycle_buffers`` is set.
+        """
+        if self._bufpool is None:
+            return
+        for arr in cols.values():
+            self._bufpool.put(arr)
+
     def _coalesce(self, descs: List[PageDesc]) -> List[Tuple[int, int, List[PageDesc]]]:
         """Plan the cluster's reads: ``[(offset, end, pages)]`` ranges.
 
@@ -239,8 +278,7 @@ class RNTJReader:
         for d in descs:
             counts[d.column] += d.n_elements
         out: Dict[int, np.ndarray] = {
-            ci: np.empty(counts[ci], dtype=self.schema.columns[ci].dtype)
-            for ci in targets
+            ci: self._alloc_column(ci, counts[ci]) for ci in targets
         }
         if not descs:
             return out
@@ -368,7 +406,13 @@ class RNTJReader:
                         "page checksum mismatch (column "
                         f"{self.schema.columns[d.column].path!r})"
                     )
-                raw = bytearray(d.uncompressed_size)
+                # member scratch recycles through the reader pool: it is
+                # internal (dropped right after the unprecondition copies
+                # into the output array), so pooling it is always safe
+                if self._bufpool is not None:
+                    raw = self._bufpool.take_view(d.uncompressed_size)
+                else:
+                    raw = bytearray(d.uncompressed_size)
                 member_state[id(d)] = (raw, [0])
                 for coff, csz, uoff, ulen in plan:
                     mjobs.append((d, payload[coff : coff + csz], raw, uoff, ulen))
@@ -393,6 +437,8 @@ class RNTJReader:
                 raw, col.encoding, out[d.column][s : s + d.n_elements],
                 _thread_scratch(),
             )
+            if self._bufpool is not None:
+                self._bufpool.put(raw)  # scratch fully copied out: recycle
             return acc[0], _ns() - t0, {
                 d.codec: [1, d.size, d.uncompressed_size, acc[0]]
             }
@@ -439,6 +485,7 @@ class RNTJReader:
         columns: Optional[Sequence[int]] = None,
         start: int = 0,
         stop: Optional[int] = None,
+        recycle: Optional[bool] = None,
     ) -> Iterator[Tuple[int, Dict[int, np.ndarray]]]:
         """Yield ``(cluster_index, {column: elements})`` in entry order.
 
@@ -446,15 +493,28 @@ class RNTJReader:
         and decoded on a background pool while the caller consumes the
         current one; the ``wait`` phase of :class:`ReaderStats` records
         how long the consumer actually blocked.
+
+        ``recycle`` (default: ``ReadOptions.recycle_buffers``) returns
+        each cluster's arrays to the reader's buffer pool once the
+        consumer advances past it — the yielded arrays are then only
+        valid until the next iteration.  ``iter_entries`` and
+        ``read_column`` always pass ``False``: they may hold views of a
+        cluster's arrays beyond the iteration that produced them.
         """
         n = self.n_clusters
         if stop is None or stop > n:
             stop = n
+        if recycle is None:
+            recycle = self.read_options.recycle_buffers
+        recycle = recycle and self._bufpool is not None
         depth = self.read_options.prefetch_clusters
         pool = self._get_prefetch_pool() if depth > 0 else None
         if pool is None:
             for i in range(start, stop):
-                yield i, self.read_cluster(i, columns)
+                cols = self.read_cluster(i, columns)
+                yield i, cols
+                if recycle:
+                    self.recycle(cols)
             return
         pending: deque = deque()
         nxt = start
@@ -473,6 +533,10 @@ class RNTJReader:
                     pending.append((nxt, pool.submit(self.read_cluster, nxt, columns)))
                     nxt += 1
                 yield i, cols
+                if recycle:
+                    # the consumer advanced: this cluster's arrays feed
+                    # the allocations of the clusters still to come
+                    self.recycle(cols)
         finally:
             for _, fut in pending:
                 fut.cancel()
@@ -501,7 +565,8 @@ class RNTJReader:
             if fields is None
             else [self.schema.column_of_path[c.path] for c in schema.columns]
         )
-        for i, cols in self.iter_clusters(columns=file_idx):
+        # recycle=False: recomposed entries may hold views of the arrays
+        for i, cols in self.iter_clusters(columns=file_idx, recycle=False):
             idx = file_idx if file_idx is not None else range(self.schema.n_columns)
             arrays = [cols[j] for j in idx]
             yield from recompose_entries(schema, arrays, self.clusters[i].n_entries)
@@ -524,7 +589,9 @@ class RNTJReader:
             ]
             child = children[0] if children else None
             base = 0
-            for i, cols in self.iter_clusters(columns=[ci]):
+            # recycle=False on both paths: chunks holds every cluster's
+            # array until the final concatenate
+            for i, cols in self.iter_clusters(columns=[ci], recycle=False):
                 arr = cols[ci].astype(np.int64)
                 chunks.append(arr + base)
                 if child is not None:
@@ -532,7 +599,7 @@ class RNTJReader:
                 elif len(arr):
                     base += int(arr[-1])
         else:
-            for _i, cols in self.iter_clusters(columns=[ci]):
+            for _i, cols in self.iter_clusters(columns=[ci], recycle=False):
                 chunks.append(cols[ci])
         return (
             np.concatenate(chunks)
@@ -549,6 +616,8 @@ class RNTJReader:
         if self._decode_pool is not None:
             self._decode_pool.shutdown(wait=True)
         self.stats.merge_io(self.sink.io.snapshot())
+        if self._bufpool is not None:
+            self.stats.merge_pool(self._bufpool.snapshot())
         self.sink.close()
 
     def __enter__(self):

@@ -151,6 +151,12 @@ class WriterStats:
     io_jobs: int = 0         # write jobs executed by the engine
     io_queue_peak: int = 0   # max write jobs queued/running at once
     io_inflight_peak: int = 0  # max write-behind bytes in flight at once
+    # -- async submission + buffer pool (DESIGN.md §6.7/§6.8) ---------------
+    io_submit_ns: int = 0    # producer time spent submitting queued extents
+    pool_hits: int = 0       # buffer-pool takes served from a size class
+    pool_misses: int = 0     # buffer-pool takes that had to allocate
+    pool_returns: int = 0    # buffers returned to the pool
+    pool_drops: int = 0      # returns rejected (residency bound / foreign)
     entries: int = 0
     clusters: int = 0
     pages: int = 0
@@ -211,6 +217,21 @@ class WriterStats:
         with self._mu:
             self.io_stall_ns += ns
 
+    def add_io_submit_ns(self, ns: int) -> None:
+        """Producer time spent handing a queued extent to the engine
+        (ring append / pool dispatch) — the submission overhead the async
+        engine exists to shrink."""
+        with self._mu:
+            self.io_submit_ns += ns
+
+    def merge_pool(self, snapshot) -> None:
+        """Fold a :class:`~repro.core.bufpool.PoolStats` snapshot in."""
+        with self._mu:
+            self.pool_hits += snapshot.pool_hits
+            self.pool_misses += snapshot.pool_misses
+            self.pool_returns += snapshot.pool_returns
+            self.pool_drops += snapshot.pool_drops
+
     def note_io_job(self, queued: int, inflight: int) -> None:
         """One engine write job observed with ``queued`` jobs outstanding
         and ``inflight`` write-behind bytes admitted."""
@@ -258,9 +279,14 @@ class WriterStats:
             "commit_ms": self.commit_ns / 1e6,
             "io_ms": self.io_ns / 1e6,
             "io_stall_ms": self.io_stall_ns / 1e6,
+            "io_submit_ms": self.io_submit_ns / 1e6,
             "io_jobs": self.io_jobs,
             "io_queue_peak": self.io_queue_peak,
             "io_inflight_peak_bytes": self.io_inflight_peak,
+            "pool_hits": self.pool_hits,
+            "pool_misses": self.pool_misses,
+            "pool_returns": self.pool_returns,
+            "pool_drops": self.pool_drops,
             "phases_ms": self.phases_ms(),
             "per_codec": _codec_stats_dict(self.per_codec),
             "write_calls": self.io.write_calls,
@@ -299,6 +325,10 @@ class ReaderStats:
     decompress_ns: int = 0    # summed per-page entropy decode
     decode_ns: int = 0        # summed per-page unprecondition/integration
     wait_ns: int = 0          # consumer blocked on the prefetch pipeline
+    pool_hits: int = 0        # reader buffer-pool takes served from a class
+    pool_misses: int = 0      # reader buffer-pool takes that allocated
+    pool_returns: int = 0
+    pool_drops: int = 0
     # codec id -> [pages, bytes_in (stored), bytes_out (decoded),
     # decompress_ns]: the read-side mirror of WriterStats.per_codec
     per_codec: Dict[int, List[int]] = field(default_factory=dict)
@@ -338,6 +368,14 @@ class ReaderStats:
         with self._mu:
             self.io.merge(snapshot)
 
+    def merge_pool(self, snapshot) -> None:
+        """Fold a :class:`~repro.core.bufpool.PoolStats` snapshot in."""
+        with self._mu:
+            self.pool_hits += snapshot.pool_hits
+            self.pool_misses += snapshot.pool_misses
+            self.pool_returns += snapshot.pool_returns
+            self.pool_drops += snapshot.pool_drops
+
     # -- reporting ----------------------------------------------------------
 
     def phases_ms(self) -> dict:
@@ -359,6 +397,10 @@ class ReaderStats:
             "decompress_ms": self.decompress_ns / 1e6,
             "decode_ms": self.decode_ns / 1e6,
             "wait_ms": self.wait_ns / 1e6,
+            "pool_hits": self.pool_hits,
+            "pool_misses": self.pool_misses,
+            "pool_returns": self.pool_returns,
+            "pool_drops": self.pool_drops,
             "phases_ms": self.phases_ms(),
             "per_codec": _codec_stats_dict(self.per_codec),
             "read_calls": self.io.read_calls,

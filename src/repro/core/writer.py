@@ -18,7 +18,7 @@ Modes (paper §5 / §6.1):
     per-page lock; lower memory, collapses under lock contention at high
     thread counts (the paper's 300-vs-27,000 futex observation).
 
-Throughput machinery (DESIGN.md §"Write-path architecture"):
+Throughput machinery (DESIGN.md §2):
   * ``imt_workers`` — a single writer-owned compression pool; every seal
     (sequential IMT and parallel producers alike) runs page compression
     through ``ClusterBuilder.seal(pool)``, the one shared code path.
@@ -32,9 +32,15 @@ I/O engine (DESIGN.md §6): every commit path funnels through one
 ``pwritev`` commits of un-assembled iovec plans (``scatter_commit``),
 striped parallel sub-extent writes (``io_stripe_bytes``), and bounded
 write-behind with producer backpressure (``io_inflight_bytes``), plus
-the fsync policy knob.  ``close()`` drains the engine before the footer
-is ever built, and engine write failures poison finalization through
-the same ``_commit_error`` latch as a synchronous failed ``pwrite``.
+the fsync policy knob.  Queued extents submit through an async
+submission ring (``io_ring`` — io_uring on an ``AsyncFileSink`` when
+liburing loads, a behavior-identical emulation elsewhere, §6.7), and a
+writer-owned buffer pool (``buffer_pool_bytes``, §6.8) recycles
+detached scatter buffers on write completion, so the steady-state
+commit path allocates nothing.  ``close()`` drains the engine before
+the footer is ever built, and engine write failures poison finalization
+through the same ``_commit_error`` latch as a synchronous failed
+``pwrite``.  All knobs: DESIGN.md §7.1.
 """
 
 from __future__ import annotations
@@ -46,10 +52,13 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from . import compression as comp
+from .bufpool import Recyclable, make_pool as make_buffer_pool
 from .cluster import ClusterBuilder, SealedCluster
 from .container import Sink, open_sink
-from .ioengine import FSYNC_ON_CLOSE, IOEngine
+from .ioengine import FSYNC_ON_CLOSE, RING_AUTO, IOEngine
 from .metadata import (
     ANCHOR_SIZE,
     ClusterMeta,
@@ -68,6 +77,10 @@ _ns = time.perf_counter_ns
 
 @dataclass
 class WriteOptions:
+    """Every write-side tuning knob; the field comments below are the
+    short form — DESIGN.md §7.1 is the single consolidated reference
+    (defaults, composition notes, and section pointers per knob)."""
+
     page_size: int = DEFAULT_PAGE_SIZE       # uncompressed bytes per page
     codec: object = "zlib"                   # name or id
     level: int = -1
@@ -111,6 +124,16 @@ class WriteOptions:
     io_workers: int = 0
     # "on_close" | "every_cluster" | int byte interval between fsyncs
     fsync_policy: object = FSYNC_ON_CLOSE
+    # -- async submission + buffer pool (DESIGN.md §6.7/§6.8) ----------------
+    # how queued (write-behind) extents are submitted: "auto" uses an
+    # io_uring submission ring when liburing loads and the sink is an
+    # AsyncFileSink, else the emulated completion-thread ring; "uring"
+    # requires the real ring; "emulated" forces the emulation; "off"
+    # keeps one executor job per stripe (the PR-4 path)
+    io_ring: object = RING_AUTO
+    # residency bound of the writer's buffer pool, recycling detached
+    # scatter buffers / scratch / merge copy buffers; 0 disables pooling
+    buffer_pool_bytes: int = 64 * 1024 * 1024
     # rate-aware adaptive codec: weigh each column's measured savings
     # rate (bytes removed per CPU second) against the sink's observed
     # drain bandwidth — a slow sink keeps compression a fast sink drops
@@ -166,6 +189,11 @@ class _WriterBase:
             if self.options.adaptive_codec
             else None
         )
+        # the writer's buffer pool (DESIGN.md §6.8): detached scatter
+        # buffers, seal scratch, pooled page payloads and merge copy
+        # buffers all recycle through it; the I/O engine returns an
+        # extent's buffers when its last write lands
+        self._bufpool = make_buffer_pool(self.options.buffer_pool_bytes)
         # the writer's I/O engine: one per writer, shared by every commit
         # path (clusters, unbuffered pages, merge's raw copies).  Write
         # failures poison finalization through _commit_error; drained
@@ -181,6 +209,8 @@ class _WriterBase:
             on_drain=(
                 self._policy.observe_drain if self._policy is not None else None
             ),
+            ring=self.options.io_ring,
+            buffer_pool=self._bufpool,
         )
         # header goes first; its location is fixed so no lock is needed yet.
         # It records the EFFECTIVE per-column encodings (a reused schema —
@@ -235,7 +265,8 @@ class _WriterBase:
                               chunk_bytes=o.codec_chunk_bytes,
                               policy=self._policy,
                               precondition=o.precondition,
-                              scatter=o.scatter_commit)
+                              scatter=o.scatter_commit,
+                              buffer_pool=self._bufpool)
 
     # -- commit protocol ----------------------------------------------------
 
@@ -303,14 +334,27 @@ class _WriterBase:
             self._poison(e)
             raise
 
-    def _commit_page(self, payload: bytes, desc: PageDesc,
+    def _commit_page(self, payload, desc: PageDesc,
                      build_ns: int = 0) -> PageDesc:
-        """Page-granular critical section (unbuffered mode)."""
+        """Page-granular critical section (unbuffered mode).
+
+        A pooled raw payload (a memoryview of a BufferPool array, see
+        ``build_page``) rides with a ``Recyclable`` owner so the engine
+        returns its buffer once the page's write lands.
+        """
+        owner = None
+        if (
+            self._bufpool is not None
+            and isinstance(payload, memoryview)
+            and isinstance(payload.obj, np.ndarray)
+        ):
+            owner = Recyclable([payload.obj])
         t0 = _ns()
         self._io.admit(len(payload))
         with self.lock:
             off = self.sink.reserve(len(payload))
-            io_ns = self._submit_or_latch(off, [payload], len(payload))
+            io_ns = self._submit_or_latch(off, [payload], len(payload),
+                                          owner=owner)
         desc.offset = off
         self.stats.add_page(len(payload), commit_ns=_ns() - t0, io_ns=io_ns,
                             codec=desc.codec,
@@ -376,6 +420,8 @@ class _WriterBase:
             self._io.close()
             self.stats.merge_lock(self.lock.snapshot())
             self.stats.merge_io(self.sink.io.snapshot())
+            if self._bufpool is not None:
+                self.stats.merge_pool(self._bufpool.snapshot())
             self.sink.close()
         if self._commit_error is not None:
             raise RuntimeError(
