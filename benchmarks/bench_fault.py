@@ -1,0 +1,245 @@
+"""Fault-tolerance benchmark — what crash consistency and retries cost.
+
+Measures, on the paper's synthetic nested-event workload:
+
+ 1. **journal overhead** — the v2 per-cluster envelope + commit-journal
+    framing (DESIGN.md §8.3) against the same write with ``journal=False``,
+    at codec ``none`` (commit path fully exposed) and ``zlib`` (realistic
+    CPU mix), on DevNull and Memory sinks.  Configs are interleaved per
+    round and overhead is the *median of per-round paired ratios*, so
+    container drift and outlier rounds cancel out.  Target: <2%
+    wall-time overhead — the framing is ~100 bytes per multi-megabyte
+    cluster and is serialized outside the writer's critical section.
+ 2. **retry-path overhead** — the same write with an engaged
+    :class:`RetryPolicy`: what the retry chokepoint costs when nothing
+    ever fails.
+ 3. **recovery throughput** — ``recover_container`` over a torn copy
+    (truncated mid-cluster) of a large many-cluster file — 1 GiB, or
+    64 MiB under ``--quick``: scan + page-CRC verification MB/s, with
+    and without ``verify_pages``.
+
+Emits ``BENCH_fault.json`` (repo root by default); the field schema is
+documented in ``benchmarks/README.md``.
+
+Run:  PYTHONPATH=src python benchmarks/bench_fault.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import time
+from typing import Dict
+
+from _harness import EVENT_SCHEMA, REPO_ROOT, prebuild
+
+from repro.core import (  # noqa: E402
+    DevNullSink, MemorySink, RetryPolicy, RNTJReader, SequentialWriter,
+    WriteOptions, recover_container,
+)
+from repro.core.faults import memory_sink_from_bytes  # noqa: E402
+
+PAGE = 256 * 1024
+CLUSTER = 2 * 1024 * 1024
+
+
+def options(codec: str, **over) -> WriteOptions:
+    opts = dict(codec=codec, level=1, page_size=PAGE, cluster_bytes=CLUSTER,
+                precondition=False)
+    opts.update(over)
+    return WriteOptions(**opts)
+
+
+def fill_all(writer, batches) -> float:
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        for b in batches:
+            writer.fill_batch(b)
+        writer.close()
+        return time.perf_counter() - t0
+    finally:
+        gc.enable()
+
+
+def run_interleaved(sink_factory, batches, configs: Dict[str, WriteOptions],
+                    repeats: int) -> Dict[str, list]:
+    """Per-config wall time for every round, configs interleaved within a
+    round so each round is a *paired* sample (drift hits all configs in
+    the round roughly equally)."""
+    walls = {name: [] for name in configs}
+    for _ in range(repeats):
+        for name, opts in configs.items():
+            w = SequentialWriter(EVENT_SCHEMA, sink_factory(), opts)
+            walls[name].append(fill_all(w, batches))
+    return walls
+
+
+def paired_overhead_pct(walls: list, base: list) -> float:
+    """Median of the per-round wall ratios — each round's configs ran
+    back-to-back, so their ratio cancels box drift; the median across
+    rounds shrugs off individual outlier rounds, where a best-of-N
+    ratio inherits whichever config got the single luckiest run."""
+    ratios = sorted(w / b for w, b in zip(walls, base))
+    mid = len(ratios) // 2
+    med = (ratios[mid] if len(ratios) % 2
+           else (ratios[mid - 1] + ratios[mid]) / 2.0)
+    return (med - 1.0) * 100.0
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2: journal framing and retry chokepoint overhead
+
+
+def run_overhead(batches, nbytes: int, repeats: int, out: dict) -> None:
+    print("== journal + retry overhead "
+          "(median paired ratio over %d rounds) ==" % repeats)
+    out["overhead"] = []
+    policy = RetryPolicy()
+    # codec none commits at GB/s, so the base workload's wall is a few ms
+    # and per-run setup would drown a 2% effect — feed it the same
+    # prebuilt batches several times over so every cell runs >100 ms
+    workloads = {"none": batches * 16, "zlib": batches}
+    for codec in ("none", "zlib"):
+        work = workloads[codec]
+        wbytes = nbytes * (len(work) // len(batches))
+        # preallocated memory sink: measure framing, not bytearray realloc
+        cap = int(wbytes * 1.25)
+        sinks = (("devnull", DevNullSink),
+                 ("memory", lambda: MemorySink(cap)))
+        for sink_name, factory in sinks:
+            # "baseline2" repeats the no-journal config verbatim: its
+            # delta vs "nojournal" is this cell's same-config noise floor,
+            # and a journal overhead is only a real miss when it exceeds
+            # the target by more than that floor.  The ring trio measures
+            # the same journal delta on BENCH_io's scatter+ring
+            # write-behind configuration — with its own baseline2, since
+            # write-behind walls (producer + worker thread on a small box)
+            # are noisier than the synchronous path's.
+            ring = dict(io_inflight_bytes=32 * 1024 * 1024,
+                        io_ring="emulated", io_workers=1)
+            configs = {
+                "nojournal": options(codec, journal=False),
+                "baseline2": options(codec, journal=False),
+                "journal": options(codec),
+                "journal+retry": options(codec, retry_policy=policy),
+                "ring-nojournal": options(codec, journal=False, **ring),
+                "ring-baseline2": options(codec, journal=False, **ring),
+                "ring-journal": options(codec, **ring),
+            }
+            walls = run_interleaved(factory, work, configs, repeats)
+            for mode, series in walls.items():
+                base = walls["ring-nojournal" if mode.startswith("ring")
+                             else "nojournal"]
+                pct = paired_overhead_pct(series, base)
+                best = min(series)
+                rec = {
+                    "codec": codec,
+                    "sink": sink_name,
+                    "mode": mode,
+                    "wall_s": round(best, 4),
+                    "mb_s": round(wbytes / best / 1e6, 1),
+                    "overhead_pct": round(pct, 2),
+                }
+                out["overhead"].append(rec)
+                print(f"  {codec:5s} {sink_name:7s} {mode:14s} "
+                      f"{rec['mb_s']:8.1f} MB/s  overhead "
+                      f"{rec['overhead_pct']:+6.2f}%")
+
+    worst = max(r["overhead_pct"] for r in out["overhead"]
+                if r["mode"] in ("journal", "ring-journal"))
+    noise = max(abs(r["overhead_pct"]) for r in out["overhead"]
+                if r["mode"] in ("baseline2", "ring-baseline2"))
+    out["journal_overhead_worst_pct"] = round(worst, 2)
+    out["noise_floor_pct"] = round(noise, 2)
+    met = worst < 2.0 + noise
+    out["journal_overhead_target_met"] = met
+    print(f"  -> worst journal overhead {worst:+.2f}% "
+          f"(target <2%, same-config noise floor ±{noise:.2f}%): "
+          f"{'PASS' if met else 'MISS'}")
+
+
+# ---------------------------------------------------------------------------
+# 3: recovery throughput
+
+
+def run_recovery(target_mb: int, out: dict) -> None:
+    print(f"== recovery throughput (~{target_mb} MB torn file) ==")
+    # ~36 B per synthetic event; 1 MiB clusters so the file holds many
+    # independently salvageable clusters (recovery granularity)
+    entries = target_mb * 1_000_000 // 36
+    batches = prebuild("uniform", entries, 100_000)
+    sink = MemorySink(int(target_mb * 1.25e6))
+    w = SequentialWriter(EVENT_SCHEMA, sink, options(
+        "none", cluster_bytes=1 << 20, page_size=64 * 1024))
+    fill_all(w, batches)
+    del batches
+    # cut mid-way through the final cluster: the scan walks every intact
+    # cluster and has to detect + drop the torn tail
+    cut = int(sink.size * 0.995)
+    data = bytes(sink.buf[:cut])
+    del sink
+    out["recovery"] = []
+    for verify in (True, False):
+        ms = memory_sink_from_bytes(data, slack=16 * 1024 * 1024)
+        t0 = time.perf_counter()
+        rep = recover_container(ms, verify_pages=verify)
+        wall = time.perf_counter() - t0
+        r = RNTJReader(ms)
+        entries = r.n_entries
+        r.close()
+        if not (rep.clusters_salvaged > 0
+                and entries == rep.entries_salvaged):
+            raise SystemExit(
+                f"recovery broken: salvaged {rep.clusters_salvaged} "
+                f"clusters / {rep.entries_salvaged} entries, reader sees "
+                f"{entries}")
+        rec = {
+            "file_mb": round(cut / 1e6, 1),
+            "verify_pages": verify,
+            "wall_s": round(wall, 4),
+            "mb_s": round(cut / wall / 1e6, 1),
+            "clusters_salvaged": rep.clusters_salvaged,
+            "entries_salvaged": rep.entries_salvaged,
+            "entries_readable": entries,
+            "resyncs": rep.resyncs,
+        }
+        out["recovery"].append(rec)
+        print(f"  verify={str(verify):5s} {rec['mb_s']:8.1f} MB/s  "
+              f"({rec['file_mb']} MB, {rep.clusters_salvaged} clusters, "
+              f"{rep.entries_salvaged} entries)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--entries", type=int, default=None)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_fault.json"))
+    args = ap.parse_args()
+
+    entries = args.entries or (120_000 if args.quick else 400_000)
+    repeats = 6 if args.quick else 9
+    batches = prebuild("uniform", entries, 20_000)
+    nbytes = sum(sum(a.nbytes for a in b.data.values()) for b in batches)
+    print(f"workload: {entries} entries, {nbytes / 1e6:.1f} MB uncompressed")
+
+    out = {"entries": entries, "uncompressed_mb": round(nbytes / 1e6, 1),
+           "quick": args.quick}
+    run_overhead(batches, nbytes, repeats, out)
+    del batches
+
+    # recovery scans a much bigger file than the overhead matrix writes:
+    # the scan is sequential pread + crc32, so file size is what matters
+    run_recovery(64 if args.quick else 1024, out)
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    if not out["journal_overhead_target_met"]:
+        raise SystemExit("journal overhead gate missed (see table above)")
+
+
+if __name__ == "__main__":
+    main()

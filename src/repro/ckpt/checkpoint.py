@@ -97,8 +97,13 @@ def save_checkpoint(
     addressable shards and the critical section is the coordinator's
     extent ledger (DESIGN.md §3.2).
     """
+    # journal=False: checkpoint durability comes from the temp-file +
+    # atomic-rename commit protocol (a torn save is discarded wholesale,
+    # never salvaged), so the per-cluster recovery framing would only add
+    # bytes that no reader CRC covers — without it, every byte of a
+    # committed checkpoint is checksummed and a flip is always detected
     options = options or WriteOptions(
-        codec="zlib", level=1, cluster_bytes=32 * 1024 * 1024
+        codec="zlib", level=1, cluster_bytes=32 * 1024 * 1024, journal=False
     )
     leaves, treedef = _flatten_with_names(tree)
     manifest = {

@@ -42,10 +42,17 @@ from .container import (
 from .stats import ReaderStats, WriterStats, CountingLock
 from .colbuf import ColumnBuffer
 from .bufpool import BufferPool, PoolStats, Recyclable
-from .ioengine import IOEngine
+from .ioengine import IOEngine, RetryPolicy
+from .faults import FaultInjectingSink, FaultSpec, FaultStats, ProcessKilled
+from .recover import (
+    RecoveryError,
+    RecoveryReport,
+    recover_container,
+    scan_container,
+)
 from . import (
-    bufpool, compression, encoding, ioengine, metadata, pages, cluster,
-    colbuf,
+    bufpool, compression, encoding, faults, ioengine, metadata, pages,
+    cluster, colbuf, recover,
 )
 
 __all__ = [
@@ -56,7 +63,9 @@ __all__ = [
     "BufferMerger", "merge_files", "Sink", "FileSink", "AsyncFileSink",
     "DevNullSink", "MemorySink", "ThrottledSink", "close_all", "open_sink",
     "WriterStats", "ReaderStats", "CountingLock", "ColumnBuffer",
-    "BufferPool", "PoolStats", "Recyclable", "IOEngine",
-    "bufpool", "compression", "encoding", "ioengine", "metadata", "pages",
-    "cluster", "colbuf",
+    "BufferPool", "PoolStats", "Recyclable", "IOEngine", "RetryPolicy",
+    "FaultInjectingSink", "FaultSpec", "FaultStats", "ProcessKilled",
+    "RecoveryError", "RecoveryReport", "recover_container", "scan_container",
+    "bufpool", "compression", "encoding", "faults", "ioengine", "metadata",
+    "pages", "cluster", "colbuf", "recover",
 ]

@@ -141,6 +141,20 @@ class Sink:
             self.io.read_calls += calls
             self.io.bytes_read += nbytes
 
+    # retry accounting (incremented by the I/O engine's retry loop, so
+    # the counters travel with the sink's IOStats into Writer/ReaderStats)
+    def _count_retry(self) -> None:
+        with self._stat_lock:
+            self.io.retries += 1
+
+    def _count_giveup(self) -> None:
+        with self._stat_lock:
+            self.io.giveups += 1
+
+    def _count_fsync_failure(self) -> None:
+        with self._stat_lock:
+            self.io.fsync_failures += 1
+
     def fallocate(self, offset: int, size: int) -> None:  # opt-1 hook
         with self._stat_lock:
             self.io.fallocate_calls += 1

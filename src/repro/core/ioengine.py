@@ -50,11 +50,14 @@ from __future__ import annotations
 
 import ctypes
 import ctypes.util
+import errno
 import os
+import random
 import threading
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Tuple
 
 import numpy as _np
@@ -75,17 +78,67 @@ RING_URING = "uring"
 RING_OFF = "off"
 
 
+# ---------------------------------------------------------------------------
+# retry policy (DESIGN.md §8.2)
+
+#: errnos worth retrying: transient device/medium hiccups and interruptions.
+#: ENOSPC is included deliberately — on shared/quota'd storage it is often
+#: transient (another writer freeing space, quota refresh); a genuinely full
+#: disk just exhausts the attempts and poisons like any permanent error.
+DEFAULT_RETRYABLE_ERRNOS = (
+    errno.EIO, errno.EAGAIN, errno.ENOSPC, errno.EINTR, errno.ETIMEDOUT,
+    errno.EBUSY,
+)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-retry policy applied by the I/O engine to every write and
+    fsync (DESIGN.md §8.2).
+
+    A failed operation whose errno is in ``retryable_errnos`` is retried
+    up to ``max_attempts`` total attempts with exponential backoff
+    (``backoff_base * 2**k`` seconds, capped at ``backoff_cap``, with
+    ±50% deterministic jitter when ``jitter``).  ``deadline`` bounds one
+    logical operation's total retry time in seconds (0 = unbounded).
+    Positioned writes are idempotent — a retry rewrites the same extent
+    bytes at the same offsets — so retrying after a *partial* (torn)
+    write is always safe.  Non-``OSError`` failures (including the fault
+    harness's :class:`~repro.core.faults.ProcessKilled`) are never
+    retried.  Only an exhausted retry budget poisons the writer.
+    """
+
+    max_attempts: int = 4
+    backoff_base: float = 0.002
+    backoff_cap: float = 0.25
+    jitter: bool = True
+    retryable_errnos: Tuple[int, ...] = DEFAULT_RETRYABLE_ERRNOS
+    deadline: float = 0.0
+
+    def retryable(self, exc: BaseException) -> bool:
+        return isinstance(exc, OSError) and exc.errno in self.retryable_errnos
+
+    def backoff(self, attempt: int, rng=None) -> float:
+        """Sleep before retry number ``attempt`` (1-based)."""
+        delay = min(self.backoff_cap, self.backoff_base * (2 ** (attempt - 1)))
+        if self.jitter and rng is not None:
+            delay *= 0.5 + rng.random()
+        return delay
+
+
 class _ExtentGroup:
     """One logical extent (a cluster or page) split into 1..n stripe jobs."""
 
-    __slots__ = ("remaining", "nbytes", "owner")
+    __slots__ = ("remaining", "nbytes", "owner", "striped")
 
-    def __init__(self, remaining: int, nbytes: int, owner):
+    def __init__(self, remaining: int, nbytes: int, owner,
+                 striped: bool = False):
         self.remaining = remaining
         self.nbytes = nbytes
         # the SealedCluster (or any object) whose buffers back the iovecs:
         # referenced until the last stripe lands, then recycled + released
         self.owner = owner
+        self.striped = striped
 
 
 # ---------------------------------------------------------------------------
@@ -320,6 +373,7 @@ class UringRing:
         self._stop = False
         self._live = {}  # user_data -> (op, iovec array, pinned parts, t0)
         self._next_id = 1
+        self._degraded = False  # submission broke: run ops synchronously
         self._seen_fence = threading.Lock()  # memory fence for CQ-head store
         self._thread = threading.Thread(
             target=self._loop, daemon=True, name="rntj-uring"
@@ -396,6 +450,15 @@ class UringRing:
             self._engine.sink._count_writev(1, res)
         if res < 0:
             err = OSError(-res, os.strerror(-res))
+            if self._engine.retry is not None and self._engine.retry.retryable(err):
+                # a retryable CQE error re-enters the engine's retrying
+                # write path synchronously (positioned rewrite: idempotent)
+                self._engine._count_retry()
+                try:
+                    self._engine._pwritev(op.off, op.parts)
+                    err = None
+                except BaseException as e:  # noqa: BLE001
+                    err = e
         elif res != op.nbytes:
             # a partial vectored write: finish it synchronously through
             # the engine (correctness first; partials are rare here)
@@ -406,20 +469,35 @@ class UringRing:
         self._engine._job_end(op.group, op.nbytes, t0, err)
         return 1
 
-    def _submit_prepared(self) -> Optional[OSError]:
-        """Flush prepared SQEs to the kernel.  On failure, fail every
-        in-flight op (their SQEs never reached — or will never leave —
-        the kernel, so no CQE will ever arrive; silently dropping them
-        would hang ``drain()`` forever).  Poisoning through ``_job_end``
-        matches a failed synchronous ``pwrite``; returns the error."""
+    def _submit_prepared(self) -> None:
+        """Flush prepared SQEs to the kernel.  On failure (the SQEs never
+        reached — or will never leave — the kernel, so no CQE will ever
+        arrive; silently dropping them would hang ``drain()`` forever)
+        the ring *degrades* instead of failing every in-flight extent:
+        :meth:`_fallback_execute` writes them out synchronously."""
         rc = self._lib.io_uring_submit(ctypes.byref(self._ring))
-        if rc >= 0:
-            return None
-        err = OSError(-rc, os.strerror(-rc))
+        if rc < 0:
+            self._fallback_execute(OSError(-rc, os.strerror(-rc)))
+
+    def _fallback_execute(self, err: OSError) -> None:
+        """Ring submission broke (DESIGN.md §8.2): execute every op still
+        in ``_live`` synchronously through the engine's retrying
+        ``_pwritev`` and fold the completions through ``_job_end``, then
+        stay degraded — future ops run the same way on this thread, like
+        a one-worker emulated ring.  Ops already submitted in an earlier
+        successful batch may still complete via CQE; a rewrite of the
+        same extent bytes is idempotent, and ``_reap`` ignores CQEs whose
+        op has already been folded."""
+        self._degraded = True
+        self._engine._note_ring_fallback(err)
         for uid in list(self._live):
             op, _iov, _pinned, t0 = self._live.pop(uid)
-            self._engine._job_end(op.group, op.nbytes, t0, err)
-        return err
+            op_err = None
+            try:
+                self._engine._pwritev(op.off, op.parts)
+            except BaseException as e:  # noqa: BLE001
+                op_err = e
+            self._engine._job_end(op.group, op.nbytes, t0, op_err)
 
     def _loop(self) -> None:
         while True:
@@ -430,24 +508,24 @@ class UringRing:
                     return
                 batch = list(self._ops)
                 self._ops.clear()
-            err = None
-            for i, op in enumerate(batch):
-                while err is None and not self._prep(op):
+            for op in batch:
+                if self._degraded:
+                    self._engine._run_job(op.group, op.off, op.parts,
+                                          op.nbytes)
+                    continue
+                prepped = self._prep(op)
+                while not prepped and not self._degraded:
                     # SQ full: flush prepared SQEs, then reap for room
-                    err = self._submit_prepared()
-                    if err is None:
-                        self._reap(wait=True)
-                if err is not None:
-                    # submission is dead: fail this op and the rest of
-                    # the batch (never prepped into _live; _job_begin
-                    # here keeps the engine's running-window balanced)
-                    for rest in batch[i:]:
-                        self._engine._job_end(
-                            rest.group, rest.nbytes,
-                            self._engine._job_begin(), err,
-                        )
-                    break
-            if err is None and batch:
+                    self._submit_prepared()
+                    if self._degraded:
+                        break
+                    self._reap(wait=True)
+                    prepped = self._prep(op)
+                if not prepped and self._degraded:
+                    # never made it into _live: run it directly
+                    self._engine._run_job(op.group, op.off, op.parts,
+                                          op.nbytes)
+            if batch and not self._degraded:
                 self._submit_prepared()
             # reap whatever is ready; block only when nothing new can be
             # submitted and completions are still owed
@@ -532,6 +610,7 @@ class IOEngine:
         on_drain: Optional[Callable] = None,
         ring=RING_OFF,
         buffer_pool=None,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.sink = sink
         self.stripe_bytes = int(stripe_bytes)
@@ -540,6 +619,18 @@ class IOEngine:
         self.buffer_pool = buffer_pool
         self._on_error = on_error
         self._on_drain = on_drain
+        # -- retry + degradation state (DESIGN.md §8.2) ---------------------
+        self.retry = retry
+        # deterministic jitter source — seeded so fault-injection runs
+        # replay the same backoff schedule
+        self._retry_rng = random.Random(0x52455452)
+        self._retry_mu = threading.Lock()
+        self.retries = 0             # retried operations (mirror of IOStats)
+        self.giveups = 0             # operations that exhausted the budget
+        self.stripe_fallbacks = 0    # striping disabled after stripe failure
+        self.ring_fallbacks = 0      # native ring degraded to synchronous
+        self._stripe_disabled = False
+        self._closed = False
         if not workers and (self.stripe_bytes > 0 or self.inflight_bytes > 0):
             workers = DEFAULT_IO_WORKERS
         self._workers = workers
@@ -617,6 +708,74 @@ class IOEngine:
             self._inflight -= nbytes
             self._cv.notify_all()
 
+    # -- retrying (DESIGN.md §8.2) --------------------------------------------
+
+    def _count_retry(self) -> None:
+        with self._retry_mu:
+            self.retries += 1
+        counter = getattr(self.sink, "_count_retry", None)
+        if counter is not None:
+            counter()
+
+    def _count_giveup(self) -> None:
+        with self._retry_mu:
+            self.giveups += 1
+        counter = getattr(self.sink, "_count_giveup", None)
+        if counter is not None:
+            counter()
+
+    def _retrying(self, fn, *args):
+        """Run ``fn(*args)`` under the engine's retry policy.  The single
+        choke point every engine-issued write and fsync goes through:
+        sync, striped, emulated-ring, and uring-resume paths all call it
+        via :meth:`_pwritev`; CQE errors re-enter it via
+        :meth:`_pwritev`.  Without a policy it is a plain call."""
+        policy = self.retry
+        if policy is None:
+            return fn(*args)
+        deadline = (
+            time.monotonic() + policy.deadline if policy.deadline else None
+        )
+        attempt = 0
+        while True:
+            try:
+                return fn(*args)
+            except OSError as e:
+                attempt += 1
+                if not policy.retryable(e):
+                    raise
+                if attempt >= policy.max_attempts or (
+                        deadline is not None
+                        and time.monotonic() >= deadline):
+                    self._count_giveup()
+                    raise
+                self._count_retry()
+                with self._retry_mu:
+                    delay = policy.backoff(attempt, self._retry_rng)
+                if deadline is not None:
+                    delay = min(delay, max(0.0, deadline - time.monotonic()))
+                if delay > 0:
+                    time.sleep(delay)
+
+    def _note_stripe_fallback(self) -> None:
+        """A striped sub-extent failed even with retries: stop striping
+        for the rest of this engine's life (the device is telling us it
+        dislikes concurrent sub-extent writes) and count the event."""
+        with self._retry_mu:
+            self.stripe_fallbacks += 1
+            self._stripe_disabled = True
+        if self.stats is not None:
+            self.stats.note_stripe_fallback()
+
+    def _note_ring_fallback(self, err: BaseException) -> None:
+        """The native submission ring can no longer submit: it degrades to
+        executing ops synchronously on its own thread (same bytes, same
+        accounting) rather than failing in-flight extents."""
+        with self._retry_mu:
+            self.ring_fallbacks += 1
+        if self.stats is not None:
+            self.stats.note_ring_fallback()
+
     # -- submission -----------------------------------------------------------
 
     def write_extent(self, off: int, parts: List, nbytes: int,
@@ -635,21 +794,37 @@ class IOEngine:
         if not self.async_mode:
             t0 = _ns()
             try:
-                if len(stripes) == 1 or self._pool is None:
-                    for s_off, s_parts, _n in stripes:
-                        self._pwritev(s_off, s_parts)
-                else:
-                    futs = [
-                        self._pool.submit(self._pwritev, s_off, s_parts)
-                        for s_off, s_parts, _n in stripes
-                    ]
-                    for f in futs:
-                        f.result()
+                try:
+                    if len(stripes) == 1 or self._pool is None:
+                        for s_off, s_parts, _n in stripes:
+                            self._pwritev(s_off, s_parts)
+                    else:
+                        futs = [
+                            self._pool.submit(self._pwritev, s_off, s_parts)
+                            for s_off, s_parts, _n in stripes
+                        ]
+                        for f in futs:
+                            f.result()
+                except OSError:
+                    if len(stripes) <= 1 or self.retry is None:
+                        raise
+                    # stripe degradation: the reserved extent is untouched
+                    # by readers until the footer lands, so rewriting it
+                    # monolithically (with a fresh retry budget) is
+                    # idempotent; striping stays off from here on
+                    self._note_stripe_fallback()
+                    self._pwritev(off, list(parts))
             except BaseException as e:
                 self._fail(e)
                 raise
             io_ns = _ns() - t0
-            self._extent_done(nbytes)
+            try:
+                # fsync policy failures poison exactly like write failures
+                # (they used to be able to slip through mid-run)
+                self._extent_done(nbytes)
+            except BaseException as e:
+                self._fail(e)
+                raise
             self._recycle(owner)
             if self._on_drain is not None:
                 self._on_drain(nbytes, io_ns)
@@ -661,7 +836,7 @@ class IOEngine:
             self._release(nbytes)
             return 0
         t0 = _ns()
-        group = _ExtentGroup(len(stripes), nbytes, owner)
+        group = _ExtentGroup(len(stripes), nbytes, owner, len(stripes) > 1)
         with self._cv:
             self._pending += len(stripes)
             depth = self._pending
@@ -684,6 +859,7 @@ class IOEngine:
         stripe sub-extents of at most ``stripe_bytes`` each."""
         if (
             self.stripe_bytes <= 0
+            or self._stripe_disabled
             or nbytes <= self.stripe_bytes
             or (self._pool is None and self._ring is None)
         ):
@@ -709,6 +885,9 @@ class IOEngine:
         return out
 
     def _pwritev(self, off: int, parts: List) -> None:
+        self._retrying(self._pwritev_once, off, parts)
+
+    def _pwritev_once(self, off: int, parts: List) -> None:
         if len(parts) == 1:
             self.sink.pwrite(off, parts[0])
         else:
@@ -716,7 +895,11 @@ class IOEngine:
 
     def _pwritev_resume(self, off: int, parts: List, written: int) -> None:
         """Finish a partially completed vectored write from byte
-        ``written`` onward (io_uring short-write recovery)."""
+        ``written`` onward (io_uring short-write recovery).  Retried as a
+        whole — re-running the resume loop rewrites the same tail bytes."""
+        self._retrying(self._pwritev_resume_once, off, parts, written)
+
+    def _pwritev_resume_once(self, off: int, parts: List, written: int) -> None:
         pos = 0
         for p in parts:
             mv = memoryview(p)
@@ -786,6 +969,11 @@ class IOEngine:
                 self._pwritev(off, parts)
         except BaseException as e:
             err = e
+            if isinstance(e, OSError) and group.striped:
+                # the group's other stripes may already be in flight, so
+                # this extent cannot be rewritten monolithically; poison,
+                # but stop striping future extents
+                self._note_stripe_fallback()
         self._job_end(group, nbytes, t0, err)
 
     def _recycle(self, owner) -> None:
@@ -810,11 +998,34 @@ class IOEngine:
 
     # -- fsync policy ---------------------------------------------------------
 
+    def _do_fsync(self) -> None:
+        """One retried fsync; a final failure is accounted in IOStats
+        before it propagates (callers decide how it poisons)."""
+        try:
+            self._retrying(self.sink.fsync)
+        except BaseException:
+            counter = getattr(self.sink, "_count_fsync_failure", None)
+            if counter is not None:
+                counter()
+            raise
+
+    def fsync(self) -> None:
+        """Retrying fsync that poisons the writer on failure — the entry
+        point the writer's journal barrier and close() use, so a failed
+        final sync surfaces exactly like a failed write."""
+        try:
+            self._do_fsync()
+        except BaseException as e:
+            self._fail(e)
+            raise
+
     def _extent_done(self, nbytes: int) -> None:
         """Apply the every-cluster / byte-interval fsync policy after an
-        extent's bytes have fully landed."""
+        extent's bytes have fully landed.  Raises on (retry-exhausted)
+        fsync failure: both the sync path and ``_job_end`` route that
+        into ``_fail`` — the mid-run fsync error is never swallowed."""
         if self._fsync_every:
-            self.sink.fsync()
+            self._do_fsync()
         elif self._fsync_interval:
             due = False
             with self._fsync_lock:
@@ -823,7 +1034,7 @@ class IOEngine:
                     self._since_fsync = 0
                     due = True
             if due:
-                self.sink.fsync()
+                self._do_fsync()
 
     # -- drain / shutdown ------------------------------------------------------
 
@@ -840,6 +1051,12 @@ class IOEngine:
                 self._cv.wait()
 
     def close(self) -> None:
+        """Drain and release workers.  Idempotent: a poisoned writer's
+        second close (``__exit__`` after the first raised) must not touch
+        an already-shut-down ring or pool."""
+        if self._closed:
+            return
+        self._closed = True
         self.drain()
         if self._ring is not None:
             self._ring.close()

@@ -70,26 +70,11 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
                 )
             cm = ClusterMeta(cm.first_entry, cm.n_entries, cm.n_elements, descs, 0, len(blob))
             base = 0
-        writer._io.admit(len(blob))
-        with writer.lock:
-            off = writer.sink.reserve(len(blob))
-            first_entry = writer._n_entries
-            writer._n_entries += cm.n_entries
-            writer._clusters.append(
-                ClusterMeta(
-                    first_entry=first_entry,
-                    n_entries=cm.n_entries,
-                    n_elements=list(cm.n_elements),
-                    pages=[p.rebase(off - base) for p in cm.pages],
-                    byte_offset=off,
-                    byte_size=len(blob),
-                )
-            )
-            writer._submit_or_latch(off, [blob], len(blob), owner=owner)
-        writer.stats.clusters += 1
-        writer.stats.entries += cm.n_entries
-        writer.stats.pages += len(cm.pages)
-        writer.stats.compressed_bytes += len(blob)
+        # reserve + metadata + envelope/journal framing + submit: the same
+        # critical section every direct commit uses, so merged outputs are
+        # crash-recoverable exactly like directly written ones
+        writer._commit_raw_cluster(blob, cm.n_entries, cm.n_elements,
+                                   cm.pages, base, owner=owner)
 
 
 def _reencode_clusters(reader: RNTJReader, writer: ParallelWriter) -> None:

@@ -31,7 +31,10 @@ from .pages import PageDesc
 from .schema import ENC_NONE, Schema
 
 MAGIC = b"RNTJ"
-VERSION = 1
+# v2 adds the per-cluster recovery envelope + commit journal (DESIGN.md §8).
+# v1 files (no journal) remain fully readable; v2 readers accept both.
+VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 ENV_HEADER = 1
 ENV_PAGELIST = 2
@@ -139,11 +142,7 @@ def build_pagelist(clusters: List[ClusterMeta], n_columns: int) -> bytes:
             )
         )
         chunks.append(np.asarray(cm.n_elements, dtype="<u8").tobytes())
-        rec = np.zeros(len(cm.pages), dtype=_PAGE_REC)
-        for i, p in enumerate(cm.pages):
-            rec[i] = (p.column, p.codec, b"", p.n_elements, p.offset, p.size,
-                      p.uncompressed_size, p.checksum, b"")
-        chunks.append(rec.tobytes())
+        chunks.append(_pack_page_recs(cm.pages))
     return wrap_envelope(ENV_PAGELIST, b"".join(chunks))
 
 
@@ -179,6 +178,171 @@ def parse_pagelist(buf: bytes) -> List[ClusterMeta]:
                         pages, boff, bsize)
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# recovery envelope + commit journal (v2, DESIGN.md §8)
+#
+# With ``WriteOptions.journal`` (default on), every buffered cluster extent is
+# written as
+#
+#     [32-byte cluster envelope][cluster payload][journal record]
+#
+# in ONE vectored engine write, and every unbuffered cluster commit appends a
+# journal record alone.  The envelope makes the payload self-describing
+# (magic, commit sequence, length, CRC of its descriptor); the journal record
+# is a self-contained copy of the cluster's page-list entry.  Together they
+# let :mod:`repro.core.recover` rebuild the footer of a torn file from the
+# data region alone.  Footer-based readers never look at either — cluster
+# byte offsets in the page list point at the payload, so the framing is
+# invisible padding to them (v1 readers read v2 data regions unchanged; only
+# the anchor version gates compatibility).
+
+CLUSTER_ENV_MAGIC = b"RJCE"
+JOURNAL_MAGIC = b"RJJR"
+
+# magic, version, flags, seq, payload_len, desc_crc, env_crc, pad
+_CLUSTER_ENV = struct.Struct("<4sHHIQII4x")
+CLUSTER_ENV_SIZE = _CLUSTER_ENV.size  # 32 bytes
+
+JREC_BUFFERED = 1  # flags bit: page offsets are cluster-relative
+
+_JREC_HDR = struct.Struct("<4sI")  # magic, payload_len (crc32 trails payload)
+# seq, version, flags, cluster_off, cluster_size, first_entry, n_entries,
+# n_columns, n_pages
+_JREC_FIX = struct.Struct("<IHHQQQQII")
+
+
+def journal_record_size(n_columns: int, n_pages: int) -> int:
+    """On-disk size of one journal record — known before it is built, so
+    the writer can reserve the whole framed extent in one call."""
+    return (_JREC_HDR.size + _JREC_FIX.size + 8 * n_columns
+            + _PAGE_REC.itemsize * n_pages + 4)
+
+
+def build_cluster_envelope(seq: int, payload_len: int, desc_crc: int) -> bytes:
+    body = _CLUSTER_ENV.pack(CLUSTER_ENV_MAGIC, VERSION, 0, seq, payload_len,
+                             desc_crc, 0)
+    env_crc = zlib.crc32(body[:24])
+    return _CLUSTER_ENV.pack(CLUSTER_ENV_MAGIC, VERSION, 0, seq, payload_len,
+                             desc_crc, env_crc)
+
+
+def parse_cluster_envelope(buf: bytes, pos: int = 0) -> dict:
+    magic, ver, flags, seq, plen, desc_crc, env_crc = _CLUSTER_ENV.unpack_from(
+        buf, pos)
+    if magic != CLUSTER_ENV_MAGIC:
+        raise IOError("bad cluster envelope magic")
+    if zlib.crc32(bytes(buf[pos:pos + 24])) != env_crc:
+        raise IOError("cluster envelope checksum mismatch")
+    return {"version": ver, "flags": flags, "seq": seq, "payload_len": plen,
+            "desc_crc": desc_crc}
+
+
+def _pack_page_recs(pages: List[PageDesc]) -> bytes:
+    rec = np.zeros(len(pages), dtype=_PAGE_REC)
+    for i, p in enumerate(pages):
+        rec[i] = (p.column, p.codec, b"", p.n_elements, p.offset, p.size,
+                  p.uncompressed_size, p.checksum, b"")
+    return rec.tobytes()
+
+
+def build_journal_body(n_elements: List[int], pages: List[PageDesc]) -> bytes:
+    """Variable part of a journal record (per-column element counts + page
+    records).  Page offsets are stored exactly as given — cluster-relative
+    for buffered commits, absolute for unbuffered ones — so the body can be
+    serialized *outside* the writer's critical section, before the extent
+    offset is known."""
+    return (np.asarray(n_elements, dtype="<u8").tobytes()
+            + _pack_page_recs(pages))
+
+
+def finish_journal_record(
+    seq: int,
+    flags: int,
+    cluster_off: int,
+    cluster_size: int,
+    first_entry: int,
+    n_entries: int,
+    n_columns: int,
+    body: bytes,
+) -> Tuple[bytes, int]:
+    """Complete a journal record around a prebuilt body.  Returns the record
+    bytes and the payload CRC (= the envelope's ``desc_crc``)."""
+    n_pages = (len(body) - 8 * n_columns) // _PAGE_REC.itemsize
+    fix = _JREC_FIX.pack(seq, VERSION, flags, cluster_off, cluster_size,
+                         first_entry, n_entries, n_columns, n_pages)
+    crc = zlib.crc32(body, zlib.crc32(fix))
+    rec = b"".join((
+        _JREC_HDR.pack(JOURNAL_MAGIC, len(fix) + len(body)),
+        fix, body, struct.pack("<I", crc),
+    ))
+    return rec, crc
+
+
+@dataclass
+class JournalRecord:
+    """One parsed commit-journal record (page offsets resolved to absolute)."""
+
+    seq: int
+    flags: int
+    cluster_off: int
+    cluster_size: int
+    first_entry: int
+    n_entries: int
+    n_elements: List[int]
+    pages: List[PageDesc]
+    crc: int
+    end: int = 0          # file offset just past this record (scan bookkeeping)
+
+    @property
+    def buffered(self) -> bool:
+        return bool(self.flags & JREC_BUFFERED)
+
+
+def parse_journal_record(buf, pos: int = 0) -> Tuple[JournalRecord, int]:
+    """Parse one journal record at ``pos``; raises ``IOError`` on any
+    corruption (bad magic, truncation, CRC mismatch).  Returns the record
+    and the position just past it."""
+    if len(buf) - pos < _JREC_HDR.size:
+        raise IOError("truncated journal record")
+    magic, plen = _JREC_HDR.unpack_from(buf, pos)
+    if magic != JOURNAL_MAGIC:
+        raise IOError("bad journal record magic")
+    end = pos + _JREC_HDR.size + plen + 4
+    if plen < _JREC_FIX.size or end > len(buf):
+        raise IOError("truncated journal record")
+    payload = bytes(buf[pos + _JREC_HDR.size : pos + _JREC_HDR.size + plen])
+    (crc,) = struct.unpack_from("<I", buf, pos + _JREC_HDR.size + plen)
+    if zlib.crc32(payload) != crc:
+        raise IOError("journal record checksum mismatch")
+    (seq, ver, flags, c_off, c_size, first_entry, n_entries, n_cols,
+     n_pages) = _JREC_FIX.unpack_from(payload, 0)
+    if ver not in SUPPORTED_VERSIONS:
+        raise IOError(f"unsupported journal record version {ver}")
+    body_pos = _JREC_FIX.size
+    if len(payload) != _JREC_FIX.size + 8 * n_cols + _PAGE_REC.itemsize * n_pages:
+        raise IOError("journal record length mismatch")
+    n_elements = np.frombuffer(payload, dtype="<u8", count=n_cols,
+                               offset=body_pos)
+    rec = np.frombuffer(payload, dtype=_PAGE_REC, count=n_pages,
+                        offset=body_pos + 8 * n_cols)
+    base = c_off if (flags & JREC_BUFFERED) else 0
+    pages = [
+        PageDesc(
+            column=int(r["column"]),
+            n_elements=int(r["n_elements"]),
+            offset=int(r["offset"]) + base,
+            size=int(r["size"]),
+            uncompressed_size=int(r["uncompressed_size"]),
+            checksum=int(r["checksum"]),
+            codec=int(r["codec"]),
+        )
+        for r in rec
+    ]
+    jr = JournalRecord(seq, flags, c_off, c_size, first_entry, n_entries,
+                       [int(x) for x in n_elements], pages, crc, end)
+    return jr, end
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +438,7 @@ def parse_anchor(buf: bytes) -> dict:
     magic, ver, hoff, hsize, foff, fsize, n_entries, n_clusters, crc = _ANCHOR.unpack(buf)
     if magic != MAGIC:
         raise IOError("not an RNT-J file (bad anchor magic)")
-    if ver != VERSION:
+    if ver not in SUPPORTED_VERSIONS:
         raise IOError(f"unsupported RNT-J version {ver}")
     body = _ANCHOR.pack(magic, ver, hoff, hsize, foff, fsize, n_entries, n_clusters, 0)
     if zlib.crc32(body[:-8]) != crc:

@@ -30,6 +30,7 @@ phases, mirroring ``WriterStats`` on the write side.
 from __future__ import annotations
 
 import os
+import struct
 import threading
 import time
 import zlib
@@ -109,6 +110,12 @@ class ReadOptions:
       arrays are then only valid until the next iteration — strictly a
       streaming contract (``iter_entries``/``read_column`` never recycle,
       they may hold views across clusters).
+    * ``tolerant`` — when the anchor/footer chain is missing or corrupt
+      (a crashed writer), fall back to the journal scan of
+      :mod:`repro.core.recover` and serve whatever clusters it salvages;
+      :attr:`RNTJReader.salvage` then carries the
+      :class:`~repro.core.recover.RecoveryReport` (``None`` on a normal
+      open).  DESIGN.md §8.5.
 
     The full option table lives in DESIGN.md §7.
     """
@@ -120,6 +127,7 @@ class ReadOptions:
     parallel_members: bool = True
     buffer_pool_bytes: int = 32 * 1024 * 1024
     recycle_buffers: bool = False
+    tolerant: bool = False
 
 
 class RNTJReader:
@@ -145,28 +153,22 @@ class RNTJReader:
         # recycle_buffers is on (DESIGN.md §6.8)
         self._bufpool = make_buffer_pool(self.read_options.buffer_pool_bytes)
         self._closed = False
+        self.salvage = None  # RecoveryReport when a tolerant open salvaged
         try:
             if not self.sink.readable():
                 raise IOError("sink is not readable")
-            size = self.sink.size
-            anchor = parse_anchor(self.sink.pread(size - ANCHOR_SIZE, ANCHOR_SIZE))
-            hoff, hsize = anchor["header"]
-            foff, fsize = anchor["footer"]
-            self.schema, self.options = parse_header(self.sink.pread(hoff, hsize))
-            footer = parse_footer(self.sink.pread(foff, fsize))
-            pl_off, pl_size = footer["pagelist"]
-            self.clusters: List[ClusterMeta] = parse_pagelist(
-                self.sink.pread(pl_off, pl_size)
-            )
-            # optional framed-member side-car: attach member layouts so
-            # chunked pages can decompress as parallel pool jobs.  Old
-            # files simply have no locator and decode serially as before.
-            mc_loc = (footer.get("extra") or {}).get("members")
-            if mc_loc:
-                parse_member_sidecar(
-                    self.sink.pread(mc_loc[0], mc_loc[1]), self.clusters
+            try:
+                self._load_footer_metadata()
+            except (IOError, ValueError, KeyError, struct.error):
+                if not self.read_options.tolerant:
+                    raise
+                # torn or corrupt finalization metadata: fall back to the
+                # journal scan and serve whatever it salvages (§8.5)
+                from .recover import scan_container
+                self.schema, self.options, self.clusters, self.salvage = (
+                    scan_container(self.sink)
                 )
-            self.n_entries = int(footer["n_entries"])
+                self.n_entries = self.salvage.entries_salvaged
             # column ranges: first element index of each column per cluster
             # (paper §3) — the running sums of per-cluster element counts.
             self.column_ranges = np.zeros(
@@ -183,6 +185,28 @@ class RNTJReader:
             if owns_sink:
                 self.sink.close()
             raise
+
+    def _load_footer_metadata(self) -> None:
+        """The normal open path: anchor → header → footer → page list."""
+        size = self.sink.size
+        anchor = parse_anchor(self.sink.pread(size - ANCHOR_SIZE, ANCHOR_SIZE))
+        hoff, hsize = anchor["header"]
+        foff, fsize = anchor["footer"]
+        self.schema, self.options = parse_header(self.sink.pread(hoff, hsize))
+        footer = parse_footer(self.sink.pread(foff, fsize))
+        pl_off, pl_size = footer["pagelist"]
+        self.clusters: List[ClusterMeta] = parse_pagelist(
+            self.sink.pread(pl_off, pl_size)
+        )
+        # optional framed-member side-car: attach member layouts so
+        # chunked pages can decompress as parallel pool jobs.  Old
+        # files simply have no locator and decode serially as before.
+        mc_loc = (footer.get("extra") or {}).get("members")
+        if mc_loc:
+            parse_member_sidecar(
+                self.sink.pread(mc_loc[0], mc_loc[1]), self.clusters
+            )
+        self.n_entries = int(footer["n_entries"])
 
     # -- worker pools --------------------------------------------------------
 

@@ -115,6 +115,12 @@ class IOStats:
     bytes_read: int = 0
     fallocate_calls: int = 0
     fsync_calls: int = 0
+    # fault handling (DESIGN.md §8.2): operations retried by the I/O
+    # engine's RetryPolicy, operations that exhausted their retry budget,
+    # and fsyncs that still failed after retrying
+    retries: int = 0
+    giveups: int = 0
+    fsync_failures: int = 0
 
     def merge(self, other: "IOStats") -> None:
         self.write_calls += other.write_calls
@@ -124,6 +130,9 @@ class IOStats:
         self.bytes_read += other.bytes_read
         self.fallocate_calls += other.fallocate_calls
         self.fsync_calls += other.fsync_calls
+        self.retries += other.retries
+        self.giveups += other.giveups
+        self.fsync_failures += other.fsync_failures
 
     def snapshot(self) -> "IOStats":
         return replace(self)
@@ -153,6 +162,9 @@ class WriterStats:
     io_inflight_peak: int = 0  # max write-behind bytes in flight at once
     # -- async submission + buffer pool (DESIGN.md §6.7/§6.8) ---------------
     io_submit_ns: int = 0    # producer time spent submitting queued extents
+    # -- fault handling / degradation (DESIGN.md §8.2) -----------------------
+    io_stripe_fallbacks: int = 0  # striping disabled after a stripe failure
+    io_ring_fallbacks: int = 0    # native ring degraded to synchronous ops
     pool_hits: int = 0       # buffer-pool takes served from a size class
     pool_misses: int = 0     # buffer-pool takes that had to allocate
     pool_returns: int = 0    # buffers returned to the pool
@@ -232,6 +244,14 @@ class WriterStats:
             self.pool_returns += snapshot.pool_returns
             self.pool_drops += snapshot.pool_drops
 
+    def note_stripe_fallback(self) -> None:
+        with self._mu:
+            self.io_stripe_fallbacks += 1
+
+    def note_ring_fallback(self) -> None:
+        with self._mu:
+            self.io_ring_fallbacks += 1
+
     def note_io_job(self, queued: int, inflight: int) -> None:
         """One engine write job observed with ``queued`` jobs outstanding
         and ``inflight`` write-behind bytes admitted."""
@@ -293,6 +313,11 @@ class WriterStats:
             "writev_calls": self.io.writev_calls,
             "bytes_written": self.io.bytes_written,
             "fallocate_calls": self.io.fallocate_calls,
+            "io_retries": self.io.retries,
+            "io_giveups": self.io.giveups,
+            "io_fsync_failures": self.io.fsync_failures,
+            "io_stripe_fallbacks": self.io_stripe_fallbacks,
+            "io_ring_fallbacks": self.io_ring_fallbacks,
         }
 
 

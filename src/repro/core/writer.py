@@ -58,15 +58,21 @@ from . import compression as comp
 from .bufpool import Recyclable, make_pool as make_buffer_pool
 from .cluster import ClusterBuilder, SealedCluster
 from .container import Sink, open_sink
-from .ioengine import FSYNC_ON_CLOSE, RING_AUTO, IOEngine
+from .ioengine import FSYNC_ON_CLOSE, RING_AUTO, IOEngine, RetryPolicy
 from .metadata import (
     ANCHOR_SIZE,
+    CLUSTER_ENV_SIZE,
+    JREC_BUFFERED,
     ClusterMeta,
     build_anchor,
+    build_cluster_envelope,
     build_footer,
     build_header,
+    build_journal_body,
     build_member_sidecar,
     build_pagelist,
+    finish_journal_record,
+    journal_record_size,
 )
 from .pages import DEFAULT_PAGE_SIZE, PageDesc
 from .schema import ColumnBatch, Schema
@@ -138,6 +144,15 @@ class WriteOptions:
     # rate (bytes removed per CPU second) against the sink's observed
     # drain bandwidth — a slow sink keeps compression a fast sink drops
     adaptive_rate_aware: bool = False
+    # -- failure model (DESIGN.md §8) ----------------------------------------
+    # frame every committed cluster with a self-describing envelope and
+    # append a commit-journal record, so recover_container() can rebuild
+    # the footer of a torn file from the data region alone; False writes
+    # the exact pre-journal (v1-shaped) data region
+    journal: bool = True
+    # bounded-retry policy applied by the I/O engine to every write and
+    # fsync (None = fail fast, the pre-PR-6 behavior)
+    retry_policy: Optional[RetryPolicy] = None
 
     @property
     def codec_id(self) -> int:
@@ -151,6 +166,7 @@ class WriteOptions:
             "buffered": self.buffered,
             "chunk_bytes": self.codec_chunk_bytes,
             "precondition": self.precondition,
+            "journal": self.journal,
         }
 
 
@@ -211,7 +227,10 @@ class _WriterBase:
             ),
             ring=self.options.io_ring,
             buffer_pool=self._bufpool,
+            retry=self.options.retry_policy,
         )
+        # crash-consistency framing (DESIGN.md §8.3)
+        self._journal = bool(self.options.journal)
         # header goes first; its location is fixed so no lock is needed yet.
         # It records the EFFECTIVE per-column encodings (a reused schema —
         # e.g. one parsed from a precondition=False file — may carry
@@ -221,8 +240,14 @@ class _WriterBase:
         hdr_opts["encodings"] = self.column_encodings()
         hdr = build_header(schema, hdr_opts)
         off = self.sink.reserve(len(hdr))
-        self.sink.pwrite(off, hdr)
+        self._meta_pwrite(off, hdr)
         self._header_loc = (off, len(hdr))
+
+    def _meta_pwrite(self, off: int, data: bytes) -> None:
+        """Direct metadata write (header/page list/footer/anchor), through
+        the engine's retry chokepoint so transient storage errors don't
+        fail finalization."""
+        self._io._retrying(self.sink.pwrite, off, data)
 
     def column_encodings(self) -> List[str]:
         """The encodings this writer's pages actually use."""
@@ -281,14 +306,31 @@ class _WriterBase:
         """
         opts = self.options
         t0 = _ns()
-        self._io.admit(sealed.size)
+        # With the journal on, the reserved extent is
+        # [envelope][payload][journal record], submitted as ONE vectored
+        # engine write — no extra syscall.  The page list's byte_offset
+        # still points at the payload, so footer-based readers never see
+        # the framing.  The record body (element counts + page records
+        # with cluster-relative offsets) serializes OUTSIDE the critical
+        # section; only the fixed prefix needs the reserved offset.
+        env_len = CLUSTER_ENV_SIZE if self._journal else 0
+        if self._journal:
+            jbody = build_journal_body(sealed.n_elements, sealed.pages)
+            jlen = journal_record_size(len(sealed.n_elements),
+                                       len(sealed.pages))
+        else:
+            jbody, jlen = b"", 0
+        total = env_len + sealed.size + jlen
+        self._io.admit(total)
         io_ns = 0
         with self.lock:
-            off = self.sink.reserve(sealed.size)
+            ext = self.sink.reserve(total)
+            off = ext + env_len
             if opts.fallocate:
-                self.sink.fallocate(off, sealed.size)
+                self.sink.fallocate(ext, total)
             first_entry = self._n_entries
             self._n_entries += sealed.n_entries
+            seq = len(self._clusters)
             self._clusters.append(
                 ClusterMeta(
                     first_entry=first_entry,
@@ -299,14 +341,21 @@ class _WriterBase:
                     byte_size=sealed.size,
                 )
             )
+            if self._journal:
+                jrec, desc_crc = finish_journal_record(
+                    seq, JREC_BUFFERED, off, sealed.size, first_entry,
+                    sealed.n_entries, len(sealed.n_elements), jbody,
+                )
+                parts = ([build_cluster_envelope(seq, sealed.size, desc_crc)]
+                         + sealed.iov_plan() + [jrec])
+            else:
+                parts = sealed.iov_plan()
             if not opts.write_outside_lock:
-                io_ns = self._submit_or_latch(off, sealed.iov_plan(),
-                                              sealed.size, owner=sealed)
+                io_ns = self._submit_or_latch(ext, parts, total, owner=sealed)
         if opts.write_outside_lock:
             # opt-2: the extent is reserved and the metadata final — the
             # actual bytes go out truly in parallel (paper §5).
-            io_ns = self._submit_or_latch(off, sealed.iov_plan(),
-                                          sealed.size, owner=sealed)
+            io_ns = self._submit_or_latch(ext, parts, total, owner=sealed)
         self.stats.add_sealed_cluster(sealed, commit_ns=_ns() - t0, io_ns=io_ns)
 
     def _poison(self, e: BaseException) -> None:
@@ -366,13 +415,84 @@ class _WriterBase:
         self, n_entries: int, n_elements: List[int], pages: List[PageDesc],
         uncompressed: int,
     ) -> None:
+        # Unbuffered clusters have no contiguous payload to frame, so the
+        # journal contribution is a record alone (flags=0: absolute page
+        # offsets); recovery validates the scattered pages by their CRCs.
+        jlen = (journal_record_size(len(n_elements), len(pages))
+                if self._journal else 0)
+        jbody = build_journal_body(n_elements, pages) if self._journal else b""
+        if jlen:
+            self._io.admit(jlen)
         with self.lock:
             first_entry = self._n_entries
             self._n_entries += n_entries
             self._clusters.append(
                 ClusterMeta(first_entry, n_entries, n_elements, list(pages))
             )
+            if jlen:
+                jrec, _ = finish_journal_record(
+                    len(self._clusters) - 1, 0, 0, 0, first_entry, n_entries,
+                    len(n_elements), jbody,
+                )
+                j_off = self.sink.reserve(jlen)
+                self._submit_or_latch(j_off, [jrec], jlen)
         self.stats.add_cluster_meta(n_entries, uncompressed)
+
+    def _commit_raw_cluster(
+        self,
+        blob,
+        n_entries: int,
+        n_elements: List[int],
+        pages: List[PageDesc],
+        base: int,
+        owner=None,
+    ) -> None:
+        """Commit an already-assembled cluster payload byte-verbatim — the
+        merge fast path's critical section.  ``pages`` carry offsets
+        relative to ``base`` (the payload's offset in its source file);
+        the output gets a fresh envelope + journal record, so merged
+        files are as recoverable as directly written ones."""
+        nbytes = len(blob)
+        rel = [p.rebase(-base) for p in pages] if base else list(pages)
+        env_len = CLUSTER_ENV_SIZE if self._journal else 0
+        if self._journal:
+            jbody = build_journal_body(n_elements, rel)
+            jlen = journal_record_size(len(n_elements), len(rel))
+        else:
+            jbody, jlen = b"", 0
+        total = env_len + nbytes + jlen
+        self._io.admit(total)
+        with self.lock:
+            ext = self.sink.reserve(total)
+            off = ext + env_len
+            first_entry = self._n_entries
+            self._n_entries += n_entries
+            seq = len(self._clusters)
+            self._clusters.append(
+                ClusterMeta(
+                    first_entry=first_entry,
+                    n_entries=n_entries,
+                    n_elements=list(n_elements),
+                    pages=[p.rebase(off) for p in rel],
+                    byte_offset=off,
+                    byte_size=nbytes,
+                )
+            )
+            if self._journal:
+                jrec, desc_crc = finish_journal_record(
+                    seq, JREC_BUFFERED, off, nbytes, first_entry, n_entries,
+                    len(n_elements), jbody,
+                )
+                parts = [build_cluster_envelope(seq, nbytes, desc_crc),
+                         blob, jrec]
+            else:
+                parts = [blob]
+            self._submit_or_latch(ext, parts, total, owner=owner)
+        with self.stats._mu:
+            self.stats.clusters += 1
+            self.stats.entries += n_entries
+            self.stats.pages += len(pages)
+            self.stats.compressed_bytes += nbytes
 
     # -- finalization ---------------------------------------------------------
 
@@ -388,41 +508,59 @@ class _WriterBase:
             # error hook) before any finalization byte is even built
             self._io.drain()
             if self._commit_error is None:
+                if (self._journal and self._clusters
+                        and self._io._fsync_interval
+                        and not self._io._fsync_every):
+                    # journal-before-footer barrier (DESIGN.md §8.3):
+                    # every committed cluster's envelope + journal record
+                    # is durable before the first finalization byte
+                    # exists, so a crash during finalization always
+                    # leaves a journal that covers all committed data.
+                    # Only the byte-interval policy needs it: every-cluster
+                    # already synced each extent, and under on_close
+                    # nothing is durable until the single close fsync
+                    # below — which then covers journal and footer alike.
+                    self._io.fsync()
                 with self.lock:
                     extra = None
                     sc = build_member_sidecar(self._clusters)
                     if sc is not None:
                         sc_off = self.sink.reserve(len(sc))
-                        self.sink.pwrite(sc_off, sc)
+                        self._meta_pwrite(sc_off, sc)
                         extra = {"members": [sc_off, len(sc)]}
                     pl = build_pagelist(self._clusters, self.schema.n_columns)
                     pl_off = self.sink.reserve(len(pl))
-                    self.sink.pwrite(pl_off, pl)
+                    self._meta_pwrite(pl_off, pl)
                     ftr = build_footer(self._n_entries, len(self._clusters),
                                        (pl_off, len(pl)), extra=extra)
                     f_off = self.sink.reserve(len(ftr))
-                    self.sink.pwrite(f_off, ftr)
+                    self._meta_pwrite(f_off, ftr)
                     anchor = build_anchor(
                         self._header_loc, (f_off, len(ftr)), self._n_entries,
                         len(self._clusters),
                     )
                     a_off = self.sink.reserve(ANCHOR_SIZE)
-                    self.sink.pwrite(a_off, anchor)
+                    self._meta_pwrite(a_off, anchor)
                 # Durability before close: fsync the sink unconditionally
                 # (sinks without a backing fd make it a no-op counter
                 # bump).  The seed gated this on readable() — which
                 # skipped the fsync exactly for write-only sinks — and as
-                # a discarded conditional expression.  The fsync must
-                # precede the io-stats snapshot to be counted.
-                self.sink.fsync()
+                # a discarded conditional expression.  Routed through the
+                # engine so it is retried and a final failure poisons
+                # (and is accounted) like any other I/O error.  The fsync
+                # must precede the io-stats snapshot to be counted.
+                self._io.fsync()
         finally:
-            # resources are released on every path, even a poisoned one
-            self._io.close()
-            self.stats.merge_lock(self.lock.snapshot())
-            self.stats.merge_io(self.sink.io.snapshot())
-            if self._bufpool is not None:
-                self.stats.merge_pool(self._bufpool.snapshot())
-            self.sink.close()
+            # resources are released on every path, even a poisoned one —
+            # and even when one release step itself fails
+            try:
+                self._io.close()
+            finally:
+                self.stats.merge_lock(self.lock.snapshot())
+                self.stats.merge_io(self.sink.io.snapshot())
+                if self._bufpool is not None:
+                    self.stats.merge_pool(self._bufpool.snapshot())
+                self.sink.close()
         if self._commit_error is not None:
             raise RuntimeError(
                 "writer aborted: a cluster failed to seal or commit; the "

@@ -1,0 +1,298 @@
+"""Chaos driver: run the write path under injected storage faults.
+
+Each scenario builds a file through a :class:`FaultInjectingSink` and
+asserts the robustness contract that DESIGN.md §8 promises for it:
+
+* ``transient``     — scripted EIO/EAGAIN bursts + a torn (short) write:
+                      the run completes, retry counters are nonzero, and
+                      the file reads back with zero loss.
+* ``seeded``        — seeded random transient errors at an error rate:
+                      same seed → same fault schedule; zero loss.
+* ``enospc``        — persistent ENOSPC on an offset window: retries
+                      exhaust, the writer poisons, close() raises, and a
+                      second close() is a safe no-op.
+* ``fsync``         — transient then permanent fsync failure: the former
+                      is retried, the latter poisons (never swallowed).
+* ``stripe``        — a non-retryable stripe error: the engine rewrites
+                      the extent monolithically and disables striping.
+* ``ring``          — write-behind (emulated ring) under transient
+                      faults: completes with zero loss.
+* ``latency``       — injected latency spikes: slow but lossless.
+* ``kill``          — a matrix of process-kill points across the file:
+                      each torn file is salvaged by ``recover_container``
+                      and every salvaged entry reads back byte-identical.
+
+Run:
+    python tools/chaos.py                      # all scenarios
+    python tools/chaos.py --scenario kill      # one scenario
+    python tools/chaos.py --seed 3 --entries 2000
+
+Exit status: 0 when every scenario holds its invariant, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import errno
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    Collection,
+    FaultInjectingSink,
+    FaultSpec,
+    Leaf,
+    MemorySink,
+    ParallelWriter,
+    ProcessKilled,
+    RNTJReader,
+    RetryPolicy,
+    Schema,
+    SequentialWriter,
+    WriteOptions,
+    recover_container,
+    RecoveryError,
+)
+from repro.core.faults import crashed_file_bytes, memory_sink_from_bytes  # noqa: E402
+
+SCHEMA = Schema([
+    Leaf("id", "int64"),
+    Collection("vals", Leaf("_0", "float32")),
+])
+
+# fast deterministic backoff so chaos runs stay quick
+POLICY = RetryPolicy(max_attempts=8, backoff_base=0.0002, backoff_cap=0.002)
+
+
+def make_entries(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(0, 6, size=n)
+    return [
+        {"id": int(i), "vals": [float(v) for v in rng.random(lens[i],
+                                                             dtype=np.float32)]}
+        for i in range(n)
+    ]
+
+
+def write_through(sink, entries, **opt_kw):
+    opts = WriteOptions(cluster_bytes=opt_kw.pop("cluster_bytes", 8192),
+                        retry_policy=POLICY, **opt_kw)
+    w = SequentialWriter(SCHEMA, sink, opts)
+    for e in entries:
+        w.fill(e)
+    w.close()
+    return w
+
+
+def verify_lossless(inner_sink, entries, label):
+    r = RNTJReader(inner_sink)
+    got = list(r.iter_entries())
+    r.close()
+    assert len(got) == len(entries), (
+        f"{label}: {len(got)} of {len(entries)} entries read back")
+    assert got == entries, f"{label}: entries differ after faults"
+
+
+# -- scenarios ---------------------------------------------------------------
+
+
+def scenario_transient(entries, seed):
+    fs = FaultInjectingSink(MemorySink(), [
+        FaultSpec.transient_error(count=3),
+        FaultSpec.transient_error(err=errno.EAGAIN, count=2, at_call=11),
+        FaultSpec.short_write(at_call=6),
+    ])
+    w = write_through(fs, entries)
+    d = w.stats.as_dict()
+    assert d["io_retries"] >= 5, f"retries not counted: {d['io_retries']}"
+    assert d["io_giveups"] == 0
+    verify_lossless(fs.inner, entries, "transient")
+    return {"retries": d["io_retries"], "injected": fs.faults.injected}
+
+
+def scenario_seeded(entries, seed):
+    # a 10% per-call rate needs enough write calls to fire with near
+    # certainty — pad tiny --entries workloads deterministically
+    if len(entries) < 2000:
+        entries = entries + make_entries(2000 - len(entries), seed + 1)
+    fs = FaultInjectingSink(MemorySink(), seed=seed, error_rate=0.1)
+    w = write_through(fs, entries, cluster_bytes=2048)
+    d = w.stats.as_dict()
+    assert fs.faults.random_errors >= 1, "seeded schedule injected nothing"
+    assert d["io_retries"] >= fs.faults.random_errors
+    verify_lossless(fs.inner, entries, "seeded")
+    return {"retries": d["io_retries"],
+            "injected": fs.faults.random_errors}
+
+
+def scenario_enospc(entries, seed):
+    fs = FaultInjectingSink(MemorySink(), [
+        FaultSpec(op="write", kind="error", err=errno.ENOSPC, count=-1,
+                  at_offset=(4096, 1 << 62)),
+    ])
+    w = SequentialWriter(SCHEMA, fs, WriteOptions(cluster_bytes=2048,
+                                                  retry_policy=POLICY))
+    poisoned = False
+    try:
+        for e in entries:
+            w.fill(e)
+        w.close()
+    except (OSError, RuntimeError):
+        poisoned = True
+    assert poisoned, "persistent ENOSPC did not fail the writer"
+    try:
+        w.close()  # the first close after a poisoned commit surfaces it
+    except (OSError, RuntimeError):
+        pass
+    w.close()      # ... and any further close is a safe no-op (§8.2)
+    d = w.stats.as_dict()
+    assert d["io_giveups"] >= 1, "exhausted retries not counted as giveup"
+    return {"giveups": d["io_giveups"], "retries": d["io_retries"]}
+
+
+def scenario_fsync(entries, seed):
+    fs = FaultInjectingSink(MemorySink(), [FaultSpec.fsync_error(count=2)])
+    w = write_through(fs, entries, fsync_policy="every_cluster")
+    assert w.stats.as_dict()["io_retries"] >= 2
+    verify_lossless(fs.inner, entries, "fsync-transient")
+
+    fs = FaultInjectingSink(MemorySink(), [FaultSpec.fsync_error(count=-1)])
+    w = SequentialWriter(SCHEMA, fs, WriteOptions(
+        cluster_bytes=8192, retry_policy=POLICY,
+        fsync_policy="every_cluster"))
+    poisoned = False
+    try:
+        for e in entries:
+            w.fill(e)
+        w.close()
+    except (OSError, RuntimeError):
+        poisoned = True
+    try:
+        w.close()
+    except (OSError, RuntimeError):
+        pass
+    assert poisoned, "permanent fsync failure was swallowed"
+    assert w.stats.as_dict()["io_fsync_failures"] >= 1
+    return {"fsync_failures": w.stats.as_dict()["io_fsync_failures"]}
+
+
+def scenario_stripe(entries, seed):
+    fs = FaultInjectingSink(MemorySink(), [
+        FaultSpec.transient_error(err=errno.EBADF, at_call=4, count=1),
+    ])
+    w = write_through(fs, entries, cluster_bytes=16384,
+                      io_stripe_bytes=2048, io_workers=2)
+    d = w.stats.as_dict()
+    assert d["io_stripe_fallbacks"] >= 1, "stripe failure did not degrade"
+    verify_lossless(fs.inner, entries, "stripe")
+    return {"stripe_fallbacks": d["io_stripe_fallbacks"]}
+
+
+def scenario_ring(entries, seed):
+    fs = FaultInjectingSink(MemorySink(), [
+        FaultSpec.transient_error(count=4),
+    ])
+    opts = WriteOptions(cluster_bytes=4096, retry_policy=POLICY,
+                        io_inflight_bytes=1 << 20, io_ring=0)
+    w = ParallelWriter(SCHEMA, fs, opts)
+    ctx = w.create_fill_context()
+    for e in entries:
+        ctx.fill(e)
+    ctx.close()
+    w.close()
+    d = w.stats.as_dict()
+    assert d["io_retries"] >= 1
+    verify_lossless(fs.inner, entries, "ring")
+    return {"retries": d["io_retries"]}
+
+
+def scenario_latency(entries, seed):
+    fs = FaultInjectingSink(MemorySink(), [
+        FaultSpec.latency(0.002, count=5),
+    ])
+    write_through(fs, entries)
+    assert fs.faults.latencies == 5
+    verify_lossless(fs.inner, entries, "latency")
+    return {"latencies": fs.faults.latencies}
+
+
+def scenario_kill(entries, seed):
+    # reference file: the same workload written cleanly
+    ref = MemorySink()
+    write_through(ref, entries, cluster_bytes=2048)
+    size = ref.size
+    kills = [int(k) for k in np.linspace(200, size + 64, 12)]
+    salvaged_total = 0
+    results = []
+    for K in kills:
+        fs = FaultInjectingSink(MemorySink(), [FaultSpec.kill_at(K)])
+        try:
+            write_through(fs, entries, cluster_bytes=2048)
+            crashed = False
+        except (ProcessKilled, OSError, RuntimeError):
+            crashed = True
+        ms = memory_sink_from_bytes(crashed_file_bytes(fs))
+        try:
+            rep = recover_container(ms)
+        except RecoveryError:
+            assert K < 1024, f"header-only loss expected near 0, not K={K}"
+            results.append((K, "unrecoverable"))
+            continue
+        r = RNTJReader(ms)
+        got = list(r.iter_entries())
+        r.close()
+        assert got == entries[: len(got)], (
+            f"K={K}: salvaged entries not byte-identical")
+        if not crashed:
+            assert len(got) == len(entries)
+        salvaged_total += len(got)
+        results.append((K, len(got)))
+    return {"kill_points": len(kills), "salvage": results}
+
+
+SCENARIOS = {
+    "transient": scenario_transient,
+    "seeded": scenario_seeded,
+    "enospc": scenario_enospc,
+    "fsync": scenario_fsync,
+    "stripe": scenario_stripe,
+    "ring": scenario_ring,
+    "latency": scenario_latency,
+    "kill": scenario_kill,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="RNT-J chaos scenarios")
+    ap.add_argument("--scenario", default="all",
+                    choices=["all"] + sorted(SCENARIOS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--entries", type=int, default=800)
+    args = ap.parse_args(argv)
+
+    names = sorted(SCENARIOS) if args.scenario == "all" else [args.scenario]
+    entries = make_entries(args.entries, args.seed)
+    failed = []
+    for name in names:
+        try:
+            info = SCENARIOS[name](list(entries), args.seed)
+        except AssertionError as e:
+            print(f"FAIL {name}: {e}")
+            failed.append(name)
+            continue
+        print(f"ok   {name}: {info}")
+    if failed:
+        print(f"{len(failed)} scenario(s) failed: {', '.join(failed)}")
+        return 1
+    print(f"all {len(names)} scenario(s) held their invariants")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
