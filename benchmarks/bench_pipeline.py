@@ -1,0 +1,207 @@
+"""Training-data pipeline benchmark: host vs fused device decode (§9).
+
+Measures tokens/second delivered into a dummy jitted train step by
+:class:`repro.pipeline.PackedLoader` on the synthetic tokenized corpus
+(``pipeline.ingest.synth_corpus``), across three cells:
+
+ 1. **host** — the numpy engine: ``read_cluster`` + per-document Python
+    packing, ``jnp.asarray`` copy into the step.
+ 2. **device** — the fused device decode chain with the overlap pipeline
+    disabled (``prefetch_clusters=0``): stored page bytes upload once,
+    decode + packing run as jitted device ops, but cluster *N+1* waits
+    for cluster *N*.
+ 3. **device+overlap** — the full §9 path: the prefetch pool runs
+    cluster *N+1*'s pread + entropy decode + H2D upload while cluster
+    *N* decodes and packs on device.
+
+Run at codec ``none`` (the decode-bound configuration the tokens/s win
+is measured on) and ``zlib`` (decompression-bound; the overlap hides it
+behind the device half).  Every cell's batches are asserted
+BIT-IDENTICAL to the host engine's before timing — the speed cells never
+run unverified code paths.  ``device_decode="auto"`` on this CPU
+container compiles the jnp oracle ops through XLA (the Pallas kernels
+engage on TPU; interpret-mode identity is covered by
+``tests/test_device_decode.py`` and the ``pallas-interpret`` CI job).
+
+Emits ``BENCH_pipeline.json`` (repo root by default).  Scratch files
+live in ``benchmarks/_scratch_pipeline/`` (gitignored).
+
+Run:  PYTHONPATH=src python benchmarks/bench_pipeline.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+
+import numpy as np
+
+from _harness import REPO_ROOT  # noqa: F401
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.reader import ReadOptions  # noqa: E402
+from repro.core.writer import WriteOptions  # noqa: E402
+from repro.pipeline import PackedLoader, ingest_corpus, synth_corpus  # noqa: E402
+
+SCRATCH = REPO_ROOT / "benchmarks" / "_scratch_pipeline"
+
+BATCH, SEQ = 8, 512
+# Nested-data workload: many short collections per entry (mean 48
+# elements), the regime the paper's formats target — the host engine
+# pays its per-document Python loop on every entry, the device engine
+# packs the whole cluster in one jitted call regardless of entry count.
+MEAN_LEN = 48
+
+
+@jax.jit
+def _dummy_step(tokens, labels):
+    """Stands in for a train step: consumes the batch on device."""
+    return jnp.sum(tokens.astype(jnp.float32)) + jnp.sum(labels == 0)
+
+
+def _loader(path: str, cell: str) -> PackedLoader:
+    if cell == "host":
+        return PackedLoader(path, BATCH, SEQ, device="host")
+    prefetch = 0 if cell == "device" else 1
+    return PackedLoader(
+        path, BATCH, SEQ, device="device",
+        read_options=ReadOptions(device_decode="auto",
+                                 prefetch_clusters=prefetch,
+                                 decode_workers=2 if prefetch else 0),
+    )
+
+
+def assert_identity(path: str, n_batches: int) -> None:
+    """Every cell emits the host engine's exact batches, from a fresh
+    cursor and from a mid-stream state() resume."""
+    loaders = {cell: _loader(path, cell) for cell in
+               ("host", "device", "device_overlap")}
+    its = {c: ld.batches() for c, ld in loaders.items()}
+    for k in range(n_batches):
+        want = {kk: np.asarray(v) for kk, v in next(its["host"]).items()}
+        for cell in ("device", "device_overlap"):
+            got = next(its[cell])
+            for kk in ("tokens", "labels"):
+                np.testing.assert_array_equal(
+                    np.asarray(got[kk]), want[kk],
+                    err_msg=f"{cell} batch {k} {kk}")
+    # mid-stream resume equivalence across engines
+    state = loaders["device"].state()
+    h2 = PackedLoader(path, BATCH, SEQ, state=state, device="host")
+    d2 = _loader(path, "device_overlap")
+    d2.load_state(state)
+    gh, gd = h2.batches(), d2.batches()
+    for k in range(4):
+        want, got = next(gh), next(gd)
+        for kk in ("tokens", "labels"):
+            np.testing.assert_array_equal(
+                np.asarray(got[kk]), np.asarray(want[kk]),
+                err_msg=f"resume batch {k} {kk}")
+    for ld in loaders.values():
+        ld.close()
+    h2.close(), d2.close()
+
+
+def _epoch_batches(path: str) -> int:
+    """Batches per epoch of the packed stream (docs + EOS separators)."""
+    ld = _loader(path, "host")
+    col_val = ld.reader.schema.column_of_path["tokens._0"]
+    stream = int(ld.reader.total_elements[col_val]) + ld.reader.n_entries
+    ld.close()
+    return max(1, stream // (BATCH * (SEQ + 1)))
+
+
+def bench_cell(path: str, cell: str, n_batches: int, repeats: int) -> dict:
+    best = float("inf")
+    stats = None
+    for _ in range(repeats):
+        ld = _loader(path, cell)
+        it = ld.batches()
+        # warm one full epoch: compiles the step and every per-cluster
+        # jitted pack/slice shape, and faults the file into page cache —
+        # the timed window then measures steady-state decode + packing
+        warm = max(1, n_batches // 2)
+        for _k in range(warm):
+            b = next(it)
+            _dummy_step(b["tokens"], b["labels"]).block_until_ready()
+        t0 = time.perf_counter()
+        for _k in range(n_batches):
+            b = next(it)
+            _dummy_step(b["tokens"], b["labels"]).block_until_ready()
+        wall = time.perf_counter() - t0
+        if wall < best:
+            best = wall
+            r = ld.reader.stats
+            stats = {"device_clusters": r.device_clusters,
+                     "h2d_ms": round(r.h2d_ns / 1e6, 2),
+                     "wait_ms": round(r.wait_ns / 1e6, 2)}
+        ld.close()
+    toks = n_batches * BATCH * SEQ
+    return {"wall_s": round(best, 4),
+            "tokens_per_s": round(toks / best),
+            **(stats or {})}
+
+
+def run(n_docs: int, epochs: int, repeats: int, out_path: Path) -> dict:
+    SCRATCH.mkdir(parents=True, exist_ok=True)
+    out: dict = {
+        "benchmark": "bench_pipeline",
+        "batch": BATCH, "seq_len": SEQ,
+        "n_docs": n_docs, "mean_len": MEAN_LEN, "epochs_timed": epochs,
+        "cpu_count": os.cpu_count(),
+        "jax_backend": jax.default_backend(),
+        "identity": "asserted bit-identical (host vs device engines)",
+        "codecs": {},
+    }
+    try:
+        for codec in ("none", "zlib"):
+            path = str(SCRATCH / f"corpus_{codec}.rntj")
+            ingest_corpus(
+                synth_corpus(n_docs, seed=7, mean_len=MEAN_LEN), path,
+                n_workers=4,
+                options=WriteOptions(codec=codec, level=1,
+                                     cluster_bytes=2 * 1024 * 1024),
+            )
+            assert_identity(path, n_batches=6)
+            # time whole epochs: every cell decodes every cluster the
+            # same number of times (no amortization mismatch between
+            # the per-doc host pull and the per-cluster device pull)
+            n_batches = _epoch_batches(path) * epochs
+            out["codecs_n_batches_%s" % codec] = n_batches
+            cells = {}
+            for cell in ("host", "device", "device_overlap"):
+                cells[cell] = bench_cell(path, cell, n_batches, repeats)
+                print(f"{codec:5s} {cell:15s} "
+                      f"{cells[cell]['tokens_per_s']:>12,} tokens/s")
+            cells["speedup_device_overlap_vs_host"] = round(
+                cells["device_overlap"]["tokens_per_s"]
+                / cells["host"]["tokens_per_s"], 2)
+            out["codecs"][codec] = cells
+    finally:
+        shutil.rmtree(SCRATCH, ignore_errors=True)
+    out_path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {out_path}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload for CI smoke runs")
+    ap.add_argument("--out", type=str,
+                    default=str(REPO_ROOT / "BENCH_pipeline.json"))
+    args = ap.parse_args()
+    n_docs = 16_000 if args.quick else 60_000
+    epochs = 1 if args.quick else 2
+    repeats = 2 if args.quick else 3
+    run(n_docs, epochs, repeats, Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

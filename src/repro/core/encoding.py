@@ -13,11 +13,11 @@ TPU-side ports and are property-tested to be bit-identical against these
 
 from __future__ import annotations
 
-import os
-import sys
 from typing import Optional
 
 import numpy as np
+
+from repro.kernels.ops import KernelDispatch
 
 from .schema import ENC_DELTA_ZIGZAG_SPLIT, ENC_NONE, ENC_SPLIT
 
@@ -196,17 +196,14 @@ def _batched_split_into(a: np.ndarray, per: int, out_u8: np.ndarray) -> None:
     if n_full:
         src = a[:head].view(np.uint8).reshape(n_full, per, nb)
         done = False
-        use_pallas = _SHUFFLE_BACKEND == "pallas" or (
-            _SHUFFLE_BACKEND == "auto" and head * nb >= _SHUFFLE_PALLAS_MIN
-        )
-        if use_pallas:
-            kernel = _resolve_pallas_shuffle()
+        if _SHUFFLE.want(head * nb):
+            kernel = _SHUFFLE.resolve()
             if kernel:
                 try:
                     out_u8[: head * nb].reshape(n_full, nb, per)[:] = kernel(src)
                     done = True
                 except Exception:
-                    globals()["_pallas_shuffle"] = False
+                    _SHUFFLE.disable()
         if not done:
             np.copyto(
                 out_u8[: head * nb].reshape(n_full, nb, per),
@@ -412,68 +409,32 @@ def unprecondition(buf: bytes, encoding: str, dtype: np.dtype, n: int) -> np.nda
     raise ValueError(f"unknown encoding {encoding!r}")
 
 
-# Pallas offsets_scan dispatch: REPRO_OFFSETS_BACKEND = auto | numpy | pallas.
-# "auto" only selects the kernel on an accelerator backend (tpu/gpu); the
-# CPU interpret path exists for correctness tests, not speed.  All REPRO_*
-# environment variables are tabulated in DESIGN.md §7.4.
-_OFFSETS_BACKEND = os.environ.get("REPRO_OFFSETS_BACKEND", "auto").lower()
-_PALLAS_MIN_ELEMS = int(os.environ.get("REPRO_OFFSETS_PALLAS_MIN", "65536"))
-_pallas_scan = None  # resolved lazily; False once ruled out
-
-# Pallas byteshuffle dispatch for split preconditioning, same shape:
-# REPRO_SHUFFLE_BACKEND = auto | numpy | pallas, with a byte threshold
-# below which the strided numpy copy always wins.
-_SHUFFLE_BACKEND = os.environ.get("REPRO_SHUFFLE_BACKEND", "auto").lower()
-_SHUFFLE_PALLAS_MIN = int(os.environ.get("REPRO_SHUFFLE_PALLAS_MIN",
-                                         str(256 * 1024)))
-_pallas_shuffle = None  # resolved lazily; False once ruled out
+# Backend dispatch (DESIGN.md §3.3/§7.4): every kernel family shares ONE
+# KernelDispatch (repro.kernels.ops).  REPRO_KERNEL_BACKEND sets the global
+# default; REPRO_OFFSETS_BACKEND / REPRO_SHUFFLE_BACKEND stay honored as
+# per-kernel overrides, with REPRO_*_PALLAS_MIN size floors below which the
+# numpy path always wins.  "auto" only selects a kernel on an accelerator
+# backend with jax already imported — the CPU interpret path exists for
+# correctness tests, not speed.
 
 
-def _resolve_pallas_shuffle():
-    global _pallas_shuffle
-    if _pallas_shuffle is None:
-        # Same rule as the offsets dispatch: in auto mode never pay a cold
-        # jax import inside the seal path — only consider the kernel when
-        # the application already imported jax.  Stay unresolved (don't
-        # cache the negative) so a later jax import can still enable it.
-        if _SHUFFLE_BACKEND != "pallas" and "jax" not in sys.modules:
-            return False
-        try:
-            import jax
+def _load_offsets_kernel():
+    from repro.kernels.offsets_scan import offsets_scan_host
 
-            from repro.kernels.byteshuffle import byteshuffle_pages_host
-
-            if _SHUFFLE_BACKEND != "pallas" and jax.default_backend() == "cpu":
-                _pallas_shuffle = False
-            else:
-                _pallas_shuffle = byteshuffle_pages_host
-        except Exception:
-            _pallas_shuffle = False
-    return _pallas_shuffle
+    return offsets_scan_host
 
 
-def _resolve_pallas_scan():
-    global _pallas_scan
-    if _pallas_scan is None:
-        # In auto mode, never pay the (multi-second, cold) jax import
-        # inside the producer's fill path: only consider the kernel when
-        # the application has already imported jax — in which case the
-        # backend check below is cheap.  Stay unresolved (don't cache the
-        # negative) so a later jax import can still enable the kernel.
-        if _OFFSETS_BACKEND != "pallas" and "jax" not in sys.modules:
-            return False
-        try:
-            import jax
+def _load_shuffle_kernel():
+    from repro.kernels.byteshuffle import byteshuffle_pages_host
 
-            from repro.kernels.offsets_scan import offsets_scan_host
+    return byteshuffle_pages_host
 
-            if _OFFSETS_BACKEND != "pallas" and jax.default_backend() == "cpu":
-                _pallas_scan = False
-            else:
-                _pallas_scan = offsets_scan_host
-        except Exception:
-            _pallas_scan = False
-    return _pallas_scan
+
+#: offsets-scan dispatch; ``min`` is in ELEMENTS
+_OFFSETS = KernelDispatch("offsets", _load_offsets_kernel, min_default=65536)
+#: byteshuffle dispatch; ``min`` is in BYTES
+_SHUFFLE = KernelDispatch("shuffle", _load_shuffle_kernel,
+                          min_default=256 * 1024)
 
 
 def integrate_sizes(
@@ -490,19 +451,16 @@ def integrate_sizes(
     n = len(sizes)
     if out is None:
         out = np.empty(n, dtype=np.int64)
-    use_pallas = _OFFSETS_BACKEND == "pallas" or (
-        _OFFSETS_BACKEND == "auto" and n >= _PALLAS_MIN_ELEMS
-    )
     done = False
-    if use_pallas and n:
-        kernel = _resolve_pallas_scan()
+    if n and _OFFSETS.want(n):
+        kernel = _OFFSETS.resolve()
         # the kernel scans in int32: only dispatch when the total fits
         if kernel and int(np.sum(sizes, dtype=np.int64)) < 2**31:
             try:
                 out[:] = kernel(np.asarray(sizes))
                 done = True
             except Exception:
-                globals()["_pallas_scan"] = False
+                _OFFSETS.disable()
     if not done:
         np.cumsum(
             np.asarray(sizes).astype(np.int64, copy=False),

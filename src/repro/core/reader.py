@@ -110,6 +110,15 @@ class ReadOptions:
       arrays are then only valid until the next iteration — strictly a
       streaming contract (``iter_entries``/``read_column`` never recycle,
       they may hold views across clusters).
+    * ``device_decode`` — backend of the fused device decode chain used
+      by :meth:`RNTJReader.read_cluster_device` /
+      :meth:`RNTJReader.iter_clusters_device` (DESIGN.md §9):
+      ``"auto"`` compiles the jnp oracle ops through XLA (Pallas kernels
+      engage on TPU); ``"pallas"`` forces the Pallas kernels (interpret
+      mode off-TPU — the bit-identity test configuration); ``"off"``
+      disables the device path entirely (the device entry points raise).
+      The host-path methods (``read_cluster``, ``iter_clusters``) never
+      consult this knob.
     * ``tolerant`` — when the anchor/footer chain is missing or corrupt
       (a crashed writer), fall back to the journal scan of
       :mod:`repro.core.recover` and serve whatever clusters it salvages;
@@ -127,6 +136,7 @@ class ReadOptions:
     parallel_members: bool = True
     buffer_pool_bytes: int = 32 * 1024 * 1024
     recycle_buffers: bool = False
+    device_decode: str = "auto"
     tolerant: bool = False
 
 
@@ -501,6 +511,351 @@ class RNTJReader:
     def cluster_entry_range(self, cluster_index: int) -> Tuple[int, int]:
         cm = self.clusters[cluster_index]
         return cm.first_entry, cm.first_entry + cm.n_entries
+
+    # -- the device decode path (DESIGN.md §9) -------------------------------
+
+    def _device_backend(self) -> Tuple[bool, bool]:
+        """-> ``(use_pallas, interpret)`` for the fused decode drivers.
+
+        ``auto`` compiles the jnp oracle ops through XLA (and engages the
+        Pallas kernels on TPU); ``pallas`` forces the kernels — interpret
+        mode off-TPU, the bit-identity test configuration.  ``auto``
+        defers to ``REPRO_KERNEL_BACKEND`` (the one knob shared by every
+        dispatched kernel, §7.4) so the CI pallas-interpret job drives
+        this chain too.
+        """
+        import jax
+
+        mode = self.read_options.device_decode
+        if mode == "auto":
+            from repro.kernels.ops import GLOBAL_BACKEND_ENV
+
+            mode = os.environ.get(GLOBAL_BACKEND_ENV, "auto").lower()
+        if mode == "pallas":
+            return True, jax.default_backend() != "tpu"
+        return jax.default_backend() == "tpu", False
+
+    def _plan_device_cluster(self, cluster_index: int, targets: Sequence[int]):
+        """Split a cluster's columns into device plans and host fallbacks,
+        and lay out the staging buffer.
+
+        A column decodes on device when its pages are *uniform* (every
+        page but the last carries the same element count — the sealed
+        layout), its element width survives 32-bit lanes (8-byte leaf
+        columns fall back: jax runs with x64 disabled), and — for offset
+        columns — the cluster's child element total fits int32, which
+        makes the fused int32 offsets EXACT (§9).  Everything else
+        decodes through the host path unchanged.
+        """
+        cm = self.clusters[cluster_index]
+        by_col: Dict[int, List[PageDesc]] = {}
+        want = set(targets)
+        for d in cm.pages:
+            if d.column in want:
+                by_col.setdefault(d.column, []).append(d)
+        plans: List[Dict] = []
+        fallback: List[int] = []
+        base = 0
+        for ci in targets:
+            ds = by_col.get(ci, [])
+            col = self.schema.columns[ci]
+            n = sum(d.n_elements for d in ds)
+            nb = col.itemsize
+            per = ds[0].n_elements if ds else 0
+            uniform = bool(ds) and all(
+                d.n_elements == per for d in ds[:-1]
+            ) and ds[-1].n_elements <= per
+            ok_bytes = all(
+                d.uncompressed_size == d.n_elements * nb for d in ds
+            )
+            route = None
+            if n and uniform and ok_bytes:
+                enc = col.encoding
+                if enc == "none" and nb < 8:
+                    route = "none"
+                elif enc == "split" and nb < 8:
+                    route = "split"
+                elif enc == "dzs" and col.kind == KIND_OFFSET:
+                    kids = [
+                        k for k, p in enumerate(self.schema.parent) if p == ci
+                    ]
+                    if kids and int(cm.n_elements[kids[0]]) < 2**31:
+                        route = "offsets"
+            if route is None:
+                fallback.append(ci)
+                continue
+            plans.append({"ci": ci, "descs": ds, "per": per, "n": n,
+                          "nb": nb, "base": base, "route": route})
+            base += n * nb
+        return plans, fallback, base
+
+    def _stage_cluster_device(self, cluster_index: int,
+                              columns: Optional[Sequence[int]]):
+        """The HOST half of the device decode: pread + entropy-decode the
+        cluster's device-eligible pages into ONE pooled staging buffer
+        (page ``p`` of a column at byte range ``[p*per*nb, p*per*nb +
+        k*nb)``), then run the single H2D upload.  Returns ``(plans,
+        device_bytes, fallback_columns, staging)``.
+        ``iter_clusters_device`` runs this on the prefetch pool so
+        cluster *N+1*'s I/O, decompression and upload overlap cluster
+        *N*'s device decode.
+
+        The staging buffer rides along in the return value because the
+        caller must recycle it only AFTER the device half: on CPU
+        backends ``jax.device_put`` zero-copies a 64-byte-aligned host
+        buffer, so ``dev`` may alias ``staging`` — recycling it here
+        would let the next cluster's fill clobber this cluster's device
+        bytes mid-decode.
+        """
+        import jax
+
+        targets = (list(columns) if columns is not None
+                   else list(range(self.schema.n_columns)))
+        plans, fallback, total = self._plan_device_cluster(
+            cluster_index, targets
+        )
+        if not plans:
+            return [], None, fallback, None
+        descs = [d for p in plans for d in p["descs"]]
+        slot = {}  # id(desc) -> staging byte offset of the page's payload
+        for p in plans:
+            stride = p["per"] * p["nb"]
+            for k, d in enumerate(p["descs"]):
+                slot[id(d)] = p["base"] + k * stride
+
+        if self._bufpool is not None:
+            staging = self._bufpool.take(total)
+        else:
+            staging = np.empty(total, dtype=np.uint8)
+
+        # Fast path: a codec-none column whose pages sit contiguously in
+        # the file already IS in sealed staging layout — pread straight
+        # into its staging slot, skipping the bounce buffer and the
+        # memcpy pass entirely.
+        direct, rest = [], []
+        for p in plans:
+            ds = p["descs"]
+            stride = p["per"] * p["nb"]
+            if ds and all(d.codec == comp.CODEC_NONE
+                          and d.offset == ds[0].offset + k * stride
+                          for k, d in enumerate(ds)):
+                direct.append(p)
+            else:
+                rest.extend(p["descs"])
+
+        smv = memoryview(staging)
+        t0 = _ns()
+        for p in direct:
+            nbytes = sum(d.size for d in p["descs"])
+            self.sink.pread_into(
+                p["descs"][0].offset, smv[p["base"] : p["base"] + nbytes]
+            )
+        ranges = self._coalesce(rest)
+        bufs = [self.sink.pread(start, end - start) for start, end, _ in ranges]
+        io_ns = _ns() - t0
+        if self.verify:
+            for p in direct:
+                for d in p["descs"]:
+                    s = slot[id(d)]
+                    if d.checksum and zlib.crc32(smv[s : s + d.size]) != d.checksum:
+                        raise IOError(
+                            "page checksum mismatch (column "
+                            f"{self.schema.columns[d.column].path!r})"
+                        )
+        jobs = []
+        for (start, _end, group), buf in zip(ranges, bufs):
+            mv = memoryview(buf)
+            for d in group:
+                rel = d.offset - start
+                jobs.append((d, mv[rel : rel + d.size]))
+
+        def _fill(chunk):
+            ns = 0
+            per_codec: Dict[int, List[int]] = {}
+            for d, payload in chunk:
+                if self.verify and d.checksum and zlib.crc32(payload) != d.checksum:
+                    raise IOError(
+                        "page checksum mismatch (column "
+                        f"{self.schema.columns[d.column].path!r})"
+                    )
+                s = slot[id(d)]
+                t0 = _ns()
+                if d.codec == comp.CODEC_NONE:
+                    staging[s : s + d.size] = payload
+                else:
+                    staging[s : s + d.uncompressed_size] = np.frombuffer(
+                        comp.decompress(payload, d.codec, d.uncompressed_size),
+                        dtype=np.uint8,
+                    )
+                dt = _ns() - t0
+                ns += dt
+                st = per_codec.setdefault(d.codec, [0, 0, 0, 0])
+                st[0] += 1
+                st[1] += d.size
+                st[2] += d.uncompressed_size
+                st[3] += dt
+            return ns, per_codec
+
+        pool = self._get_decode_pool()
+        if not jobs:
+            results = []
+        elif pool is None:
+            results = [_fill(jobs)]
+        else:
+            k = max(1, len(jobs) // (2 * self.read_options.decode_workers))
+            chunks = [jobs[i : i + k] for i in range(0, len(jobs), k)]
+            results = list(pool.map(_fill, chunks))
+        per_codec: Dict[int, List[int]] = {}
+        deco_ns = 0
+        for ns, pc in results:
+            deco_ns += ns
+            _merge_codec_stats(per_codec, pc)
+        if direct:  # direct preads bypass _fill; account their pages
+            st = per_codec.setdefault(comp.CODEC_NONE, [0, 0, 0, 0])
+            for p in direct:
+                for d in p["descs"]:
+                    st[0] += 1
+                    st[1] += d.size
+                    st[2] += d.uncompressed_size
+
+        t0 = _ns()
+        dev = jax.device_put(staging[:total])
+        dev.block_until_ready()
+        h2d_ns = _ns() - t0
+        self.stats.add_cluster_read(
+            pages=len(descs),
+            reads=len(ranges) + len(direct),
+            compressed_bytes=sum(d.size for d in descs),
+            uncompressed_bytes=sum(d.uncompressed_size for d in descs),
+            io_ns=io_ns,
+            decompress_ns=deco_ns,
+            decode_ns=0,
+            per_codec=per_codec,
+        )
+        self.stats.add_device_cluster(h2d_ns)
+        return plans, dev, fallback, staging
+
+    def _decode_staged(self, plans: List[Dict], dev) -> Dict[int, object]:
+        """The DEVICE half: run the fused per-column decode drivers over
+        the uploaded staging bytes -> ``{column: jax device array}``."""
+        from repro.kernels import decode_pages as dk
+
+        use_pallas, interpret = self._device_backend()
+        out: Dict[int, object] = {}
+        t0 = _ns()
+        for p in plans:
+            raw = dev[p["base"] : p["base"] + p["n"] * p["nb"]]
+            if p["route"] == "offsets":
+                out[p["ci"]] = dk.device_decode_offsets(
+                    raw, p["n"], p["per"],
+                    use_pallas=use_pallas, interpret=interpret,
+                )
+            elif p["route"] == "split":
+                out[p["ci"]] = dk.device_decode_split(
+                    raw, p["n"], p["per"],
+                    self.schema.columns[p["ci"]].dtype.name,
+                    use_pallas=use_pallas, interpret=interpret,
+                )
+            else:
+                out[p["ci"]] = dk.device_decode_none(
+                    raw, p["n"], p["per"],
+                    self.schema.columns[p["ci"]].dtype.name,
+                    use_pallas=use_pallas, interpret=interpret,
+                )
+        for arr in out.values():
+            arr.block_until_ready()
+        self.stats.add_decode_ns(_ns() - t0)
+        return out
+
+    def read_cluster_device(
+        self, cluster_index: int, columns: Optional[Sequence[int]] = None
+    ) -> Dict[int, object]:
+        """Read a cluster through the fused device decode chain (§9).
+
+        Device-eligible columns come back as JAX device arrays — offset
+        columns as EXACT int32 cluster-relative ends (the dispatch guard
+        proves every offset fits) — after ONE H2D upload of the stored
+        page bytes.  Columns the plan gates out (8-byte leaves, oversize
+        clusters, non-uniform pages) decode through the host path
+        unchanged and come back as numpy arrays.
+        """
+        if self.read_options.device_decode == "off":
+            raise RuntimeError(
+                "device decode disabled (ReadOptions.device_decode='off')"
+            )
+        return self._finish_staged(
+            self._stage_cluster_device(cluster_index, columns), cluster_index
+        )
+
+    def _finish_staged(self, staged, cluster_index: int) -> Dict[int, object]:
+        """Device half + host fallbacks for one staged cluster, then
+        recycle the staging buffer (safe only now — ``dev`` may alias
+        it, see :meth:`_stage_cluster_device`)."""
+        plans, dev, fallback, staging = staged
+        out = self._decode_staged(plans, dev) if plans else {}
+        if staging is not None and self._bufpool is not None:
+            # the decode outputs are materialized (block_until_ready in
+            # _decode_staged), so nothing references the staged bytes
+            self._bufpool.put(staging)
+        if fallback:
+            out.update(self.read_cluster(cluster_index, fallback))
+        return out
+
+    def iter_clusters_device(
+        self,
+        columns: Optional[Sequence[int]] = None,
+        start: int = 0,
+        stop: Optional[int] = None,
+    ) -> Iterator[Tuple[int, Dict[int, object]]]:
+        """Device-path analog of :meth:`iter_clusters` (DESIGN.md §9).
+
+        With ``prefetch_clusters > 0`` the prefetch pool runs the HOST
+        half of cluster *N+1* (pread, entropy decode into pooled staging,
+        H2D upload) while the consumer's thread runs the DEVICE half of
+        cluster *N* — double-buffered read/decode overlap with the device
+        in the loop.  Yields ``(cluster_index, {column: array})`` with
+        the same array types as :meth:`read_cluster_device`.
+        """
+        if self.read_options.device_decode == "off":
+            raise RuntimeError(
+                "device decode disabled (ReadOptions.device_decode='off')"
+            )
+        n = self.n_clusters
+        if stop is None or stop > n:
+            stop = n
+        depth = self.read_options.prefetch_clusters
+        pool = self._get_prefetch_pool() if depth > 0 else None
+        if pool is None:
+            for i in range(start, stop):
+                yield i, self._finish_staged(
+                    self._stage_cluster_device(i, columns), i
+                )
+            return
+        pending: deque = deque()
+        nxt = start
+        try:
+            while pending or nxt < stop:
+                while nxt < stop and len(pending) < depth:
+                    pending.append(
+                        (nxt, pool.submit(self._stage_cluster_device, nxt, columns))
+                    )
+                    nxt += 1
+                i, fut = pending.popleft()
+                t0 = _ns()
+                staged = fut.result()
+                self.stats.add_wait_ns(_ns() - t0)
+                # top up BEFORE the device half + yield: the next
+                # cluster's host half makes progress while this one
+                # decodes on device and the consumer packs it
+                while nxt < stop and len(pending) < depth:
+                    pending.append(
+                        (nxt, pool.submit(self._stage_cluster_device, nxt, columns))
+                    )
+                    nxt += 1
+                yield i, self._finish_staged(staged, i)
+        finally:
+            for _, fut in pending:
+                fut.cancel()
 
     # -- the prefetch pipeline -----------------------------------------------
 

@@ -350,6 +350,8 @@ class ReaderStats:
     decompress_ns: int = 0    # summed per-page entropy decode
     decode_ns: int = 0        # summed per-page unprecondition/integration
     wait_ns: int = 0          # consumer blocked on the prefetch pipeline
+    h2d_ns: int = 0           # staging upload (host->device transfer, §9)
+    device_clusters: int = 0  # clusters decoded through the device chain
     pool_hits: int = 0        # reader buffer-pool takes served from a class
     pool_misses: int = 0      # reader buffer-pool takes that allocated
     pool_returns: int = 0
@@ -389,6 +391,15 @@ class ReaderStats:
         with self._mu:
             self.wait_ns += ns
 
+    def add_device_cluster(self, h2d_ns: int) -> None:
+        with self._mu:
+            self.device_clusters += 1
+            self.h2d_ns += h2d_ns
+
+    def add_decode_ns(self, ns: int) -> None:
+        with self._mu:
+            self.decode_ns += ns
+
     def merge_io(self, snapshot: IOStats) -> None:
         with self._mu:
             self.io.merge(snapshot)
@@ -409,6 +420,7 @@ class ReaderStats:
             "decompress": self.decompress_ns / 1e6,
             "decode": self.decode_ns / 1e6,
             "wait": self.wait_ns / 1e6,
+            "h2d": self.h2d_ns / 1e6,
         }
 
     def as_dict(self) -> dict:
@@ -422,6 +434,8 @@ class ReaderStats:
             "decompress_ms": self.decompress_ns / 1e6,
             "decode_ms": self.decode_ns / 1e6,
             "wait_ms": self.wait_ns / 1e6,
+            "h2d_ms": self.h2d_ns / 1e6,
+            "device_clusters": self.device_clusters,
             "pool_hits": self.pool_hits,
             "pool_misses": self.pool_misses,
             "pool_returns": self.pool_returns,

@@ -6,26 +6,136 @@ container, tests) they run through ``interpret=True`` or fall back to the
 
 ``use_pallas``: None = auto (pallas on TPU, ref elsewhere), True = force
 pallas (interpret on CPU), False = force ref.
+
+This module also owns :class:`KernelDispatch` — the ONE auto/numpy/pallas
+backend selector shared by every host-facing encode/decode kernel
+(offsets scan, byteshuffle, the device decode chain).  The module itself
+stays import-light: jax and the kernel implementations load lazily inside
+the wrappers, so ``from repro.kernels.ops import KernelDispatch`` costs
+nothing on the write/read hot paths that only need the dispatch logic.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import os
+import sys
+from typing import Callable, Optional
 
-import jax
+# ---------------------------------------------------------------------------
+# host-side backend dispatch (shared by core/encoding.py and the reader's
+# device decode path)
 
-from . import ref
-from .byteshuffle import byteshuffle as _byteshuffle
-from .decode_attention import decode_attention as _decode_attention
-from .delta_zigzag import delta_zigzag as _delta_zigzag
-from .flash_attention import flash_attention as _flash_attention
-from .mamba2_ssd import mamba2_ssd as _mamba2_ssd
-from .offsets_scan import offsets_scan as _offsets_scan
-from .rwkv6_scan import rwkv6_scan as _rwkv6_scan
+#: the global default backend for every dispatched kernel; per-kernel
+#: ``REPRO_<NAME>_BACKEND`` variables override it (DESIGN.md §7.4)
+GLOBAL_BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+
+
+class KernelDispatch:
+    """auto / numpy / pallas backend selection for one kernel family.
+
+    Consolidates what used to be a per-kernel copy of the same logic in
+    ``core/encoding.py`` (ISSUE 7 satellite): environment resolution,
+    the "auto never pays a cold jax import on the hot path" rule, the
+    size floor below which the host fallback always wins, and the
+    rule-out-once-on-failure cache.
+
+    Resolution order for the backend string:
+
+    1. ``REPRO_<NAME>_BACKEND`` — the per-kernel override;
+    2. ``REPRO_KERNEL_BACKEND`` — the global default for all kernels;
+    3. ``"auto"``.
+
+    ``auto`` selects the Pallas kernel only when jax is *already
+    imported* by the application (never pay a multi-second cold import
+    inside a seal or decode path) AND the default backend is an
+    accelerator; ``pallas`` forces the kernel (interpret mode on CPU —
+    the bit-identity test configuration); ``numpy`` pins the host
+    fallback.  The size floor ``REPRO_<NAME>_PALLAS_MIN`` (units chosen
+    by the call site: elements or bytes) only gates ``auto``.
+
+    The instance is mutable on purpose: tests monkeypatch ``backend``
+    and reset ``_kernel`` to re-resolve under an override.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        loader: Callable[[], Callable],
+        min_default: int,
+        device_only: bool = True,
+    ) -> None:
+        self.name = name
+        env = f"REPRO_{name.upper()}_BACKEND"
+        self.backend = os.environ.get(
+            env, os.environ.get(GLOBAL_BACKEND_ENV, "auto")
+        ).lower()
+        self.min = int(
+            os.environ.get(f"REPRO_{name.upper()}_PALLAS_MIN", str(min_default))
+        )
+        self._loader = loader
+        self._device_only = device_only
+        self._kernel: Optional[Callable] = None  # None = unresolved; False = out
+
+    def want(self, measure: int) -> bool:
+        """Should this call even consider the kernel? (size gate)"""
+        if self.backend == "pallas":
+            return True
+        return self.backend == "auto" and measure >= self.min
+
+    def resolve(self) -> Optional[Callable]:
+        """The kernel callable, or a falsy value when ruled out.
+
+        In ``auto`` mode a missing jax import stays *unresolved* (returns
+        ``False`` without caching the negative) so a later jax import can
+        still enable the kernel; a CPU-only jax backend rules the kernel
+        out for good (interpret mode exists for correctness tests, not
+        speed).
+        """
+        if self._kernel is None:
+            if self.backend != "pallas" and "jax" not in sys.modules:
+                return False
+            try:
+                import jax
+
+                kernel = self._loader()
+                if (
+                    self._device_only
+                    and self.backend != "pallas"
+                    and jax.default_backend() == "cpu"
+                ):
+                    self._kernel = False
+                else:
+                    self._kernel = kernel
+            except Exception:
+                self._kernel = False
+        return self._kernel
+
+    def disable(self) -> None:
+        """Rule the kernel out after a runtime failure (fallback stays)."""
+        self._kernel = False
+
+
+def _on_accelerator() -> bool:
+    """True when jax is already imported AND its default backend is an
+    accelerator — the ``auto`` rule every dispatcher shares."""
+    if "jax" not in sys.modules:
+        return False
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+# ---------------------------------------------------------------------------
+# model-kernel entry points (jax imported lazily per call)
 
 
 def _on_tpu() -> bool:
     try:
+        import jax
+
         return jax.default_backend() == "tpu"
     except Exception:  # pragma: no cover
         return False
@@ -41,22 +151,58 @@ def _resolve(use_pallas: Optional[bool]):
 def offsets_scan(lengths, use_pallas: Optional[bool] = None, **kw):
     run, interp = _resolve(use_pallas)
     if run:
-        return _offsets_scan(lengths, interpret=interp, **kw)
+        from .offsets_scan import offsets_scan as k
+
+        return k(lengths, interpret=interp, **kw)
+    from . import ref
+
     return ref.offsets_scan_ref(lengths)
 
 
 def delta_zigzag(x, use_pallas: Optional[bool] = None, **kw):
     run, interp = _resolve(use_pallas)
     if run:
-        return _delta_zigzag(x, interpret=interp, **kw)
+        from .delta_zigzag import delta_zigzag as k
+
+        return k(x, interpret=interp, **kw)
+    from . import ref
+
     return ref.delta_zigzag_ref(x)
 
 
 def byteshuffle(planes, use_pallas: Optional[bool] = None, **kw):
     run, interp = _resolve(use_pallas)
     if run:
-        return _byteshuffle(planes, interpret=interp, **kw)
+        from .byteshuffle import byteshuffle as k
+
+        return k(planes, interpret=interp, **kw)
+    from . import ref
+
     return ref.byteshuffle_ref(planes)
+
+
+def unsplit_pages(planes, use_pallas: Optional[bool] = None, **kw):
+    """Inverse page-batched byteshuffle: (P, itemsize, per) -> (P, per, itemsize)."""
+    run, interp = _resolve(use_pallas)
+    if run:
+        from .decode_pages import unsplit_pages as k
+
+        return k(planes, interpret=interp, **kw)
+    from . import ref
+
+    return ref.unsplit_pages_ref(planes)
+
+
+def decode_offset_pages(planes, use_pallas: Optional[bool] = None, **kw):
+    """Fused offset-column decode: split u64 zigzag deltas -> int32 offsets."""
+    run, interp = _resolve(use_pallas)
+    if run:
+        from .decode_pages import decode_offset_pages as k
+
+        return k(planes, interpret=interp, **kw)
+    from . import ref
+
+    return ref.decode_offset_pages_ref(planes)
 
 
 def flash_attention(q, k, v, causal=True, window=None, scale=None,
@@ -65,8 +211,12 @@ def flash_attention(q, k, v, causal=True, window=None, scale=None,
     "chunked" (online-softmax scan over kv blocks — the §Perf variant)."""
     run, interp = _resolve(use_pallas)
     if run:
-        return _flash_attention(q, k, v, causal=causal, window=window,
-                                scale=scale, interpret=interp, **kw)
+        from .flash_attention import flash_attention as kern
+
+        return kern(q, k, v, causal=causal, window=window,
+                    scale=scale, interpret=interp, **kw)
+    from . import ref
+
     if impl == "chunked":
         return ref.flash_attention_chunked(q, k, v, causal=causal,
                                            window=window, scale=scale)
@@ -78,8 +228,12 @@ def decode_attention(q, k, v, length=None, window=None, scale=None,
                      use_pallas: Optional[bool] = None, **kw):
     run, interp = _resolve(use_pallas)
     if run:
-        return _decode_attention(q, k, v, length=length, window=window,
-                                 scale=scale, interpret=interp, **kw)
+        from .decode_attention import decode_attention as kern
+
+        return kern(q, k, v, length=length, window=window,
+                    scale=scale, interpret=interp, **kw)
+    from . import ref
+
     return ref.decode_attention_ref(q, k, v, length=length, window=window,
                                     scale=scale)
 
@@ -88,7 +242,11 @@ def rwkv6(r, k, v, w, u, use_pallas: Optional[bool] = None, **kw):
     """-> (out (B,H,T,Dv), final_state (B,H,Dk,Dv))."""
     run, interp = _resolve(use_pallas)
     if run:
-        return _rwkv6_scan(r, k, v, w, u, interpret=interp, **kw)
+        from .rwkv6_scan import rwkv6_scan as kern
+
+        return kern(r, k, v, w, u, interpret=interp, **kw)
+    from . import ref
+
     return ref.rwkv6_ref(r, k, v, w, u)
 
 
@@ -96,6 +254,12 @@ def mamba2(x, log_a, Bm, Cm, use_pallas: Optional[bool] = None, **kw):
     """-> (out (B,H,T,P) without D-skip, final_state (B,H,N,P))."""
     run, interp = _resolve(use_pallas)
     if run:
-        return _mamba2_ssd(x, log_a, Bm, Cm, interpret=interp, **kw)
+        from .mamba2_ssd import mamba2_ssd as kern
+
+        return kern(x, log_a, Bm, Cm, interpret=interp, **kw)
+    import jax
+
+    from . import ref
+
     D0 = jax.numpy.zeros((x.shape[1],), x.dtype)
     return ref.mamba2_ref(x, log_a, Bm, Cm, D0)

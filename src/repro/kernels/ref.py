@@ -36,6 +36,32 @@ def delta_zigzag_ref(x: jax.Array) -> jax.Array:
     )
 
 
+# -- the decode chain (read-side inverses, DESIGN.md §9) --------------------
+
+
+def unsplit_pages_ref(planes: jax.Array) -> jax.Array:
+    """Inverse page-batched byteshuffle: (P, itemsize, per) -> (P, per, itemsize)."""
+    return jnp.swapaxes(planes, 1, 2)
+
+
+def unzigzag_ref(z: jax.Array) -> jax.Array:
+    """zigzag inverse on uint32 lanes -> int32: (z >> 1) ^ -(z & 1)."""
+    z = z.astype(jnp.uint32)
+    return (z >> 1).astype(jnp.int32) ^ -(z & 1).astype(jnp.int32)
+
+
+def decode_offset_pages_ref(planes: jax.Array) -> jax.Array:
+    """Fused offset-column decode oracle, (P, 8, per) uint8 -> (P, per) int32.
+
+    Byte planes of the stored uint64 zigzag deltas (low 32 bits only —
+    the dispatcher guards that offsets fit) -> zigzag inverse -> per-page
+    inclusive scan (per-page delta restart: each page integrates from 0).
+    """
+    p = planes.astype(jnp.uint32)
+    z = p[:, 0] | (p[:, 1] << 8) | (p[:, 2] << 16) | (p[:, 3] << 24)
+    return jnp.cumsum(unzigzag_ref(z), axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Attention
 

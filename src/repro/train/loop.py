@@ -94,17 +94,15 @@ class TrainLoop:
     # -- checkpoint integration ------------------------------------------------
 
     def _state_tree(self) -> Dict:
+        ld = self.loader.state()  # device engine syncs its leftover here
         return {
             "params": self.params,
             "opt": {"step": self.opt_state.step, "m": self.opt_state.m,
                     "v": self.opt_state.v},
             "err": self.err_state,
             "loader": {
-                "entry_cursor": np.asarray(self.loader.entry_cursor),
-                "leftover": np.pad(
-                    self.loader.leftover,
-                    (0, 0),
-                ) if len(self.loader.leftover) else np.zeros(0, np.int32),
+                "entry_cursor": np.asarray(ld["entry_cursor"]),
+                "leftover": np.asarray(ld["leftover"], np.int32),
             },
         }
 
@@ -125,8 +123,10 @@ class TrainLoop:
         o = tree["opt"]
         self.opt_state = AdamWState(o["step"], o["m"], o["v"])
         self.err_state = tree["err"]
-        self.loader.entry_cursor = int(np.asarray(tree["loader"]["entry_cursor"]))
-        self.loader.leftover = np.asarray(tree["loader"]["leftover"], np.int32)
+        self.loader.load_state({
+            "entry_cursor": int(np.asarray(tree["loader"]["entry_cursor"])),
+            "leftover": np.asarray(tree["loader"]["leftover"], np.int32),
+        })
         self.step = int(meta["train_step"])
 
     # -- run ----------------------------------------------------------------

@@ -1,0 +1,193 @@
+"""Device decode chain (DESIGN.md §9): bit-identity vs the host path.
+
+The fused Pallas decode kernels (``kernels/decode_pages.py``) and the
+reader's device path (``read_cluster_device`` / ``iter_clusters_device``)
+must reproduce the numpy reference decode
+(``encoding.unprecondition_pages_into`` driving ``read_cluster``)
+bit-for-bit — offset columns after int32 -> int64 widening, everything
+else exactly.  Runs on CPU: ``pallas`` mode exercises the kernels in
+interpret mode, ``auto`` the XLA-compiled jnp oracle ops.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+jnp = jax.numpy
+
+from repro.core import (
+    Collection, ColumnBatch, Leaf, RNTJReader, ReadOptions, Schema,
+    SequentialWriter, WriteOptions,
+)
+from repro.core.encoding import precondition_column_pages, unprecondition_pages_into
+from repro.kernels import ref
+from repro.kernels.decode_pages import (
+    decode_offset_pages, device_decode_none, device_decode_offsets,
+    device_decode_split, unsplit_pages,
+)
+
+MODES = ["auto", "pallas"]
+
+
+# ---------------------------------------------------------------------------
+# kernel-level identity (pallas interpret vs jnp oracle vs numpy)
+
+
+def test_unsplit_pages_matches_numpy():
+    rng = np.random.default_rng(0)
+    planes = rng.integers(0, 256, (5, 4, 1000), dtype=np.uint8)
+    want = np.swapaxes(planes, 1, 2)
+    got_pal = np.asarray(unsplit_pages(jnp.asarray(planes), interpret=True))
+    got_ref = np.asarray(ref.unsplit_pages_ref(jnp.asarray(planes)))
+    np.testing.assert_array_equal(got_pal, want)
+    np.testing.assert_array_equal(got_ref, want)
+
+
+def test_decode_offset_pages_matches_numpy():
+    """Per-page delta restart: each page integrates independently."""
+    rng = np.random.default_rng(1)
+    n_pages, per = 4, 2048
+    sizes = rng.poisson(7, n_pages * per).reshape(n_pages, per).astype(np.int64)
+    ends = np.cumsum(sizes, axis=1)  # per-page end offsets (the ground truth)
+    deltas = np.diff(np.concatenate([np.zeros((n_pages, 1), np.int64), ends], axis=1))
+    zz = ((deltas << 1) ^ (deltas >> 63)).astype(np.uint64)
+    planes = zz[:, None, :].view(np.uint8).reshape(n_pages, per, 8)
+    planes = np.ascontiguousarray(np.swapaxes(planes, 1, 2))  # (P, 8, per)
+    got_pal = np.asarray(decode_offset_pages(jnp.asarray(planes), interpret=True))
+    got_ref = np.asarray(ref.decode_offset_pages_ref(jnp.asarray(planes)))
+    np.testing.assert_array_equal(got_pal.astype(np.int64), ends)
+    np.testing.assert_array_equal(got_ref.astype(np.int64), ends)
+
+
+@pytest.mark.parametrize("dtype", ["int32", "uint16", "float32"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_device_decode_split_vs_host_reference(dtype, use_pallas):
+    """Full driver (whole pages + partial tail) vs unprecondition_pages_into."""
+    rng = np.random.default_rng(2)
+    n, per = 10_000, 4096  # 2 full pages + a partial tail page
+    dt = np.dtype(dtype)
+    arr = rng.integers(0, 1 << 15, n).astype(dt)
+    raw = precondition_column_pages(arr, "split", per)
+    want = np.empty(n, dt)
+    unprecondition_pages_into(raw, "split", per, want)
+    got = np.asarray(device_decode_split(
+        jnp.asarray(np.asarray(raw, np.uint8)), n, per, dtype,
+        use_pallas=use_pallas, interpret=use_pallas,
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_device_decode_offsets_vs_host_reference(use_pallas):
+    rng = np.random.default_rng(3)
+    n, per = 9_000, 4096
+    sizes = rng.poisson(6, n)
+    ends = np.cumsum(sizes).astype(np.int64)
+    raw = precondition_column_pages(ends, "dzs", per)
+    want = np.empty(n, np.int64)
+    unprecondition_pages_into(raw, "dzs", per, want)
+    got = np.asarray(device_decode_offsets(
+        jnp.asarray(np.asarray(raw, np.uint8)), n, per,
+        use_pallas=use_pallas, interpret=use_pallas,
+    ))
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+def test_device_decode_none_bitcast():
+    rng = np.random.default_rng(4)
+    arr = rng.uniform(-1, 1, 5000).astype(np.float32)
+    got = np.asarray(device_decode_none(
+        jnp.asarray(arr.view(np.uint8)), 5000, 4096, "float32"))
+    np.testing.assert_array_equal(got, arr)
+
+
+# ---------------------------------------------------------------------------
+# reader-level identity
+
+
+def _write_mixed(tmp_path, codec="zlib", n=25_000):
+    schema = Schema([
+        Leaf("id", "int64"),                          # 8-byte: host fallback
+        Leaf("x", "float32"),
+        Collection("v", Leaf("_0", "int32")),
+        Collection("f", Leaf("_0", "uint8")),         # enc "none" values
+    ])
+    rng = np.random.default_rng(5)
+    sv = rng.poisson(4, n).astype(np.int64)
+    sf = rng.poisson(2, n).astype(np.int64)
+    x = rng.uniform(0, 1, n).astype(np.float32)
+    vv = rng.integers(0, 1 << 20, int(sv.sum())).astype(np.int32)
+    fv = rng.integers(0, 256, int(sf.sum())).astype(np.uint8)
+    ev, ef = np.cumsum(sv), np.cumsum(sf)
+    path = str(tmp_path / f"mix_{codec}.rntj")
+    # fill in slices so the writer seals several clusters
+    with SequentialWriter(schema, path, WriteOptions(
+            codec=codec, cluster_bytes=128 * 1024, page_size=16 * 1024)) as w:
+        for s in range(0, n, 3000):
+            e = min(s + 3000, n)
+            w.fill_batch(ColumnBatch.from_arrays(schema, e - s, {
+                "id": np.arange(s, e, dtype=np.int64),
+                "x": x[s:e],
+                "v": sv[s:e], "v._0": vv[(0 if not s else ev[s-1]):ev[e-1]],
+                "f": sf[s:e], "f._0": fv[(0 if not s else ef[s-1]):ef[e-1]],
+            }))
+    return path
+
+
+def _assert_cols_equal(dev_cols, host_cols, schema):
+    assert set(dev_cols) == set(host_cols)
+    for ci, a in dev_cols.items():
+        ref_arr = host_cols[ci]
+        a = np.asarray(a)
+        if a.dtype != ref_arr.dtype:  # int32 device offsets widen exactly
+            np.testing.assert_array_equal(a.astype(ref_arr.dtype), ref_arr)
+        else:
+            np.testing.assert_array_equal(a, ref_arr)
+
+
+@pytest.mark.parametrize("codec", ["none", "zlib"])
+@pytest.mark.parametrize("mode", MODES)
+def test_read_cluster_device_bit_identical(tmp_path, codec, mode):
+    path = _write_mixed(tmp_path, codec)
+    with RNTJReader(path) as r:
+        host = [r.read_cluster(i) for i in range(r.n_clusters)]
+        assert r.n_clusters >= 2
+    with RNTJReader(path, options=ReadOptions(device_decode=mode)) as r:
+        for i in range(r.n_clusters):
+            cols = r.read_cluster_device(i)
+            _assert_cols_equal(cols, host[i], r.schema)
+            # the 8-byte leaf decoded through the host fallback
+            assert isinstance(cols[r.schema.column_of_path["id"]], np.ndarray)
+        assert r.stats.device_clusters == r.n_clusters
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_iter_clusters_device_overlap_identity(tmp_path, mode):
+    """Prefetch overlap must not corrupt earlier clusters: the staging
+    buffer may be ALIASED by the device bytes (zero-copy device_put), so
+    it recycles only after the device half — regression test for the
+    clobber race."""
+    path = _write_mixed(tmp_path, "zlib")
+    with RNTJReader(path) as r:
+        host = [r.read_cluster(i) for i in range(r.n_clusters)]
+    for _trial in range(3):
+        with RNTJReader(path, options=ReadOptions(
+                device_decode=mode, prefetch_clusters=2,
+                decode_workers=2)) as r:
+            seen = []
+            for i, cols in r.iter_clusters_device():
+                seen.append(i)
+                _assert_cols_equal(cols, host[i], r.schema)
+            assert seen == list(range(r.n_clusters))
+            assert r.stats.h2d_ns >= 0 and r.stats.device_clusters == r.n_clusters
+
+
+def test_device_decode_off_raises(tmp_path):
+    path = _write_mixed(tmp_path, "none", n=2_000)
+    with RNTJReader(path, options=ReadOptions(device_decode="off")) as r:
+        with pytest.raises(RuntimeError):
+            r.read_cluster_device(0)
+        with pytest.raises(RuntimeError):
+            next(r.iter_clusters_device())
+        # the host path never consults the knob
+        r.read_cluster(0)

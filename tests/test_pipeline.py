@@ -71,3 +71,84 @@ def test_loader_epoch_wrap(tmp_path):
     for _ in range(10):  # far more tokens than one epoch holds
         b = next(it)
         assert b["tokens"].shape == (2, 64)
+
+
+# ---------------------------------------------------------------------------
+# host/device engine equivalence + exact resumability (ISSUE 7 satellite)
+
+
+def _corpus_file(tmp_path, n_docs=400, cluster_bytes=64 * 1024):
+    from repro.core.writer import WriteOptions
+    p = str(tmp_path / "eq.rntj")
+    ingest_corpus(synth_corpus(n_docs, seed=9, mean_len=60), p, n_workers=2,
+                  options=WriteOptions(codec="zlib", level=1,
+                                       cluster_bytes=cluster_bytes))
+    return p
+
+
+def _np(b):
+    return {k: np.asarray(v) for k, v in b.items()}
+
+
+def test_loader_device_stream_byte_identical(tmp_path):
+    """The device engine emits the exact host token stream, epoch wraps
+    included (the file holds several clusters; 160 batches wrap it)."""
+    pytest.importorskip("jax")
+    p = _corpus_file(tmp_path)
+    lh = PackedLoader(p, batch=4, seq_len=96, device="host")
+    ld = PackedLoader(p, batch=4, seq_len=96, device="device")
+    assert ld.reader.n_clusters >= 2
+    gh, gd = lh.batches(), ld.batches()
+    for k in range(160):
+        bh, bd = _np(next(gh)), _np(next(gd))
+        np.testing.assert_array_equal(bd["tokens"], bh["tokens"], err_msg=str(k))
+        np.testing.assert_array_equal(bd["labels"], bh["labels"], err_msg=str(k))
+    lh.close(), ld.close()
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+@pytest.mark.parametrize("n_warm", [3, 11])
+def test_loader_exact_resume_mid_stream(tmp_path, engine, n_warm):
+    """Save/restore at arbitrary batch boundaries — both mid-cluster
+    (small n_warm: the cursor sits inside cluster 0's documents) and
+    mid-leftover (larger n_warm: tokens already pulled but unemitted) —
+    continues the byte-identical stream on EITHER engine."""
+    if engine == "device":
+        pytest.importorskip("jax")
+    p = _corpus_file(tmp_path)
+    ld = PackedLoader(p, batch=4, seq_len=64, device=engine)
+    it = ld.batches()
+    for _ in range(n_warm):
+        next(it)
+    state = ld.state()
+    assert isinstance(state["leftover"], np.ndarray)  # host-typed state
+    cont = [_np(next(it)) for _ in range(20)]  # the ground-truth continuation
+    ld.close()
+    for resume_engine in ("host", "device"):
+        l2 = PackedLoader(p, batch=4, seq_len=64, state=state,
+                          device=resume_engine)
+        g2 = l2.batches()
+        for k, want in enumerate(cont):
+            got = _np(next(g2))
+            np.testing.assert_array_equal(got["tokens"], want["tokens"],
+                                          err_msg=f"{resume_engine}:{k}")
+            np.testing.assert_array_equal(got["labels"], want["labels"],
+                                          err_msg=f"{resume_engine}:{k}")
+        l2.close()
+
+
+def test_loader_state_roundtrips_through_load_state(tmp_path):
+    """state() -> load_state() is the checkpoint contract: the restored
+    loader's next batch equals the saved loader's next batch."""
+    p = _corpus_file(tmp_path, n_docs=80)
+    ld = PackedLoader(p, batch=2, seq_len=48, device="host")
+    it = ld.batches()
+    for _ in range(5):
+        next(it)
+    st = ld.state()
+    want = _np(next(it))
+    ld2 = PackedLoader(p, batch=2, seq_len=48, device="host")
+    ld2.load_state(st)
+    got = _np(next(ld2.batches()))
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+    ld.close(), ld2.close()

@@ -283,7 +283,7 @@ def test_reader_stats_phases(tmp_path):
     assert 0 < s.coalesced_reads <= s.pages  # coalescing actually merged
     assert s.decompress_ns > 0 and s.decode_ns > 0
     assert s.uncompressed_bytes >= s.compressed_bytes
-    assert set(s.phases_ms()) == {"io", "decompress", "decode", "wait"}
+    assert set(s.phases_ms()) == {"io", "decompress", "decode", "wait", "h2d"}
     r.close()
     assert s.io.bytes_read >= s.compressed_bytes  # merged on close
 
