@@ -1,0 +1,240 @@
+"""Multi-process shared-file writing benchmark — what the side-car
+extent protocol costs and buys.
+
+Measures, on the paper's synthetic nested-event workload:
+
+ 1. **N-process scaling** — the same total workload written into ONE
+    container file by N forked writer processes through
+    ``MultiWriterCoordinator`` / ``join_container`` (DESIGN.md §8.6),
+    against a plain single-process ``SequentialWriter`` of the same
+    bytes.  Codec zlib level 1, so the work is CPU-bound and extra
+    processes can actually pay off; the shared extent log serializes
+    only reservation/commit records, never the compression.  Gains are
+    bounded by the harness's measured parallel-capacity probe.
+ 2. **recovery time** — ``recover_container`` over multi-writer files
+    that never reached the footer rendezvous: a clean coordinator
+    crash (all writers DONE, no seal) and a degraded one (one writer
+    killed mid-save, lease left dangling).  Scan MB/s plus the
+    side-car replay and fencing attribution on top of it.
+
+Emits ``BENCH_mpwrite.json`` (repo root by default); the field schema
+is documented in ``benchmarks/README.md``.
+
+Run:  PYTHONPATH=src python benchmarks/bench_mpwrite.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import multiprocessing
+import os
+import tempfile
+import time
+
+from _harness import (EVENT_SCHEMA, REPO_ROOT, prebuild,
+                      probe_parallel_capacity)
+
+from repro.core import (  # noqa: E402
+    MultiWriterCoordinator, RNTJReader, SequentialWriter, WriteOptions,
+    join_container, recover_container,
+)
+
+PAGE = 256 * 1024
+CLUSTER = 4 * 1024 * 1024
+
+# fork children inherit the prebuilt workload copy-on-write; passing the
+# batches through a pickle pipe would dwarf the write being measured
+_BATCHES = []
+
+
+def options(codec: str = "zlib", **over) -> WriteOptions:
+    opts = dict(codec=codec, level=1, page_size=PAGE, cluster_bytes=CLUSTER,
+                buffered=True, journal=True, precondition=False)
+    opts.update(over)
+    return WriteOptions(**opts)
+
+
+def _worker(path, idxs, opts, crash_after=None):
+    """Forked writer: join the shared container, write its slice.
+
+    ``crash_after`` kills the process (no DONE, dangling lease) after
+    that many batches have been flushed — the degraded-recovery cell.
+    """
+    w = join_container(path, schema=EVENT_SCHEMA, options=opts)
+    ctx = w.create_fill_context()
+    for n, i in enumerate(idxs, 1):
+        ctx.fill_batch(_BATCHES[i])
+        if crash_after is not None and n >= crash_after:
+            ctx.flush_cluster()
+            os._exit(1)
+    ctx.close()
+    w.close()
+
+
+def _mp_write(path, n_writers, opts, crash_worker=None, crash_after=None,
+              seal=True):
+    """One multi-writer run; returns (wall_s, report_or_None, exitcodes).
+
+    The wall clock covers everything a user pays: coordinator setup,
+    fork + join of the workers, and the footer rendezvous.
+    """
+    slices = [list(range(w, len(_BATCHES), n_writers))
+              for w in range(n_writers)]
+    ctx = multiprocessing.get_context("fork")
+    t0 = time.perf_counter()
+    coord = MultiWriterCoordinator(EVENT_SCHEMA, path, opts)
+    procs = []
+    for w, idxs in enumerate(slices):
+        ca = crash_after if w == crash_worker else None
+        procs.append(ctx.Process(target=_worker,
+                                 args=(path, idxs, opts, ca)))
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    report = None
+    if seal:
+        report = coord.seal(expect_writers=n_writers)
+        coord.close()
+        wall = time.perf_counter() - t0
+    else:
+        # coordinator "crashes": no seal, no footer
+        wall = time.perf_counter() - t0
+        coord.sink.close()
+        coord.log.close()
+    return wall, report, [p.exitcode for p in procs]
+
+
+# ---------------------------------------------------------------------------
+# 1: N-process scaling
+
+
+def run_scaling(nbytes: int, entries: int, ns, repeats: int,
+                out: dict) -> None:
+    print("== N-process scaling (best of %d, zlib level 1) ==" % repeats)
+    opts = options()
+    out["scaling"] = []
+    with tempfile.TemporaryDirectory(prefix="rntj-mpbench-") as tmp:
+        # single-process reference: same bytes, same codec, no protocol
+        seq_walls = []
+        for r in range(repeats):
+            path = os.path.join(tmp, f"seq-{r}.rntj")
+            gc.collect()
+            t0 = time.perf_counter()
+            with SequentialWriter(EVENT_SCHEMA, path, opts) as w:
+                for b in _BATCHES:
+                    w.fill_batch(b)
+            seq_walls.append(time.perf_counter() - t0)
+            os.unlink(path)
+        seq = min(seq_walls)
+        out["seq"] = {"wall_s": round(seq, 4),
+                      "mb_s": round(nbytes / seq / 1e6, 1)}
+        print(f"  seq (SequentialWriter) {out['seq']['mb_s']:8.1f} MB/s")
+
+        for n in ns:
+            walls = []
+            for r in range(repeats):
+                path = os.path.join(tmp, f"mp{n}-{r}.rntj")
+                gc.collect()
+                wall, report, codes = _mp_write(path, n, opts)
+                if any(codes) or report["fenced"] or report["abandoned"]:
+                    raise SystemExit(f"clean {n}-writer run degraded: "
+                                     f"exit={codes} report={report}")
+                if r == 0:  # lossless check once per N, outside timing
+                    rd = RNTJReader(path)
+                    if rd.n_entries != entries:
+                        raise SystemExit(
+                            f"{n}-writer file lost entries: "
+                            f"{rd.n_entries} != {entries}")
+                    rd.close()
+                walls.append(wall)
+                os.unlink(path)
+            best = min(walls)
+            rec = {
+                "writers": n,
+                "wall_s": round(best, 4),
+                "mb_s": round(nbytes / best / 1e6, 1),
+                "speedup_vs_seq": round(seq / best, 2),
+            }
+            out["scaling"].append(rec)
+            print(f"  {n} writer(s)            {rec['mb_s']:8.1f} MB/s  "
+                  f"speedup x{rec['speedup_vs_seq']:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# 2: recovery time on unsealed multi-writer files
+
+
+def run_recovery(nbytes: int, out: dict) -> None:
+    print("== multi-writer recovery time ==")
+    # codec none: the scan is pread + crc32, so MB/s reflects the file
+    # walk plus the side-car replay, not decompression
+    opts = options("none", cluster_bytes=1 << 20, page_size=64 * 1024)
+    half = max(1, len(_BATCHES) // 4)
+    cases = [("unsealed", None, None),
+             ("killed_writer", 1, half)]
+    out["recovery"] = []
+    for name, crash_worker, crash_after in cases:
+        with tempfile.TemporaryDirectory(prefix="rntj-mpbench-") as tmp:
+            path = os.path.join(tmp, "mp.rntj")
+            _, _, codes = _mp_write(path, 2, opts, crash_worker=crash_worker,
+                                    crash_after=crash_after, seal=False)
+            if crash_worker is not None and codes[crash_worker] != 1:
+                raise SystemExit(f"crash worker exited {codes}")
+            fsize = os.path.getsize(path)
+            gc.collect()
+            t0 = time.perf_counter()
+            rep = recover_container(path)
+            wall = time.perf_counter() - t0
+            if rep.multiwriter is None:
+                raise SystemExit("recovery ignored the side-car log")
+            rd = RNTJReader(path)
+            readable = rd.n_entries
+            rd.close()
+            rec = {
+                "case": name,
+                "file_mb": round(fsize / 1e6, 1),
+                "wall_s": round(wall, 4),
+                "mb_s": round(fsize / wall / 1e6, 1),
+                "writers": rep.multiwriter["writers"],
+                "clusters_salvaged": rep.clusters_salvaged,
+                "clusters_dropped": len(rep.clusters_dropped),
+                "entries_readable": readable,
+            }
+            out["recovery"].append(rec)
+            print(f"  {name:14s} {rec['mb_s']:8.1f} MB/s  "
+                  f"({rec['file_mb']} MB, {rec['clusters_salvaged']} "
+                  f"clusters, {readable} entries readable)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--entries", type=int, default=None)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_mpwrite.json"))
+    args = ap.parse_args()
+
+    entries = args.entries or (400_000 if args.quick else 1_200_000)
+    repeats = 3 if args.quick else 5
+    global _BATCHES
+    _BATCHES = prebuild("uniform", entries, 25_000)
+    nbytes = sum(sum(a.nbytes for a in b.data.values()) for b in _BATCHES)
+    print(f"workload: {entries} entries, {nbytes / 1e6:.1f} MB uncompressed")
+
+    cap = probe_parallel_capacity()
+    out = {"entries": entries, "uncompressed_mb": round(nbytes / 1e6, 1),
+           "quick": args.quick, "parallel_capacity": cap}
+    print(f"parallel capacity probe: x{cap:.2f}")
+
+    run_scaling(nbytes, entries, (1, 2, 4), repeats, out)
+    run_recovery(nbytes, out)
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,8 @@ BENCHMARKS = [
     ("bench_codec", "python benchmarks/bench_codec.py", "BENCH_codec.json"),
     ("bench_io", "python benchmarks/bench_io.py", "BENCH_io.json"),
     ("bench_fault", "python benchmarks/bench_fault.py", "BENCH_fault.json"),
+    ("bench_mpwrite", "python benchmarks/bench_mpwrite.py",
+     "BENCH_mpwrite.json"),
     ("bench_pipeline", "python benchmarks/bench_pipeline.py",
      "BENCH_pipeline.json"),
     ("fig2_devnull", "python -m benchmarks.run", "stdout CSV row"),

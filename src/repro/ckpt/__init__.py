@@ -1,8 +1,32 @@
 """Parallel single-file distributed checkpointing (the paper's technique
-applied to training state)."""
+applied to training state).
 
-from .checkpoint import CKPT_SCHEMA, load_checkpoint, save_checkpoint
-from .manager import CheckpointManager
+Exports resolve lazily (PEP 562): ``repro.ckpt._mpworker`` — the
+multiprocessing save worker — must be importable in a *spawn* child
+without dragging in jax, and an eager ``from .checkpoint import ...``
+here would do exactly that.
+"""
 
-__all__ = ["CKPT_SCHEMA", "load_checkpoint", "save_checkpoint",
-           "CheckpointManager"]
+import importlib
+
+_EXPORTS = {
+    "CKPT_SCHEMA": "_mpworker",
+    "run_save_worker": "_mpworker",
+    "load_checkpoint": "checkpoint",
+    "save_checkpoint": "checkpoint",
+    "save_checkpoint_mp": "checkpoint",
+    "CheckpointManager": "manager",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module("." + _EXPORTS[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

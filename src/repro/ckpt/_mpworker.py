@@ -1,0 +1,100 @@
+"""jax-free half of the checkpoint layer: schema, batch packing, and the
+multiprocessing save worker.
+
+This module deliberately imports only ``repro.core`` + numpy so that a
+``multiprocessing`` *spawn* child running :func:`run_save_worker` never
+pays the jax import (seconds per process) — the parent pickles the shard
+payloads, the child only needs the container writer.  ``checkpoint.py``
+re-exports everything here, so the public surface is unchanged.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Collection, ColumnBatch, Leaf, Schema, WriteOptions
+from repro.core.mpwrite import join_container
+
+CKPT_SCHEMA = Schema([
+    Leaf("param_id", "int32"),
+    Leaf("shard_index", "int32"),
+    Collection("shape", Leaf("_0", "int64")),
+    Leaf("row_start", "int64"),
+    Leaf("row_end", "int64"),
+    Collection("data", Leaf("_0", "uint8")),
+])
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:  # bfloat16 etc. live in ml_dtypes
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _entry_batch(entries: List[Dict]) -> ColumnBatch:
+    n = len(entries)
+    by_path = {
+        "param_id": np.array([e["param_id"] for e in entries], np.int32),
+        "shard_index": np.array([e["shard_index"] for e in entries], np.int32),
+        "shape": np.array([len(e["shape"]) for e in entries], np.int64),
+        "shape._0": np.concatenate(
+            [np.asarray(e["shape"], np.int64) for e in entries]
+        ) if entries else np.empty(0, np.int64),
+        "row_start": np.array([e["row_start"] for e in entries], np.int64),
+        "row_end": np.array([e["row_end"] for e in entries], np.int64),
+        "data": np.array([len(e["data"]) for e in entries], np.int64),
+        "data._0": np.concatenate(
+            [np.frombuffer(e["data"], np.uint8) for e in entries]
+        ) if entries else np.empty(0, np.uint8),
+    }
+    return ColumnBatch.from_arrays(CKPT_SCHEMA, n, by_path)
+
+
+def run_save_worker(
+    path: str,
+    shards: List[Dict],
+    flush_bytes: int,
+    options: Optional[WriteOptions] = None,
+    crash_after_units: Optional[int] = None,
+) -> None:
+    """Process entry point: join the shared container and write ``shards``.
+
+    Each shard dict is one checkpoint entry (param_id, shard_index, shape,
+    row_start, row_end, data-bytes).  Entries accumulate into batches of
+    roughly ``flush_bytes`` before handing off to the fill context, which
+    clusters them by ``options.cluster_bytes`` as usual.
+
+    ``crash_after_units`` is the chaos hook: after that many entries the
+    worker force-flushes whatever it has and ``os._exit``\\ s without DONE
+    or close — from the coordinator's side this is indistinguishable from
+    SIGKILL, and everything journaled up to the crash must be salvaged.
+    """
+    w = join_container(path, schema=CKPT_SCHEMA, options=options)
+    try:
+        ctx = w.create_fill_context()
+        batch: List[Dict] = []
+        size = written = 0
+        for e in shards:
+            batch.append(e)
+            size += len(e["data"])
+            written += 1
+            if size >= flush_bytes:
+                ctx.fill_batch(_entry_batch(batch))
+                batch, size = [], 0
+            if crash_after_units is not None and written >= crash_after_units:
+                if batch:
+                    ctx.fill_batch(_entry_batch(batch))
+                ctx.flush_cluster()
+                os._exit(1)  # hard crash: lease left dangling, no DONE
+        if batch:
+            ctx.fill_batch(_entry_batch(batch))
+        ctx.close()
+    finally:
+        if crash_after_units is None:
+            w.close()

@@ -50,9 +50,16 @@ from .recover import (
     recover_container,
     scan_container,
 )
+from .extents import ExtentLog, FencedError, WriterSession
+from .mpwrite import (
+    MultiWriterCoordinator,
+    ParticipantWriter,
+    SharedExtentSink,
+    join_container,
+)
 from . import (
-    bufpool, compression, encoding, faults, ioengine, metadata, pages,
-    cluster, colbuf, recover,
+    bufpool, compression, encoding, extents, faults, ioengine, metadata,
+    mpwrite, pages, cluster, colbuf, recover,
 )
 
 __all__ = [
@@ -66,6 +73,8 @@ __all__ = [
     "BufferPool", "PoolStats", "Recyclable", "IOEngine", "RetryPolicy",
     "FaultInjectingSink", "FaultSpec", "FaultStats", "ProcessKilled",
     "RecoveryError", "RecoveryReport", "recover_container", "scan_container",
-    "bufpool", "compression", "encoding", "faults", "ioengine", "metadata",
-    "pages", "cluster", "colbuf", "recover",
+    "ExtentLog", "FencedError", "WriterSession", "MultiWriterCoordinator",
+    "ParticipantWriter", "SharedExtentSink", "join_container",
+    "bufpool", "compression", "encoding", "extents", "faults", "ioengine",
+    "metadata", "mpwrite", "pages", "cluster", "colbuf", "recover",
 ]

@@ -33,8 +33,13 @@ from .schema import ENC_NONE, Schema
 MAGIC = b"RNTJ"
 # v2 adds the per-cluster recovery envelope + commit journal (DESIGN.md §8).
 # v1 files (no journal) remain fully readable; v2 readers accept both.
+# v3 exists only inside journal records: multi-writer commits stamp each
+# record with (writer_id, epoch) for fencing (DESIGN.md §8.6).  The anchor
+# and envelopes stay at v2 — a sealed multi-writer file is indistinguishable
+# from a single-writer one except for the wider journal records.
 VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+JREC_VERSION_MP = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 ENV_HEADER = 1
 ENV_PAGELIST = 2
@@ -211,12 +216,15 @@ _JREC_HDR = struct.Struct("<4sI")  # magic, payload_len (crc32 trails payload)
 # seq, version, flags, cluster_off, cluster_size, first_entry, n_entries,
 # n_columns, n_pages
 _JREC_FIX = struct.Struct("<IHHQQQQII")
+# v3 (multi-writer): the v2 fields followed by writer_id, epoch
+_JREC_FIX3 = struct.Struct("<IHHQQQQIIII")
 
 
-def journal_record_size(n_columns: int, n_pages: int) -> int:
+def journal_record_size(n_columns: int, n_pages: int, multi: bool = False) -> int:
     """On-disk size of one journal record — known before it is built, so
     the writer can reserve the whole framed extent in one call."""
-    return (_JREC_HDR.size + _JREC_FIX.size + 8 * n_columns
+    fix = _JREC_FIX3.size if multi else _JREC_FIX.size
+    return (_JREC_HDR.size + fix + 8 * n_columns
             + _PAGE_REC.itemsize * n_pages + 4)
 
 
@@ -266,12 +274,23 @@ def finish_journal_record(
     n_entries: int,
     n_columns: int,
     body: bytes,
+    writer_id: Optional[int] = None,
+    epoch: Optional[int] = None,
 ) -> Tuple[bytes, int]:
     """Complete a journal record around a prebuilt body.  Returns the record
-    bytes and the payload CRC (= the envelope's ``desc_crc``)."""
+    bytes and the payload CRC (= the envelope's ``desc_crc``).
+
+    Passing ``writer_id``/``epoch`` emits a v3 (multi-writer) record that
+    carries the committing writer's fencing identity; recovery uses it to
+    attribute clusters to writers and drop records from fenced epochs."""
     n_pages = (len(body) - 8 * n_columns) // _PAGE_REC.itemsize
-    fix = _JREC_FIX.pack(seq, VERSION, flags, cluster_off, cluster_size,
-                         first_entry, n_entries, n_columns, n_pages)
+    if writer_id is not None:
+        fix = _JREC_FIX3.pack(seq, JREC_VERSION_MP, flags, cluster_off,
+                              cluster_size, first_entry, n_entries, n_columns,
+                              n_pages, writer_id, epoch or 0)
+    else:
+        fix = _JREC_FIX.pack(seq, VERSION, flags, cluster_off, cluster_size,
+                             first_entry, n_entries, n_columns, n_pages)
     crc = zlib.crc32(body, zlib.crc32(fix))
     rec = b"".join((
         _JREC_HDR.pack(JOURNAL_MAGIC, len(fix) + len(body)),
@@ -294,6 +313,8 @@ class JournalRecord:
     pages: List[PageDesc]
     crc: int
     end: int = 0          # file offset just past this record (scan bookkeeping)
+    writer_id: int = 0    # v3 only; 0 for single-writer records
+    epoch: int = 0        # v3 only; fencing epoch the commit ran under
 
     @property
     def buffered(self) -> bool:
@@ -320,8 +341,16 @@ def parse_journal_record(buf, pos: int = 0) -> Tuple[JournalRecord, int]:
      n_pages) = _JREC_FIX.unpack_from(payload, 0)
     if ver not in SUPPORTED_VERSIONS:
         raise IOError(f"unsupported journal record version {ver}")
-    body_pos = _JREC_FIX.size
-    if len(payload) != _JREC_FIX.size + 8 * n_cols + _PAGE_REC.itemsize * n_pages:
+    writer_id = epoch = 0
+    if ver >= JREC_VERSION_MP:
+        if len(payload) < _JREC_FIX3.size:
+            raise IOError("truncated journal record")
+        (seq, ver, flags, c_off, c_size, first_entry, n_entries, n_cols,
+         n_pages, writer_id, epoch) = _JREC_FIX3.unpack_from(payload, 0)
+        body_pos = _JREC_FIX3.size
+    else:
+        body_pos = _JREC_FIX.size
+    if len(payload) != body_pos + 8 * n_cols + _PAGE_REC.itemsize * n_pages:
         raise IOError("journal record length mismatch")
     n_elements = np.frombuffer(payload, dtype="<u8", count=n_cols,
                                offset=body_pos)
@@ -341,7 +370,8 @@ def parse_journal_record(buf, pos: int = 0) -> Tuple[JournalRecord, int]:
         for r in rec
     ]
     jr = JournalRecord(seq, flags, c_off, c_size, first_entry, n_entries,
-                       [int(x) for x in n_elements], pages, crc, end)
+                       [int(x) for x in n_elements], pages, crc, end,
+                       writer_id, epoch)
     return jr, end
 
 

@@ -84,6 +84,9 @@ class RecoveryReport:
     scan_seconds: float = 0.0
     rebuilt: bool = False            # a fresh footer was appended
     output: Optional[str] = None
+    # multi-writer salvage (side-car reservation log present): per-writer
+    # attribution, fenced/done sets, orphaned reservations (DESIGN.md §8.6)
+    multiwriter: Optional[dict] = None
 
     def as_dict(self) -> dict:
         return {
@@ -101,6 +104,7 @@ class RecoveryReport:
             "scan_seconds": self.scan_seconds,
             "rebuilt": self.rebuilt,
             "output": self.output,
+            "multiwriter": self.multiwriter,
         }
 
 
@@ -201,7 +205,7 @@ def _verify_cluster_pages(sink: Sink, jr, size: int,
 
 
 def scan_container(
-    sink: Sink, verify_pages: bool = True
+    sink: Sink, verify_pages: bool = True, xlog_state=None
 ) -> Tuple[object, dict, List[ClusterMeta], RecoveryReport]:
     """Scan a (possibly torn) RNT-J file's data region and return
     ``(schema, header_options, salvaged_clusters, report)``.
@@ -209,7 +213,14 @@ def scan_container(
     The salvaged :class:`ClusterMeta` list is ordered by commit sequence
     with entry ranges renumbered contiguously — exactly what a page list
     wants.  Raises :class:`RecoveryError` only when the header itself is
-    unusable; everything else degrades to dropped clusters."""
+    unusable; everything else degrades to dropped clusters.
+
+    ``xlog_state`` (a replayed :class:`repro.core.extents.LogState` from
+    the multi-writer side-car log) enables **fencing enforcement**: a
+    journal record is additionally required to sit inside a reservation
+    owned by the same ``(writer_id, epoch)`` — a stale-epoch writer's
+    late writes are rejected here even if their CRCs are pristine — and
+    the report gains per-writer attribution (``report.multiwriter``)."""
     t0 = time.perf_counter()
     size = sink.size
     report = RecoveryReport(file_size=size)
@@ -278,6 +289,10 @@ def scan_container(
     report.scan_bytes = pos
 
     # -- validate: a cluster survives when journal + envelope agree ---------
+    res_by_off = {}
+    if xlog_state is not None:
+        res_by_off = {r.offset: r for r in xlog_state.reservations.values()}
+    per_writer: dict = {}
     clusters: List[ClusterMeta] = []
     for seq in sorted(journals):
         jr = journals[seq]
@@ -290,11 +305,27 @@ def scan_container(
                   or env["desc_crc"] != jr.crc
                   or env["payload_off"] != jr.cluster_off):
                 reason = "envelope/journal disagree"
+        if reason is None and xlog_state is not None and jr.buffered:
+            # fencing enforcement: the extent must be a reservation OWNED
+            # by this exact (writer_id, epoch).  A fenced writer that
+            # rejoined got a fresh epoch, so its stale process's late
+            # writes — however intact — fail this check and are dropped.
+            r = res_by_off.get(jr.cluster_off - CLUSTER_ENV_SIZE)
+            if r is None:
+                reason = "extent has no reservation in the side-car log"
+            elif (r.writer_id != jr.writer_id or r.epoch != jr.epoch
+                  or r.seq != jr.seq):
+                reason = "journal record from a fenced epoch"
         if reason is None:
             reason = _verify_cluster_pages(sink, jr, size, verify_pages)
         if reason is not None:
             report.clusters_dropped.append({"seq": seq, "reason": reason})
             continue
+        if jr.writer_id:
+            pw = per_writer.setdefault(
+                jr.writer_id, {"clusters": 0, "entries": 0})
+            pw["clusters"] += 1
+            pw["entries"] += jr.n_entries
         clusters.append(
             ClusterMeta(
                 first_entry=0,  # renumbered below
@@ -311,12 +342,40 @@ def scan_container(
         n += cm.n_entries
     report.clusters_salvaged = len(clusters)
     report.entries_salvaged = n
+    if xlog_state is not None:
+        salvaged_offs = {cm.byte_offset - CLUSTER_ENV_SIZE
+                         for cm in clusters if cm.byte_size}
+        orphaned = [
+            {"writer": r.writer_id, "offset": r.offset, "size": r.size,
+             "committed": r.committed}
+            for r in xlog_state.reservations.values()
+            if r.offset not in salvaged_offs
+        ]
+        report.multiwriter = {
+            "writers": {str(w.writer_id): dict(
+                per_writer.get(w.writer_id, {"clusters": 0, "entries": 0}),
+                fenced=w.fenced, done=w.done)
+                for w in xlog_state.writers.values()},
+            "sealed": xlog_state.sealed,
+            "orphaned_reservations": orphaned,
+        }
     report.scan_seconds = time.perf_counter() - t0
     return schema, options, clusters, report
 
 
 # ---------------------------------------------------------------------------
 # recovery
+
+
+def _load_xlog_state(container_path: str):
+    """Replayed side-car reservation-log state, or ``None`` when absent
+    (single-writer files) or unreadable (recovery must still proceed)."""
+    from .extents import XLOG_SUFFIX, replay_log
+    try:
+        with open(os.fspath(container_path) + XLOG_SUFFIX, "rb") as f:
+            return replay_log(f.read())
+    except OSError:
+        return None
 
 
 def _footer_clusters(sink: Sink) -> Optional[int]:
@@ -349,10 +408,17 @@ def recover_container(
     footer chain is already valid is left untouched (``footer_valid`` in
     the report) unless ``force``.  ``dry_run`` scans and reports without
     writing.  Returns the :class:`RecoveryReport`; raises
-    :class:`RecoveryError` when even the header is unusable."""
+    :class:`RecoveryError` when even the header is unusable.
+
+    When the source is a path and a multi-writer side-car reservation log
+    (``<path>.mpwlog``) sits next to it — a crash before the coordinator's
+    rendezvous sealed the file — its replayed state drives fencing
+    enforcement and per-writer attribution (see :func:`scan_container`)."""
     owns = False
+    xlog_state = None
     if isinstance(source, (str, os.PathLike)):
         path = os.fspath(source)
+        xlog_state = _load_xlog_state(path)
         if output is not None:
             if not dry_run:
                 shutil.copyfile(path, output)
@@ -371,7 +437,7 @@ def recover_container(
             report.output = output
             return report
         schema, _options, clusters, report = scan_container(
-            sink, verify_pages=verify_pages
+            sink, verify_pages=verify_pages, xlog_state=xlog_state
         )
         report.output = output
         if dry_run:

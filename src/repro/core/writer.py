@@ -153,6 +153,16 @@ class WriteOptions:
     # bounded-retry policy applied by the I/O engine to every write and
     # fsync (None = fail fast, the pre-PR-6 behavior)
     retry_policy: Optional[RetryPolicy] = None
+    # -- multi-process writing (DESIGN.md §8.6) ------------------------------
+    # lease heartbeat period of a participant writer; a writer silent for
+    # 2x this is considered dead and may be fenced by the coordinator
+    lease_interval: float = 5.0
+    # how long the coordinator's footer-assembly rendezvous waits for
+    # stragglers before fencing them and sealing over what is journaled
+    rendezvous_timeout: float = 30.0
+    # fsync the side-car reservation log on every append (crash-consistent
+    # allocation); False trades durability of the log for append latency
+    mpw_log_fsync: bool = True
 
     @property
     def codec_id(self) -> int:
@@ -172,6 +182,13 @@ class WriteOptions:
 
 class _WriterBase:
     """Shared container/metadata handling, compression pool + close()."""
+
+    # multi-writer participants (repro.core.mpwrite) flip these: they skip
+    # the header (the coordinator owns it), stamp journal records with
+    # their fencing identity, and take commit seqs from the shared log
+    _writes_header = True
+    _jrec_writer_id: Optional[int] = None
+    _jrec_epoch: int = 0
 
     def __init__(self, schema: Schema, sink, options: Optional[WriteOptions] = None):
         self.schema = schema
@@ -236,12 +253,15 @@ class _WriterBase:
         # e.g. one parsed from a precondition=False file — may carry
         # non-default encodings): readers restore them verbatim, so what
         # the builders encode and what readers decode can never diverge.
-        hdr_opts = self.options.as_dict()
-        hdr_opts["encodings"] = self.column_encodings()
-        hdr = build_header(schema, hdr_opts)
-        off = self.sink.reserve(len(hdr))
-        self._meta_pwrite(off, hdr)
-        self._header_loc = (off, len(hdr))
+        if self._writes_header:
+            hdr_opts = self.options.as_dict()
+            hdr_opts["encodings"] = self.column_encodings()
+            hdr = build_header(schema, hdr_opts)
+            off = self.sink.reserve(len(hdr))
+            self._meta_pwrite(off, hdr)
+            self._header_loc = (off, len(hdr))
+        else:
+            self._header_loc = (0, 0)
 
     def _meta_pwrite(self, off: int, data: bytes) -> None:
         """Direct metadata write (header/page list/footer/anchor), through
@@ -295,6 +315,28 @@ class _WriterBase:
 
     # -- commit protocol ----------------------------------------------------
 
+    def _commit_seq(self) -> int:
+        """Sequence number of the cluster being committed (caller holds the
+        writer lock, right after the extent reserve).  Multi-writer
+        participants override this to return the shared log's global seq."""
+        return len(self._clusters)
+
+    def _post_commit(self, ext: int) -> None:
+        """Hook after an extent's bytes are handed to the I/O engine.
+        Multi-writer participants append the COMMIT record here."""
+
+    def _jrec_size(self, n_columns: int, n_pages: int) -> int:
+        return journal_record_size(n_columns, n_pages,
+                                   multi=self._jrec_writer_id is not None)
+
+    def _finish_jrec(self, seq, flags, cluster_off, cluster_size, first_entry,
+                     n_entries, n_columns, body):
+        return finish_journal_record(
+            seq, flags, cluster_off, cluster_size, first_entry, n_entries,
+            n_columns, body, writer_id=self._jrec_writer_id,
+            epoch=self._jrec_epoch,
+        )
+
     def _commit_cluster(self, sealed: SealedCluster) -> None:
         """The paper's critical section (§4.2/§4.3), buffered mode.
 
@@ -316,8 +358,7 @@ class _WriterBase:
         env_len = CLUSTER_ENV_SIZE if self._journal else 0
         if self._journal:
             jbody = build_journal_body(sealed.n_elements, sealed.pages)
-            jlen = journal_record_size(len(sealed.n_elements),
-                                       len(sealed.pages))
+            jlen = self._jrec_size(len(sealed.n_elements), len(sealed.pages))
         else:
             jbody, jlen = b"", 0
         total = env_len + sealed.size + jlen
@@ -330,7 +371,7 @@ class _WriterBase:
                 self.sink.fallocate(ext, total)
             first_entry = self._n_entries
             self._n_entries += sealed.n_entries
-            seq = len(self._clusters)
+            seq = self._commit_seq()
             self._clusters.append(
                 ClusterMeta(
                     first_entry=first_entry,
@@ -342,7 +383,7 @@ class _WriterBase:
                 )
             )
             if self._journal:
-                jrec, desc_crc = finish_journal_record(
+                jrec, desc_crc = self._finish_jrec(
                     seq, JREC_BUFFERED, off, sealed.size, first_entry,
                     sealed.n_entries, len(sealed.n_elements), jbody,
                 )
@@ -352,10 +393,12 @@ class _WriterBase:
                 parts = sealed.iov_plan()
             if not opts.write_outside_lock:
                 io_ns = self._submit_or_latch(ext, parts, total, owner=sealed)
+                self._post_commit(ext)
         if opts.write_outside_lock:
             # opt-2: the extent is reserved and the metadata final — the
             # actual bytes go out truly in parallel (paper §5).
             io_ns = self._submit_or_latch(ext, parts, total, owner=sealed)
+            self._post_commit(ext)
         self.stats.add_sealed_cluster(sealed, commit_ns=_ns() - t0, io_ns=io_ns)
 
     def _poison(self, e: BaseException) -> None:
@@ -418,7 +461,7 @@ class _WriterBase:
         # Unbuffered clusters have no contiguous payload to frame, so the
         # journal contribution is a record alone (flags=0: absolute page
         # offsets); recovery validates the scattered pages by their CRCs.
-        jlen = (journal_record_size(len(n_elements), len(pages))
+        jlen = (self._jrec_size(len(n_elements), len(pages))
                 if self._journal else 0)
         jbody = build_journal_body(n_elements, pages) if self._journal else b""
         if jlen:
@@ -430,7 +473,7 @@ class _WriterBase:
                 ClusterMeta(first_entry, n_entries, n_elements, list(pages))
             )
             if jlen:
-                jrec, _ = finish_journal_record(
+                jrec, _ = self._finish_jrec(
                     len(self._clusters) - 1, 0, 0, 0, first_entry, n_entries,
                     len(n_elements), jbody,
                 )
@@ -457,7 +500,7 @@ class _WriterBase:
         env_len = CLUSTER_ENV_SIZE if self._journal else 0
         if self._journal:
             jbody = build_journal_body(n_elements, rel)
-            jlen = journal_record_size(len(n_elements), len(rel))
+            jlen = self._jrec_size(len(n_elements), len(rel))
         else:
             jbody, jlen = b"", 0
         total = env_len + nbytes + jlen
@@ -467,7 +510,7 @@ class _WriterBase:
             off = ext + env_len
             first_entry = self._n_entries
             self._n_entries += n_entries
-            seq = len(self._clusters)
+            seq = self._commit_seq()
             self._clusters.append(
                 ClusterMeta(
                     first_entry=first_entry,
@@ -479,7 +522,7 @@ class _WriterBase:
                 )
             )
             if self._journal:
-                jrec, desc_crc = finish_journal_record(
+                jrec, desc_crc = self._finish_jrec(
                     seq, JREC_BUFFERED, off, nbytes, first_entry, n_entries,
                     len(n_elements), jbody,
                 )
@@ -488,6 +531,7 @@ class _WriterBase:
             else:
                 parts = [blob]
             self._submit_or_latch(ext, parts, total, owner=owner)
+            self._post_commit(ext)
         with self.stats._mu:
             self.stats.clusters += 1
             self.stats.entries += n_entries
@@ -495,6 +539,55 @@ class _WriterBase:
             self.stats.compressed_bytes += nbytes
 
     # -- finalization ---------------------------------------------------------
+
+    def _finalize(self) -> None:
+        """Seal the container: page list + footer + anchor + final fsync.
+        Runs only on a clean close (engine drained, nothing poisoned).
+        Multi-writer participants override this — the coordinator owns the
+        footer; a participant just makes its clusters durable and reports
+        DONE to the shared log."""
+        if (self._journal and self._clusters
+                and self._io._fsync_interval
+                and not self._io._fsync_every):
+            # journal-before-footer barrier (DESIGN.md §8.3):
+            # every committed cluster's envelope + journal record
+            # is durable before the first finalization byte
+            # exists, so a crash during finalization always
+            # leaves a journal that covers all committed data.
+            # Only the byte-interval policy needs it: every-cluster
+            # already synced each extent, and under on_close
+            # nothing is durable until the single close fsync
+            # below — which then covers journal and footer alike.
+            self._io.fsync()
+        with self.lock:
+            extra = None
+            sc = build_member_sidecar(self._clusters)
+            if sc is not None:
+                sc_off = self.sink.reserve(len(sc))
+                self._meta_pwrite(sc_off, sc)
+                extra = {"members": [sc_off, len(sc)]}
+            pl = build_pagelist(self._clusters, self.schema.n_columns)
+            pl_off = self.sink.reserve(len(pl))
+            self._meta_pwrite(pl_off, pl)
+            ftr = build_footer(self._n_entries, len(self._clusters),
+                               (pl_off, len(pl)), extra=extra)
+            f_off = self.sink.reserve(len(ftr))
+            self._meta_pwrite(f_off, ftr)
+            anchor = build_anchor(
+                self._header_loc, (f_off, len(ftr)), self._n_entries,
+                len(self._clusters),
+            )
+            a_off = self.sink.reserve(ANCHOR_SIZE)
+            self._meta_pwrite(a_off, anchor)
+        # Durability before close: fsync the sink unconditionally
+        # (sinks without a backing fd make it a no-op counter
+        # bump).  The seed gated this on readable() — which
+        # skipped the fsync exactly for write-only sinks — and as
+        # a discarded conditional expression.  Routed through the
+        # engine so it is retried and a final failure poisons
+        # (and is accounted) like any other I/O error.  The fsync
+        # must precede the io-stats snapshot to be counted.
+        self._io.fsync()
 
     def close(self) -> None:
         if self._closed:
@@ -508,48 +601,7 @@ class _WriterBase:
             # error hook) before any finalization byte is even built
             self._io.drain()
             if self._commit_error is None:
-                if (self._journal and self._clusters
-                        and self._io._fsync_interval
-                        and not self._io._fsync_every):
-                    # journal-before-footer barrier (DESIGN.md §8.3):
-                    # every committed cluster's envelope + journal record
-                    # is durable before the first finalization byte
-                    # exists, so a crash during finalization always
-                    # leaves a journal that covers all committed data.
-                    # Only the byte-interval policy needs it: every-cluster
-                    # already synced each extent, and under on_close
-                    # nothing is durable until the single close fsync
-                    # below — which then covers journal and footer alike.
-                    self._io.fsync()
-                with self.lock:
-                    extra = None
-                    sc = build_member_sidecar(self._clusters)
-                    if sc is not None:
-                        sc_off = self.sink.reserve(len(sc))
-                        self._meta_pwrite(sc_off, sc)
-                        extra = {"members": [sc_off, len(sc)]}
-                    pl = build_pagelist(self._clusters, self.schema.n_columns)
-                    pl_off = self.sink.reserve(len(pl))
-                    self._meta_pwrite(pl_off, pl)
-                    ftr = build_footer(self._n_entries, len(self._clusters),
-                                       (pl_off, len(pl)), extra=extra)
-                    f_off = self.sink.reserve(len(ftr))
-                    self._meta_pwrite(f_off, ftr)
-                    anchor = build_anchor(
-                        self._header_loc, (f_off, len(ftr)), self._n_entries,
-                        len(self._clusters),
-                    )
-                    a_off = self.sink.reserve(ANCHOR_SIZE)
-                    self._meta_pwrite(a_off, anchor)
-                # Durability before close: fsync the sink unconditionally
-                # (sinks without a backing fd make it a no-op counter
-                # bump).  The seed gated this on readable() — which
-                # skipped the fsync exactly for write-only sinks — and as
-                # a discarded conditional expression.  Routed through the
-                # engine so it is retried and a final failure poisons
-                # (and is accounted) like any other I/O error.  The fsync
-                # must precede the io-stats snapshot to be counted.
-                self._io.fsync()
+                self._finalize()
         finally:
             # resources are released on every path, even a poisoned one —
             # and even when one release step itself fails

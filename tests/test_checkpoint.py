@@ -1,7 +1,8 @@
 """Checkpoint substrate: parallel single-file save/restore, fault tolerance,
-elastic restart (different writer counts), async saves."""
+elastic restart (different writer counts), async saves, multi-process saves."""
 
 import os
+import stat
 import threading
 
 import jax
@@ -9,8 +10,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
-from repro.core import RNTJReader
+from repro.ckpt import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+    save_checkpoint_mp,
+)
+from repro.core import RNTJReader, WriteOptions
+
+MP_OPTS = WriteOptions(codec="zlib", level=1, cluster_bytes=1 << 20,
+                       lease_interval=0.5, rendezvous_timeout=15.0,
+                       mpw_log_fsync=False)
 
 
 def make_tree(seed=0):
@@ -122,4 +132,192 @@ def test_concurrent_writers_thread_safety(tmp_path):
     p = str(tmp_path / "big.rntj")
     save_checkpoint(p, tree, n_writers=8, row_block_bytes=512)
     back, _ = load_checkpoint(p, target_tree=tree)
+    assert_trees_equal(tree, back)
+
+
+# ---------------------------------------------------------------------------
+# durability of the directory (commit/prune are rename/unlink, not writes)
+
+
+def test_manager_fsyncs_directory_after_commit_and_prune(tmp_path, monkeypatch):
+    import repro.ckpt.manager as mgr_mod
+
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+
+    def spy_fsync(fd):
+        if stat.S_ISDIR(os.fstat(fd).st_mode):
+            events.append("dirsync")
+        return real_fsync(fd)
+
+    def spy_replace(a, b):
+        events.append("replace")
+        return real_replace(a, b)
+
+    monkeypatch.setattr(mgr_mod.os, "fsync", spy_fsync)
+    monkeypatch.setattr(mgr_mod.os, "replace", spy_replace)
+
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    tree = make_tree()
+    mgr.save(10, tree)
+    # the rename is durable only once the directory entry is: a dirsync
+    # must FOLLOW the replace (crash between them loses the commit)
+    assert "replace" in events
+    assert "dirsync" in events[events.index("replace"):], (
+        f"no directory fsync after rename: {events}")
+
+    events.clear()
+    mgr.save(20, tree)  # prunes step 10
+    assert mgr.steps() == [20]
+    assert events.count("dirsync") >= 2, (
+        f"prune's unlink needs its own directory fsync: {events}")
+
+    # gc of crash leftovers is also a directory mutation
+    (tmp_path / "step_0000000099.rntj.tmp").write_bytes(b"junk")
+    events.clear()
+    mgr.gc_tmp()
+    assert "dirsync" in events
+
+
+# ---------------------------------------------------------------------------
+# async-save synchronization (restore/steps vs in-flight save)
+
+
+def test_restore_and_steps_wait_for_async_save(tmp_path, monkeypatch):
+    import repro.ckpt.manager as mgr_mod
+
+    started = threading.Event()
+    release = threading.Event()
+    real_save = mgr_mod.save_checkpoint
+
+    def slow_save(path, tree, **kw):
+        started.set()
+        assert release.wait(timeout=30)
+        return real_save(path, tree, **kw)
+
+    monkeypatch.setattr(mgr_mod, "save_checkpoint", slow_save)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = make_tree()
+    mgr.save_async(7, tree)
+    assert started.wait(timeout=30)
+    # un-synchronized, these would race the rename and miss step 7
+    threading.Timer(0.05, release.set).start()
+    assert mgr.steps() == [7]
+    back, meta = mgr.restore(target_tree=tree)
+    assert meta["step"] == 7
+    assert_trees_equal(tree, back)
+
+
+def test_restore_surfaces_async_save_error(tmp_path, monkeypatch):
+    import repro.ckpt.manager as mgr_mod
+
+    def boom(path, tree, **kw):
+        raise RuntimeError("injected save failure")
+
+    monkeypatch.setattr(mgr_mod, "save_checkpoint", boom)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save_async(7, make_tree())
+    with pytest.raises(RuntimeError, match="injected save failure"):
+        mgr.restore()
+
+
+def test_wait_self_join_guard(tmp_path):
+    # save() -> _prune() -> steps() runs ON the async thread: wait() must
+    # detect it and return instead of self-joining (deadlock)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr._async_thread = threading.current_thread()
+    mgr.wait()  # returns immediately; a join here would deadlock
+    assert mgr._async_thread is threading.current_thread()
+    mgr._async_thread = None
+
+    # and the integration: back-to-back async saves with prune enabled
+    mgr2 = CheckpointManager(str(tmp_path / "x"), keep=1)
+    tree = make_tree()
+    mgr2.save_async(1, tree)
+    mgr2.save_async(2, tree)
+    mgr2.wait()
+    assert mgr2.steps() == [2]
+
+
+# ---------------------------------------------------------------------------
+# multi-process saves (the DESIGN.md §8.6 proof workload)
+
+
+def test_mp_save_restore_roundtrip(tmp_path):
+    tree = make_tree()
+    p = str(tmp_path / "mp.rntj")
+    report = save_checkpoint_mp(p, tree, n_processes=2,
+                                row_block_bytes=4096, options=MP_OPTS,
+                                metadata={"step": 1})
+    assert not report["degraded"], report
+    assert report["worker_exitcodes"] == [0, 0]
+    assert not os.path.exists(p + ".mpwlog")
+    back, meta = load_checkpoint(p, target_tree=tree)
+    assert_trees_equal(tree, back)
+    assert meta["step"] == 1
+
+
+def test_mp_save_worker_killed_restore_succeeds(tmp_path):
+    """Kill one of N writer processes mid-save: the seal degrades, strict
+    restore refuses, strict=False restores every surviving parameter."""
+    tree = make_tree(2)
+    p = str(tmp_path / "mp.rntj")
+    report = save_checkpoint_mp(p, tree, n_processes=2,
+                                row_block_bytes=4096, options=MP_OPTS,
+                                metadata={"step": 2},
+                                crash_worker=1, crash_after_units=2)
+    assert report["degraded"]
+    assert report["worker_exitcodes"][1] != 0
+    assert len(report["fenced"]) == 1
+
+    with pytest.raises(IOError, match="incomplete"):
+        load_checkpoint(p)
+
+    back, meta = load_checkpoint(p, target_tree=tree, strict=False)
+    missing = set(meta.get("restore_missing", []))
+    assert missing, "a killed writer must leave at least one gap"
+    flat_src, _ = jax.tree_util.tree_flatten_with_path(tree)
+    flat_got = jax.tree_util.tree_leaves(back)
+    for (path_, src), got in zip(flat_src, flat_got):
+        if jax.tree_util.keystr(path_) not in missing:
+            np.testing.assert_array_equal(
+                np.asarray(src, np.float32), np.asarray(got, np.float32))
+
+
+def test_manager_refuses_degraded_mp_save(tmp_path, monkeypatch):
+    import repro.ckpt.manager as mgr_mod
+
+    real = mgr_mod.save_checkpoint_mp
+
+    def crashing(path, tree, **kw):
+        return real(path, tree, crash_worker=0, crash_after_units=1, **kw)
+
+    monkeypatch.setattr(mgr_mod, "save_checkpoint_mp", crashing)
+    mgr = CheckpointManager(str(tmp_path), keep=3, processes=2,
+                            mp_options=MP_OPTS)
+    tree = make_tree()
+    with pytest.raises(IOError, match="degraded"):
+        mgr.save(5, tree)
+    assert mgr.steps() == []  # nothing committed
+    assert not list(tmp_path.glob("*.tmp"))      # tmp dropped
+    assert not list(tmp_path.glob("*.mpwlog"))   # side-car dropped
+
+    # explicit opt-in commits the salvaged file; restore needs strict=False
+    mgr2 = CheckpointManager(str(tmp_path), keep=3, processes=2,
+                             mp_options=MP_OPTS, allow_degraded=True)
+    stats = mgr2.save(6, tree)
+    assert stats["degraded"]
+    assert mgr2.steps() == [6]
+    back, meta = mgr2.restore(target_tree=tree, strict=False)
+    assert meta.get("restore_missing")
+
+
+def test_manager_mp_save_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, processes=2,
+                            mp_options=MP_OPTS)
+    tree = make_tree()
+    stats = mgr.save(11, tree, {"loss": 0.5})
+    assert not stats["degraded"]
+    back, meta = mgr.restore(target_tree=tree)
+    assert meta["step"] == 11 and meta["loss"] == 0.5
     assert_trees_equal(tree, back)

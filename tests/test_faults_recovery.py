@@ -789,3 +789,97 @@ def test_chaos_cli_single_scenario():
         capture_output=True, text=True)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "ok   transient" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy x fault interaction on the fsync path (ISSUE 8 satellite):
+# a footer must never cover clusters whose fsync did not succeed
+
+
+def test_fsync_transient_failure_retries_then_seals(tmp_path):
+    """fsync fails transiently under a RetryPolicy: the engine retries to
+    success and close() seals a VALID footer (the data really is synced)."""
+    fs = FaultInjectingSink(MemorySink(), [FaultSpec.fsync_error(count=2)])
+    w = SequentialWriter(SCHEMA, fs, WriteOptions(
+        cluster_bytes=2048, retry_policy=FAST, fsync_policy="on_close"))
+    entries = make_entries(200, 0)
+    for e in entries:
+        w.fill(e)
+    w.close()  # the close-time fsync absorbs both injected failures
+    d = w.stats.as_dict()
+    assert d["io_retries"] >= 2 and d["io_giveups"] == 0
+    assert fs.faults.fsync_errors == 2
+    rep = recover_container(fs.inner, dry_run=True)
+    assert rep.footer_valid
+    verify = RNTJReader(fs.inner)
+    assert list(verify.iter_entries()) == entries
+    verify.close()
+
+
+def test_fsync_permanent_failure_never_seals_footer(tmp_path):
+    """fsync fails permanently: retries exhaust, close() poisons — and the
+    file must NOT end in a valid footer (its clusters were never synced).
+    The journal still makes every committed cluster salvageable."""
+    fs = FaultInjectingSink(MemorySink(), [FaultSpec.fsync_error(count=-1)])
+    w = SequentialWriter(SCHEMA, fs, WriteOptions(
+        cluster_bytes=2048, retry_policy=FAST, fsync_policy="every_cluster"))
+    entries = make_entries(200, 0)
+    with pytest.raises((OSError, RuntimeError)):
+        for e in entries:
+            w.fill(e)
+        w.close()
+    with pytest.raises((OSError, RuntimeError)):
+        w.close()  # surfaces the latched poison (and merges engine stats)
+    d = w.stats.as_dict()
+    assert d["io_fsync_failures"] >= 1 and d["io_giveups"] >= 1
+
+    rep = recover_container(fs.inner, dry_run=True)
+    assert not rep.footer_valid, (
+        "footer sealed over clusters whose fsync never succeeded")
+    # the journaled prefix is still salvageable after the crash
+    ms = memory_sink_from_bytes(crashed_file_bytes(fs))
+    rep = recover_container(ms)
+    assert rep.rebuilt
+    r = RNTJReader(ms)
+    got = list(r.iter_entries())
+    r.close()
+    assert got == entries[: len(got)]
+
+
+def test_mp_participant_fsync_failure_withholds_done(tmp_path):
+    """Multi-writer flavor: a participant whose finalize-fsync fails must
+    not report DONE — the coordinator fences it and page-verifies its
+    clusters instead of trusting the missing durability handshake."""
+    from repro.core import (FencedError, MultiWriterCoordinator,
+                            join_container, open_sink)
+    from repro.core.extents import ExtentLog
+
+    path = str(tmp_path / "mp.rntj")
+    opts = WriteOptions(cluster_bytes=1024, retry_policy=FAST,
+                        lease_interval=0.3, rendezvous_timeout=5.0,
+                        mpw_log_fsync=False)
+    coord = MultiWriterCoordinator(SCHEMA, path, opts)
+    fs = FaultInjectingSink(open_sink(path, create=False),
+                            [FaultSpec.fsync_error(count=-1)])
+    w = join_container(path, schema=SCHEMA, options=opts, sink=fs)
+    ctx = w.create_fill_context()
+    entries = make_entries(60, 0)
+    for e in entries:
+        ctx.fill(e)
+    with pytest.raises((OSError, RuntimeError)):
+        ctx.close()
+        w.close()
+
+    log = ExtentLog(ExtentLog.sidecar_path(path), fsync=False)
+    st = log.snapshot()
+    log.close()
+    assert not st.writers[w.writer_id].done, (
+        "DONE reported despite a failed durability fsync")
+
+    report = coord.seal(expect_writers=1)
+    coord.close()
+    assert report["fenced"] == [w.writer_id]
+    r = RNTJReader(path)
+    got = list(r.iter_entries())
+    r.close()
+    assert got == entries[: len(got)] and got, "committed clusters lost"

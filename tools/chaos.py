@@ -34,7 +34,11 @@ from __future__ import annotations
 
 import argparse
 import errno
+import multiprocessing
+import os
 import sys
+import tempfile
+import time
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -47,8 +51,10 @@ from repro.core import (  # noqa: E402
     Collection,
     FaultInjectingSink,
     FaultSpec,
+    FencedError,
     Leaf,
     MemorySink,
+    MultiWriterCoordinator,
     ParallelWriter,
     ProcessKilled,
     RNTJReader,
@@ -56,6 +62,8 @@ from repro.core import (  # noqa: E402
     Schema,
     SequentialWriter,
     WriteOptions,
+    join_container,
+    open_sink,
     recover_container,
     RecoveryError,
 )
@@ -256,6 +264,216 @@ def scenario_kill(entries, seed):
     return {"kill_points": len(kills), "salvage": results}
 
 
+# -- multi-process crash matrix (DESIGN.md §8.6) -----------------------------
+
+# WriteOptions for every mp cell: tiny clusters, fast leases, no side-car
+# fsync (the matrix kills processes, not the kernel)
+def _mp_options():
+    return WriteOptions(cluster_bytes=2048, retry_policy=POLICY,
+                        lease_interval=0.3, rendezvous_timeout=5.0,
+                        mpw_log_fsync=False)
+
+
+def _mp_fault_specs(fault: str, point: int):
+    if fault == "eio":
+        return [FaultSpec.transient_error(count=3)]
+    if fault == "torn":
+        return [FaultSpec.short_write(at_call=3)]
+    if fault == "enospc":  # a persistent wall at this writer's Nth byte
+        return [FaultSpec(op="write", kind="error", err=errno.ENOSPC,
+                          count=-1, at_byte=point)]
+    if fault == "fsync":
+        return [FaultSpec.fsync_error(count=-1)]
+    if fault == "kill":
+        return [FaultSpec.kill_at(point)]
+    return []
+
+
+def _mp_chaos_worker(path, entries, fault, point):
+    """Forked child: join the shared container with an injected fault.
+
+    Exit codes: 0 clean DONE; 2 poisoned (fault surfaced, no DONE);
+    3 process-killed mid-write; 4 fenced straggler correctly refused;
+    5 fencing VIOLATED (a fenced writer's commit went through).
+    """
+    fs = FaultInjectingSink(open_sink(path, create=False),
+                            _mp_fault_specs(fault, point))
+    try:
+        w = join_container(path, schema=SCHEMA, options=_mp_options(), sink=fs)
+        ctx = w.create_fill_context()
+        if fault == "straggler":
+            half = len(entries) // 2
+            for e in entries[:half]:
+                ctx.fill(e)
+            ctx.flush_cluster()
+            time.sleep(point)  # sleep past the rendezvous deadline
+            try:
+                for e in entries[half:]:
+                    ctx.fill(e)
+                ctx.flush_cluster()
+                os._exit(5)  # must be unreachable: we were fenced
+            except (FencedError, RuntimeError, OSError):
+                os._exit(4)
+        for e in entries:
+            ctx.fill(e)
+        ctx.close()
+        w.close()
+    except ProcessKilled:
+        os._exit(3)
+    except (OSError, RuntimeError):
+        os._exit(2)
+    os._exit(0)
+
+
+def _mp_run_cell(entries, n_writers, fault, point, rendezvous_timeout=None):
+    """One matrix cell: N forked writers over one container; returns
+    (salvaged entries in file order, per-writer slices, exitcodes, report,
+    container path, tmpdir handle).  ``fault`` is one kind for every
+    writer, or a per-writer list."""
+    tmp = tempfile.TemporaryDirectory(prefix="rntj-chaos-")
+    path = os.path.join(tmp.name, "mp.rntj")
+    opts = _mp_options()
+    chunk = (len(entries) + n_writers - 1) // n_writers
+    slices = [entries[w * chunk: (w + 1) * chunk] for w in range(n_writers)]
+    faults = fault if isinstance(fault, list) else [fault] * n_writers
+    ctx = multiprocessing.get_context("fork")
+    coord = MultiWriterCoordinator(SCHEMA, path, opts)
+    procs = [ctx.Process(target=_mp_chaos_worker,
+                         args=(path, slices[w], faults[w], point))
+             for w in range(n_writers)]
+    for p in procs:
+        p.start()
+    report = coord.seal(expect_writers=n_writers,
+                        timeout=rendezvous_timeout)
+    coord.close()
+    for p in procs:
+        p.join()
+    exitcodes = [p.exitcode for p in procs]
+    r = RNTJReader(path)
+    got = list(r.iter_entries())
+    r.close()
+    return got, slices, exitcodes, report, path, tmp
+
+
+def _mp_check_cell(got, slices, exitcodes, label):
+    """The salvage contract for one cell: every clean writer's entries are
+    all present; a crashed writer's surviving entries are a prefix of what
+    it wrote; every salvaged entry is byte-identical to its source."""
+    by_id = {e["id"]: e for s in slices for e in s}
+    for e in got:
+        assert e == by_id[e["id"]], f"{label}: salvaged entry differs"
+    ids = [e["id"] for e in got]
+    assert len(ids) == len(set(ids)), f"{label}: duplicate salvaged entries"
+    for w, s in enumerate(slices):
+        mine = [e for e in got if e["id"] in {x["id"] for x in s}]
+        if exitcodes[w] == 0:
+            assert mine == s, (
+                f"{label}: clean writer {w} lost "
+                f"{len(s) - len(mine)} of {len(s)} entries")
+        else:
+            assert mine == s[: len(mine)], (
+                f"{label}: writer {w} salvage is not a prefix of its commits")
+    # byte-level check: the salvaged set re-written single-writer must
+    # decode identically (same codec path, same framing semantics)
+    ref = MemorySink()
+    write_through(ref, got, cluster_bytes=2048)
+    rr = RNTJReader(ref)
+    assert list(rr.iter_entries()) == got, (
+        f"{label}: salvaged decode differs from single-writer reference")
+    rr.close()
+
+
+def scenario_mpkill(entries, seed):
+    """N-process × kill-point × fault-type crash matrix through real
+    multiprocessing workers sharing one container file."""
+    cells = []
+    for n in (2, 4):
+        for fault in ("eio", "torn", "fsync"):
+            cells.append((n, fault, 0))
+        # points straddle the commit stream: before the first cluster
+        # lands (total loss), mid-stream (partial salvage), past the end
+        # (no fault fires — clean)
+        for fault in ("enospc", "kill"):
+            for point in (900, 1400, 3000):
+                cells.append((n, fault, point))
+    results = []
+    for n, fault, point in cells:
+        label = f"mpkill[N={n},{fault},@{point}]"
+        got, slices, codes, report, path, tmp = _mp_run_cell(
+            entries[: 160 * n], n, fault, point)
+        with tmp:
+            _mp_check_cell(got, slices, codes, label)
+            if fault in ("eio", "torn"):  # retried to success: zero loss
+                assert codes == [0] * n, f"{label}: {codes}"
+                assert not report["fenced"], f"{label}: {report}"
+            if fault == "fsync":  # fsync poison: DONE withheld, fenced
+                assert all(c != 0 for c in codes), f"{label}: {codes}"
+                assert len(report["fenced"]) == n, f"{label}: {report}"
+            # a degraded seal keeps the side-car; cross-check recovery's
+            # view of the sealed file (footer must already be valid)
+            rep = recover_container(path, dry_run=True)
+            assert rep.footer_valid, f"{label}: sealed footer invalid"
+        results.append((f"N={n}", fault, point, len(got),
+                        {"codes": codes, "fenced": report["fenced"]}))
+
+    # fencing invariant: a straggler fenced mid-rendezvous can never
+    # corrupt what the seal committed
+    n = 2
+    got, slices, codes, report, path, tmp = _mp_run_cell(
+        entries[:320], n, ["none", "straggler"], 3, rendezvous_timeout=1.0)
+    with tmp:
+        sealed = got
+        assert codes[0] == 0 and codes[1] == 4, (
+            f"straggler: exit codes {codes} (4 = fenced write refused)")
+        assert len(report["fenced"]) == 1, f"straggler: {report}"
+        r = RNTJReader(path)   # re-read AFTER the straggler's late attempt
+        assert list(r.iter_entries()) == sealed, (
+            "straggler: sealed entries changed after a fenced write")
+        r.close()
+        rep = recover_container(path, dry_run=True)
+        assert rep.footer_valid, "straggler: footer damaged by fenced writer"
+    results.append(("N=2", "straggler", 3, len(sealed),
+                    {"codes": codes, "fenced": report["fenced"]}))
+    return {"cells": len(results), "matrix": results}
+
+
+def scenario_mprecover(entries, seed):
+    """Coordinator dies mid-rendezvous (no footer): recover_container
+    rebuilds the file from the journal + side-car log alone."""
+    tmp = tempfile.TemporaryDirectory(prefix="rntj-chaos-")
+    with tmp:
+        path = os.path.join(tmp.name, "mp.rntj")
+        opts = _mp_options()
+        n = 2
+        chunk = (len(entries) + n - 1) // n
+        slices = [entries[w * chunk: (w + 1) * chunk] for w in range(n)]
+        ctx = multiprocessing.get_context("fork")
+        coord = MultiWriterCoordinator(SCHEMA, path, opts)
+        procs = [ctx.Process(target=_mp_chaos_worker,
+                             args=(path, slices[w], "none", 0))
+                 for w in range(n)]
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join()
+        assert [p.exitcode for p in procs] == [0, 0]
+        # coordinator "crashes" here: no seal, no footer — just drop it
+        coord.sink.close()
+        coord.log.close()
+        rep = recover_container(path)
+        assert not rep.footer_valid, "unsealed file cannot have a footer"
+        assert rep.multiwriter is not None, "side-car state not consulted"
+        r = RNTJReader(path)
+        got = list(r.iter_entries())
+        r.close()
+        assert sorted(e["id"] for e in got) == sorted(
+            e["id"] for s in slices for e in s), "recovery lost entries"
+        by_id = {e["id"]: e for s in slices for e in s}
+        assert all(e == by_id[e["id"]] for e in got), "recovered entry differs"
+        return {"writers": n, "recovered": len(got),
+                "clusters": rep.clusters_salvaged}
+
+
 SCENARIOS = {
     "transient": scenario_transient,
     "seeded": scenario_seeded,
@@ -265,6 +483,8 @@ SCENARIOS = {
     "ring": scenario_ring,
     "latency": scenario_latency,
     "kill": scenario_kill,
+    "mpkill": scenario_mpkill,
+    "mprecover": scenario_mprecover,
 }
 
 
