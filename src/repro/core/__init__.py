@@ -50,7 +50,7 @@ from .recover import (
     recover_container,
     scan_container,
 )
-from .extents import ExtentLog, FencedError, WriterSession
+from .extents import ExtentLog, FencedError, StaleLogError, WriterSession
 from .mpwrite import (
     MultiWriterCoordinator,
     ParticipantWriter,
@@ -73,7 +73,8 @@ __all__ = [
     "BufferPool", "PoolStats", "Recyclable", "IOEngine", "RetryPolicy",
     "FaultInjectingSink", "FaultSpec", "FaultStats", "ProcessKilled",
     "RecoveryError", "RecoveryReport", "recover_container", "scan_container",
-    "ExtentLog", "FencedError", "WriterSession", "MultiWriterCoordinator",
+    "ExtentLog", "FencedError", "StaleLogError", "WriterSession",
+    "MultiWriterCoordinator",
     "ParticipantWriter", "SharedExtentSink", "join_container",
     "bufpool", "compression", "encoding", "extents", "faults", "ioengine",
     "metadata", "mpwrite", "pages", "cluster", "colbuf", "recover",

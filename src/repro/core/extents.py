@@ -13,7 +13,9 @@ survived a crash IS the state.
 
 Record types::
 
-    CREATE   frontier initialised past the container header
+    CREATE   frontier initialised past the container header; carries the
+             container's generation id, binding this log to that exact
+             file instance
     JOIN     a writer registers; assigned (writer_id, epoch); takes a lease
     LEASE    heartbeat: extends the writer's lease deadline
     RESERVE  allocates [offset, offset+size) + the global commit seq
@@ -35,8 +37,21 @@ Safety invariants:
   :class:`FencedError` before any record is appended, so a stale-epoch
   writer cannot extend the file or mark garbage committed.
 * **Replay is pure.**  Every record carries its concrete values (offsets,
-  seqs, ids) — replay applies them verbatim and tolerates exactly one torn
-  record at the tail (a crash mid-append), which it drops.
+  seqs, ids) — replay applies them verbatim and tolerates a torn record at
+  the tail (a crash mid-append), which it drops.  The next locked
+  transaction *truncates* that torn tail before appending, so a record
+  appended after a tear is always visible to every later replay.
+* **The log is bound to one container instance.**  CREATE carries the
+  generation id the coordinator also stamped into the container header;
+  a join or recovery that finds a mismatched (or missing) generation
+  refuses the log (:class:`StaleLogError`) instead of replaying state
+  that belongs to a previous file at the same path.
+
+Clock note: lease timestamps are ``time.time()`` (wall clock) because they
+are written by one process and compared in another — ``time.monotonic()``
+deltas are only defined within a single process.  A wall-clock step skews
+lease expiry by the step size; that can only fence a live writer early
+(safe: fencing never corrupts, see above) or delay fencing a dead one.
 """
 
 from __future__ import annotations
@@ -73,6 +88,12 @@ class FencedError(RuntimeError):
     or an explicit fence): every further reservation/commit is refused."""
 
 
+class StaleLogError(RuntimeError):
+    """The side-car log does not belong to this container instance (its
+    generation id disagrees with the container header's), or a CREATE found
+    a non-empty log left behind by a previous run at the same path."""
+
+
 # ---------------------------------------------------------------------------
 # record framing
 
@@ -84,21 +105,32 @@ def _pack_record(rtype: int, payload: dict) -> bytes:
             + struct.pack("<I", crc))
 
 
-def iter_records(raw: bytes):
-    """Yield ``(rtype, payload_dict)`` for every intact record; a torn or
-    corrupt tail terminates iteration silently (crash mid-append)."""
+def scan_records(raw: bytes) -> Tuple[List[Tuple[int, dict]], int]:
+    """``(records, valid_end)``: every intact ``(rtype, payload)`` plus the
+    offset where the intact prefix ends.  A torn or corrupt tail (crash
+    mid-append) terminates the scan; ``valid_end < len(raw)`` marks it so
+    the next transaction can truncate it before appending — otherwise
+    records appended past the tear would be invisible to every replay."""
+    records: List[Tuple[int, dict]] = []
     pos = 0
     while pos + _XREC_HDR.size <= len(raw):
         magic, rtype, flags, plen = _XREC_HDR.unpack_from(raw, pos)
         end = pos + _XREC_HDR.size + plen + 4
         if magic != XLOG_MAGIC or end > len(raw):
-            return
+            break
         body = raw[pos + _XREC_HDR.size : end - 4]
         (crc,) = struct.unpack_from("<I", raw, end - 4)
         if zlib.crc32(struct.pack("<HH", rtype, flags) + body) != crc:
-            return
-        yield rtype, json.loads(body)
+            break
+        records.append((rtype, json.loads(body)))
         pos = end
+    return records, pos
+
+
+def iter_records(raw: bytes):
+    """Yield ``(rtype, payload_dict)`` for every intact record; a torn or
+    corrupt tail terminates iteration silently (crash mid-append)."""
+    yield from scan_records(raw)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +168,7 @@ class LogState:
     """The full allocator state, rebuilt by replaying the side-car log."""
 
     data_start: int = 0
+    generation: Optional[str] = None
     next_offset: int = 0
     next_seq: int = 0
     next_rid: int = 0
@@ -167,45 +200,50 @@ class LogState:
 def replay_log(raw: bytes) -> LogState:
     st = LogState()
     for rtype, d in iter_records(raw):
-        if rtype == XREC_CREATE:
-            st.data_start = st.next_offset = d["start"]
-            st.next_seq = d.get("seq", 0)
-        elif rtype == XREC_JOIN:
-            w = WriterInfo(d["w"], d["e"], d.get("pid", 0),
-                           d.get("li", 5.0), d["t"] + d.get("li", 5.0))
-            st.writers[w.writer_id] = w
-            st.next_writer = max(st.next_writer, w.writer_id + 1)
-            st.next_epoch = max(st.next_epoch, w.epoch + 1)
-        elif rtype == XREC_LEASE:
-            w = st.writers.get(d["w"])
-            if w is not None:
-                w.lease_deadline = d["t"] + w.lease_interval
-        elif rtype == XREC_RESERVE:
-            r = Reservation(d["r"], d["w"], d["e"], d["o"], d["s"], d["q"])
-            st.reservations[r.rid] = r
-            st.next_offset = max(st.next_offset, r.offset + r.size)
-            st.next_seq = max(st.next_seq, r.seq + 1)
-            st.next_rid = max(st.next_rid, r.rid + 1)
-        elif rtype == XREC_COMMIT:
-            r = st.reservations.get(d["r"])
-            if r is not None:
-                r.committed = True
-        elif rtype == XREC_RELEASE:
-            r = st.reservations.get(d["r"])
-            if r is not None:
-                r.released = True
-        elif rtype == XREC_FENCE:
-            w = st.writers.get(d["w"])
-            if w is not None:
-                w.fenced = True
-        elif rtype == XREC_DONE:
-            w = st.writers.get(d["w"])
-            if w is not None:
-                w.done = True
-        elif rtype == XREC_SEAL:
-            st.sealed = True
-            st.seal_info = d
+        _apply_record(st, rtype, d)
     return st
+
+
+def _apply_record(st: LogState, rtype: int, d: dict) -> None:
+    if rtype == XREC_CREATE:
+        st.data_start = st.next_offset = d["start"]
+        st.next_seq = d.get("seq", 0)
+        st.generation = d.get("gen")
+    elif rtype == XREC_JOIN:
+        w = WriterInfo(d["w"], d["e"], d.get("pid", 0),
+                       d.get("li", 5.0), d["t"] + d.get("li", 5.0))
+        st.writers[w.writer_id] = w
+        st.next_writer = max(st.next_writer, w.writer_id + 1)
+        st.next_epoch = max(st.next_epoch, w.epoch + 1)
+    elif rtype == XREC_LEASE:
+        w = st.writers.get(d["w"])
+        if w is not None:
+            w.lease_deadline = d["t"] + w.lease_interval
+    elif rtype == XREC_RESERVE:
+        r = Reservation(d["r"], d["w"], d["e"], d["o"], d["s"], d["q"])
+        st.reservations[r.rid] = r
+        st.next_offset = max(st.next_offset, r.offset + r.size)
+        st.next_seq = max(st.next_seq, r.seq + 1)
+        st.next_rid = max(st.next_rid, r.rid + 1)
+    elif rtype == XREC_COMMIT:
+        r = st.reservations.get(d["r"])
+        if r is not None:
+            r.committed = True
+    elif rtype == XREC_RELEASE:
+        r = st.reservations.get(d["r"])
+        if r is not None:
+            r.released = True
+    elif rtype == XREC_FENCE:
+        w = st.writers.get(d["w"])
+        if w is not None:
+            w.fenced = True
+    elif rtype == XREC_DONE:
+        w = st.writers.get(d["w"])
+        if w is not None:
+            w.done = True
+    elif rtype == XREC_SEAL:
+        st.sealed = True
+        st.seal_info = d
 
 
 # ---------------------------------------------------------------------------
@@ -242,13 +280,25 @@ class ExtentLog:
 
     @classmethod
     def create(cls, container_path: str, data_start: int, *,
-               fsync: bool = True, start_seq: int = 0) -> "ExtentLog":
+               fsync: bool = True, start_seq: int = 0,
+               generation: Optional[str] = None) -> "ExtentLog":
         log = cls(cls.sidecar_path(container_path), fsync=fsync)
 
         def txn(state: LogState, append):
-            if state.data_start == 0 and not state.writers:
-                append(XREC_CREATE, {"start": data_start, "seq": start_seq})
-        log.transact(txn)
+            if state.data_start != 0 or state.writers or state.sealed:
+                # a leftover log from a previous run at the same path must
+                # never be adopted: its sealed flag would fence every new
+                # join, and its reservations describe a different file
+                raise StaleLogError(
+                    f"refusing to create over a non-empty side-car log "
+                    f"({log.path}): remove the stale log first")
+            append(XREC_CREATE, {"start": data_start, "seq": start_seq,
+                                 "gen": generation})
+        try:
+            log.transact(txn)
+        except StaleLogError:
+            log.close()
+            raise
         return log
 
     def close(self) -> None:
@@ -283,7 +333,10 @@ class ExtentLog:
         the end; if ``fn`` raises, nothing is appended."""
         with self._locked():
             raw = self._read_all()
-            state = replay_log(raw)
+            records, valid_end = scan_records(raw)
+            state = LogState()
+            for rtype, d in records:
+                _apply_record(state, rtype, d)
             queued: List[bytes] = []
 
             def append(rtype: int, payload: dict) -> None:
@@ -291,7 +344,13 @@ class ExtentLog:
 
             out = fn(state, append)
             if queued:
-                os.pwrite(self._fd, b"".join(queued), len(raw))
+                if valid_end < len(raw):
+                    # discard the torn tail (crash mid-append) so the new
+                    # records land inside — not after — the replayable
+                    # prefix; appending at len(raw) would make them
+                    # permanently invisible to iter_records/replay_log
+                    os.ftruncate(self._fd, valid_end)
+                os.pwrite(self._fd, b"".join(queued), valid_end)
                 if self._fsync:
                     os.fsync(self._fd)
             return out
@@ -303,13 +362,22 @@ class ExtentLog:
 
     # -- protocol operations ----------------------------------------------
 
-    def join(self, lease_interval: float = 5.0) -> "WriterSession":
+    def join(self, lease_interval: float = 5.0, *,
+             expect_generation: Optional[str] = None) -> "WriterSession":
         def txn(state: LogState, append):
+            if (expect_generation is not None
+                    and state.generation != expect_generation):
+                # the log next to the container belongs to a different
+                # file instance (prior run at the same path): joining it
+                # would reserve extents into the wrong file's layout
+                raise StaleLogError(
+                    f"side-car log generation {state.generation!r} does "
+                    f"not match container generation {expect_generation!r}")
             if state.sealed:
                 raise FencedError("container already sealed")
             wid, epoch = state.next_writer, state.next_epoch
             append(XREC_JOIN, {"w": wid, "e": epoch, "pid": os.getpid(),
-                               "li": lease_interval, "t": time.monotonic()})
+                               "li": lease_interval, "t": time.time()})
             return wid, epoch
         wid, epoch = self.transact(txn)
         return WriterSession(self, wid, epoch, lease_interval)
@@ -342,7 +410,8 @@ class ExtentLog:
     def heartbeat(self, writer_id: int, epoch: int) -> None:
         def txn(state: LogState, append):
             state.check_writable(writer_id, epoch)
-            append(XREC_LEASE, {"w": writer_id, "t": time.monotonic()})
+            # wall clock, not monotonic: deadlines cross process boundaries
+            append(XREC_LEASE, {"w": writer_id, "t": time.time()})
         self.transact(txn)
 
     def done(self, writer_id: int, epoch: int) -> None:

@@ -35,6 +35,7 @@ from __future__ import annotations
 import os
 import threading
 import time
+import uuid
 from typing import Optional, Tuple
 
 from .container import Sink, open_sink
@@ -43,6 +44,7 @@ from .extents import (
     FencedError,
     LogState,
     Reservation,
+    StaleLogError,
     WriterSession,
 )
 from .metadata import (
@@ -180,7 +182,10 @@ class ParticipantWriter(ParallelWriter):
             try:
                 self._mp_session.heartbeat()
             except FencedError as e:
-                self._poison(e)
+                # a beat racing the shutdown may observe this writer's own
+                # terminal DONE — that is a clean close, not a fencing
+                if not self._hb_stop.is_set():
+                    self._poison(e)
                 return
             except OSError:
                 pass  # transient side-car hiccup: the next beat retries
@@ -199,23 +204,31 @@ class ParticipantWriter(ParallelWriter):
                 self._poison(e)
                 raise
 
+    def _stop_heartbeat(self) -> None:
+        self._hb_stop.set()
+        if self._hb.is_alive():
+            self._hb.join(timeout=10)
+
     def _finalize(self) -> None:
         # the participant's half of the rendezvous: data durable FIRST,
         # DONE second — the coordinator may seal the moment every writer
-        # is done, so DONE must never precede the bytes it vouches for
+        # is done, so DONE must never precede the bytes it vouches for.
+        # The heartbeat keeps running through the drain + fsync above and
+        # here: a close whose final fsync of large buffered clusters
+        # outlasts the fencing grace (~2x lease_interval) must stay
+        # leased, or the coordinator fences a healthy writer mid-close
+        # and spuriously degrades the seal.
         self._io.fsync()
+        self._stop_heartbeat()
         if self._commit_error is None:
             self._mp_session.done()
 
     def close(self) -> None:
-        # stop the heartbeat BEFORE finalizing: a beat racing past done()
-        # would see a terminal writer and spuriously poison the close
-        self._hb_stop.set()
-        if self._hb.is_alive():
-            self._hb.join(timeout=10)
         try:
             super().close()
         finally:
+            # poisoned closes skip _finalize: make sure the beat dies
+            self._stop_heartbeat()
             if self._owns_log:
                 self._mp_session.log.close()
 
@@ -227,16 +240,26 @@ def join_container(path, schema: Optional[Schema] = None,
 
     Reads the schema from the container header when not given; ``sink``
     lets tests interpose a fault-injection wrapper over the data file.
+    The header is always read for the container's generation id, so a
+    stale side-car log left next to the path by a previous run raises
+    :class:`~repro.core.extents.StaleLogError` instead of joining it.
     """
     path = os.fspath(path)
     options = options or WriteOptions()
     inner = sink if sink is not None else open_sink(path, create=False)
+    hdr16 = inner.pread(0, _ENV_HDR.size)
+    _m, _t, plen = _ENV_HDR.unpack(hdr16)
+    hdr_schema, hdr_opts = parse_header(
+        inner.pread(0, _ENV_HDR.size + plen + 4))
     if schema is None:
-        hdr16 = inner.pread(0, _ENV_HDR.size)
-        _m, _t, plen = _ENV_HDR.unpack(hdr16)
-        schema, _opts = parse_header(inner.pread(0, _ENV_HDR.size + plen + 4))
+        schema = hdr_schema
     log = ExtentLog(ExtentLog.sidecar_path(path), fsync=options.mpw_log_fsync)
-    session = log.join(options.lease_interval)
+    try:
+        session = log.join(options.lease_interval,
+                           expect_generation=hdr_opts.get("mpw_gen"))
+    except BaseException:
+        log.close()
+        raise
     return ParticipantWriter(schema, inner, session, options, owns_log=True)
 
 
@@ -259,18 +282,32 @@ class MultiWriterCoordinator:
         if not self.options.buffered or not self.options.journal:
             raise ValueError(
                 "multi-process writing requires buffered=True and journal=True")
+        # the generation id binds header, side-car log, and every join to
+        # THIS file instance: a stale log (or a stale writer) from a prior
+        # run at the same path can never be mistaken for ours
+        self.generation = uuid.uuid4().hex
         self.sink = open_sink(self.path, create=True)
         hdr = self._header_bytes()
         self.sink.pwrite(self.sink.reserve(len(hdr)), hdr)
         self.sink.fsync()  # participants + recovery read it right away
         self._header_loc = (0, len(hdr))
+        # a leftover side-car from a crashed or degraded-sealed previous
+        # run (only a CLEAN seal unlinks it) must not be adopted: if
+        # sealed it would fence every join, and its reservations point
+        # into the file we just truncated
+        try:
+            os.unlink(ExtentLog.sidecar_path(self.path))
+        except FileNotFoundError:
+            pass
         self.log = ExtentLog.create(self.path, len(hdr),
-                                    fsync=self.options.mpw_log_fsync)
+                                    fsync=self.options.mpw_log_fsync,
+                                    generation=self.generation)
         self._sealed = False
         self.report: Optional[dict] = None
 
     def _header_bytes(self) -> bytes:
         hdr_opts = self.options.as_dict()
+        hdr_opts["mpw_gen"] = self.generation
         if self.options.precondition:
             hdr_opts["encodings"] = [c.encoding for c in self.schema.columns]
         else:
@@ -280,7 +317,8 @@ class MultiWriterCoordinator:
     def participant(self, options: Optional[WriteOptions] = None) -> ParticipantWriter:
         """An in-process participant (shares this coordinator's log fd)."""
         opts = options or self.options
-        session = self.log.join(opts.lease_interval)
+        session = self.log.join(opts.lease_interval,
+                                expect_generation=self.generation)
         return ParticipantWriter(self.schema, open_sink(self.path, create=False),
                                  session, opts)
 
@@ -305,13 +343,15 @@ class MultiWriterCoordinator:
         deadline = time.monotonic() + timeout
         while True:
             st = self.log.snapshot()
-            now = time.monotonic()
+            # lease deadlines are wall-clock (written by other processes);
+            # the rendezvous timeout is local, so monotonic is fine for it
+            now_wall = time.time()
             for w in st.writers.values():
                 # 2x lease-interval grace: one missed heartbeat survives,
                 # a silent writer is fenced without waiting for the full
                 # rendezvous timeout
                 if (not w.done and not w.fenced
-                        and now > w.lease_deadline + w.lease_interval):
+                        and now_wall > w.lease_deadline + w.lease_interval):
                     self.log.fence(w.writer_id, "lease expired")
                     w.fenced = True
             undone = [w for w in st.writers.values()
@@ -320,7 +360,7 @@ class MultiWriterCoordinator:
                             and len(st.writers) < expect_writers)
             if not undone and not waiting_join:
                 break
-            if now >= deadline:
+            if time.monotonic() >= deadline:
                 for w in undone:
                     self.log.fence(w.writer_id, "rendezvous timeout")
                 break

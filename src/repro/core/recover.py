@@ -368,14 +368,37 @@ def scan_container(
 
 
 def _load_xlog_state(container_path: str):
-    """Replayed side-car reservation-log state, or ``None`` when absent
-    (single-writer files) or unreadable (recovery must still proceed)."""
+    """``(state, stale)``: the replayed side-car reservation-log state, or
+    ``(None, False)`` when absent (single-writer files) or unreadable
+    (recovery must still proceed).
+
+    The log is only trusted when its generation id matches the one in the
+    container header — CREATE and the header are stamped with the same id
+    by the coordinator.  A mismatch means the log belongs to a *previous*
+    file at this path (a crashed or degraded run never unlinks it): its
+    fencing state would drop every valid cluster of the current file, so
+    it is ignored and reported as ``(None, True)`` instead."""
     from .extents import XLOG_SUFFIX, replay_log
+    path = os.fspath(container_path)
     try:
-        with open(os.fspath(container_path) + XLOG_SUFFIX, "rb") as f:
-            return replay_log(f.read())
+        with open(path + XLOG_SUFFIX, "rb") as f:
+            state = replay_log(f.read())
     except OSError:
-        return None
+        return None, False
+    expect = None
+    try:
+        with open(path, "rb") as f:
+            hdr = f.read(_ENV_HDR.size)
+            if len(hdr) == _ENV_HDR.size:
+                magic, _t, plen = _ENV_HDR.unpack(hdr)
+                if magic == _ENV_MAGIC:
+                    _sch, opts = parse_header(hdr + f.read(plen + 4))
+                    expect = opts.get("mpw_gen")
+    except (OSError, IOError, ValueError, KeyError, struct.error):
+        expect = None
+    if state.generation != expect:
+        return None, True
+    return state, False
 
 
 def _footer_clusters(sink: Sink) -> Optional[int]:
@@ -413,12 +436,15 @@ def recover_container(
     When the source is a path and a multi-writer side-car reservation log
     (``<path>.mpwlog``) sits next to it — a crash before the coordinator's
     rendezvous sealed the file — its replayed state drives fencing
-    enforcement and per-writer attribution (see :func:`scan_container`)."""
+    enforcement and per-writer attribution (see :func:`scan_container`).
+    The log must carry the container header's generation id: a stale log
+    from a previous file at the same path is ignored (plain scan, no
+    fencing) and flagged as ``multiwriter["stale_log_ignored"]``."""
     owns = False
-    xlog_state = None
+    xlog_state, xlog_stale = None, False
     if isinstance(source, (str, os.PathLike)):
         path = os.fspath(source)
-        xlog_state = _load_xlog_state(path)
+        xlog_state, xlog_stale = _load_xlog_state(path)
         if output is not None:
             if not dry_run:
                 shutil.copyfile(path, output)
@@ -439,6 +465,10 @@ def recover_container(
         schema, _options, clusters, report = scan_container(
             sink, verify_pages=verify_pages, xlog_state=xlog_state
         )
+        if xlog_stale:
+            # a side-car log was present but belongs to a previous file
+            # at this path: plain scan ran without fencing enforcement
+            report.multiwriter = {"stale_log_ignored": True}
         report.output = output
         if dry_run:
             return report

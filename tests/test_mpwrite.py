@@ -33,6 +33,7 @@ from repro.core import (
     RetryPolicy,
     Schema,
     SequentialWriter,
+    StaleLogError,
     WriteOptions,
     join_container,
     recover_container,
@@ -187,10 +188,54 @@ def test_xlog_lease_expiry(tmp_path):
     s = log.join(0.05)
     time.sleep(0.15)
     st = log.snapshot()
-    assert st.writers[s.writer_id].expired(time.monotonic())
+    # lease deadlines are wall-clock: they cross process boundaries
+    assert st.writers[s.writer_id].expired(time.time())
     s.heartbeat()  # not fenced yet: the lease can still be renewed
     st = log.snapshot()
-    assert not st.writers[s.writer_id].expired(time.monotonic())
+    assert not st.writers[s.writer_id].expired(time.time())
+    log.close()
+
+
+def test_xlog_append_after_torn_tail_truncates(tmp_path):
+    c = str(tmp_path / "f.rntj")
+    log = ExtentLog.create(c, data_start=64, fsync=False)
+    s = log.join(1.0)
+    s.reserve(10)
+    log.close()
+    p = Path(ExtentLog.sidecar_path(c))
+    raw = bytearray(p.read_bytes())
+    raw[-1] ^= 0xFF  # tear the RESERVE record (crash mid-append)
+    p.write_bytes(bytes(raw))
+
+    # the next transaction must truncate the torn tail and append at the
+    # valid end — a record appended past the tear would be invisible to
+    # every replay, freezing next_offset and handing out overlaps
+    log = ExtentLog(str(p), fsync=False)
+    r = log.reserve(s.writer_id, s.epoch, 20)
+    assert r.offset == 64  # the torn RESERVE never happened
+    st = replay_log(p.read_bytes())
+    assert len(st.reservations) == 1
+    assert st.next_offset == 84
+    r2 = log.reserve(s.writer_id, s.epoch, 5)
+    assert r2.offset == 84  # frontier advanced: no overlapping extents
+    log.close()
+
+
+def test_xlog_create_refuses_leftover_log(tmp_path):
+    c = str(tmp_path / "f.rntj")
+    log = ExtentLog.create(c, data_start=64, fsync=False)
+    log.join(1.0)
+    log.close()
+    with pytest.raises(StaleLogError):
+        ExtentLog.create(c, data_start=64, fsync=False)
+
+
+def test_xlog_join_checks_generation(tmp_path):
+    c = str(tmp_path / "f.rntj")
+    log = ExtentLog.create(c, data_start=64, fsync=False, generation="genA")
+    log.join(1.0, expect_generation="genA")
+    with pytest.raises(StaleLogError):
+        log.join(1.0, expect_generation="genB")
     log.close()
 
 
@@ -363,6 +408,104 @@ def test_fenced_straggler_cannot_corrupt_sealed_file(tmp_path):
     w._hb_stop.set()
 
 
+def test_new_session_replaces_stale_sidecar_log(tmp_path):
+    # run 1 ends DEGRADED, which keeps the (sealed) side-car log on disk.
+    # run 2 at the same path must not adopt it: a sealed stale log would
+    # fence every new join, and its reservations point into a file that
+    # the new coordinator just truncated.
+    path = str(tmp_path / "mp.rntj")
+    entries = make_entries(40)
+    opts = mp_options(cluster_bytes=1024)
+    coord = MultiWriterCoordinator(SCHEMA, path, opts)
+    w = coord.participant()
+    ctx = w.create_fill_context()
+    for e in entries[:20]:
+        ctx.fill(e)
+    ctx.flush_cluster()
+    w._hb_stop.set()
+    w._hb.join()
+    report = coord.seal(expect_writers=1)  # lease expiry → degraded
+    coord.close()
+    assert report["fenced"] == [w.writer_id]
+    assert os.path.exists(ExtentLog.sidecar_path(path))
+
+    coord = MultiWriterCoordinator(SCHEMA, path, opts)
+    w2 = coord.participant()
+    ctx2 = w2.create_fill_context()
+    for e in entries:
+        ctx2.fill(e)
+    ctx2.close()
+    w2.close()
+    report = coord.seal(expect_writers=1)
+    coord.close()
+    assert not report["fenced"] and not report["salvaged"]
+    assert report["entries"] == 40
+    got = read_all(path)
+    assert sorted(e["id"] for e in got) == list(range(40))
+
+
+def test_join_refuses_foreign_generation_log(tmp_path):
+    path = str(tmp_path / "mp.rntj")
+    coord = MultiWriterCoordinator(SCHEMA, path, mp_options())
+    # swap in a log created for a DIFFERENT container instance
+    os.unlink(ExtentLog.sidecar_path(path))
+    foreign = ExtentLog.create(path, 64, fsync=False,
+                               generation="someone-else")
+    foreign.close()
+    with pytest.raises(StaleLogError):
+        join_container(path, schema=SCHEMA, options=mp_options())
+    coord.sink.close()
+    coord.log.close()
+
+
+class _SlowFsyncSink:
+    """Delegating sink whose data fsync stalls — models a close whose
+    final drain/fsync of large buffered clusters outlasts the fencing
+    grace (~2x lease_interval)."""
+
+    def __init__(self, inner, delay):
+        self.inner = inner
+        self.delay = delay
+
+    def fsync(self):
+        time.sleep(self.delay)
+        self.inner.fsync()
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_slow_close_is_not_fenced(tmp_path):
+    # the lease heartbeat must keep running through close's drain + data
+    # fsync: a healthy writer whose final fsync exceeds the fencing grace
+    # would otherwise be fenced mid-close and spuriously degrade the seal
+    path = str(tmp_path / "mp.rntj")
+    entries = make_entries(40)
+    opts = mp_options(lease_interval=0.2)
+    coord = MultiWriterCoordinator(SCHEMA, path, opts)
+    inner = open_sink(path, create=False)
+    w = join_container(path, schema=SCHEMA, options=opts,
+                       sink=_SlowFsyncSink(inner, delay=1.2))
+    ctx = w.create_fill_context()
+    for e in entries:
+        ctx.fill(e)
+
+    def closer():
+        ctx.close()
+        w.close()
+
+    t = threading.Thread(target=closer)
+    t.start()
+    report = coord.seal(expect_writers=1, timeout=30.0)
+    coord.close()
+    t.join()
+    assert not report["fenced"] and not report["salvaged"], (
+        "healthy writer fenced during its close-time fsync")
+    assert report["entries"] == 40
+    got = read_all(path)
+    assert sorted(e["id"] for e in got) == list(range(40))
+
+
 # ---------------------------------------------------------------------------
 # recovery of multi-writer files
 
@@ -451,6 +594,28 @@ def test_recover_drops_unreserved_and_stale_epoch_extents(tmp_path):
     assert rep.clusters_salvaged == full - 1
     assert any("no reservation" in d["reason"] for d in rep.clusters_dropped)
     sink.close()
+
+
+def test_recover_ignores_stale_foreign_log(tmp_path):
+    # a single-writer file written at a path where a crashed multi-writer
+    # run left its side-car log behind: fencing enforcement from that log
+    # would drop every valid cluster ("no reservation"), so recovery must
+    # detect the generation mismatch and fall back to a plain scan
+    path = str(tmp_path / "f.rntj")
+    entries = make_entries(30)
+    w = SequentialWriter(SCHEMA, open_sink(path, create=True),
+                         mp_options(cluster_bytes=1024))
+    for e in entries:
+        w.fill(e)
+    w.close()
+    stale = ExtentLog.create(path, 64, fsync=False, generation="dead-run")
+    stale.close()
+
+    rep = recover_container(path, force=True)
+    assert rep.multiwriter == {"stale_log_ignored": True}
+    assert rep.clusters_salvaged >= 1 and not rep.clusters_dropped
+    got = read_all(path)
+    assert sorted(e["id"] for e in got) == list(range(30))
 
 
 def test_recover_orphaned_reservations_reported(tmp_path):
