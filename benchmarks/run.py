@@ -41,6 +41,8 @@ BENCHMARKS = [
      "BENCH_mpwrite.json"),
     ("bench_pipeline", "python benchmarks/bench_pipeline.py",
      "BENCH_pipeline.json"),
+    ("bench_remote", "python benchmarks/bench_remote.py",
+     "BENCH_remote.json"),
     ("fig2_devnull", "python -m benchmarks.run", "stdout CSV row"),
     ("fig3_ssd", "python -m benchmarks.run", "stdout CSV row"),
     ("fig4_hdd", "python -m benchmarks.run", "stdout CSV row"),

@@ -34,6 +34,7 @@ from .container import (
     FileSink,
     AsyncFileSink,
     DevNullSink,
+    LatencyModel,
     MemorySink,
     ThrottledSink,
     close_all,
@@ -42,8 +43,25 @@ from .container import (
 from .stats import ReaderStats, WriterStats, CountingLock
 from .colbuf import ColumnBuffer
 from .bufpool import BufferPool, PoolStats, Recyclable
-from .ioengine import IOEngine, RetryPolicy
-from .faults import FaultInjectingSink, FaultSpec, FaultStats, ProcessKilled
+from .ioengine import IOEngine, Retrier, RetryPolicy
+from .faults import (
+    FaultInjectingSink,
+    FaultSchedule,
+    FaultSpec,
+    FaultStats,
+    ProcessKilled,
+)
+from .remote import (
+    FakeTransport,
+    ObjectBucket,
+    ObjectStoreSink,
+    RemoteOptions,
+    Transport,
+    mem_bucket,
+    open_remote_sink,
+    register_transport,
+    salvage_remote,
+)
 from .recover import (
     RecoveryError,
     RecoveryReport,
@@ -59,7 +77,7 @@ from .mpwrite import (
 )
 from . import (
     bufpool, compression, encoding, extents, faults, ioengine, metadata,
-    mpwrite, pages, cluster, colbuf, recover,
+    mpwrite, pages, cluster, colbuf, recover, remote,
 )
 
 __all__ = [
@@ -68,14 +86,20 @@ __all__ = [
     "recompose_entries", "WriteOptions", "SequentialWriter", "ParallelWriter",
     "FillContext", "write_entries", "RNTJReader", "ReadOptions",
     "BufferMerger", "merge_files", "Sink", "FileSink", "AsyncFileSink",
-    "DevNullSink", "MemorySink", "ThrottledSink", "close_all", "open_sink",
+    "DevNullSink", "LatencyModel", "MemorySink", "ThrottledSink",
+    "close_all", "open_sink",
     "WriterStats", "ReaderStats", "CountingLock", "ColumnBuffer",
-    "BufferPool", "PoolStats", "Recyclable", "IOEngine", "RetryPolicy",
-    "FaultInjectingSink", "FaultSpec", "FaultStats", "ProcessKilled",
+    "BufferPool", "PoolStats", "Recyclable", "IOEngine", "Retrier",
+    "RetryPolicy",
+    "FaultInjectingSink", "FaultSchedule", "FaultSpec", "FaultStats",
+    "ProcessKilled",
+    "FakeTransport", "ObjectBucket", "ObjectStoreSink", "RemoteOptions",
+    "Transport", "mem_bucket", "open_remote_sink", "register_transport",
+    "salvage_remote",
     "RecoveryError", "RecoveryReport", "recover_container", "scan_container",
     "ExtentLog", "FencedError", "StaleLogError", "WriterSession",
     "MultiWriterCoordinator",
     "ParticipantWriter", "SharedExtentSink", "join_container",
     "bufpool", "compression", "encoding", "extents", "faults", "ioengine",
-    "metadata", "mpwrite", "pages", "cluster", "colbuf", "recover",
+    "metadata", "mpwrite", "pages", "cluster", "colbuf", "recover", "remote",
 ]

@@ -155,6 +155,20 @@ class Sink:
         with self._stat_lock:
             self.io.fsync_failures += 1
 
+    # remote-transport accounting (DESIGN.md §10): hedged ranged reads and
+    # multipart→serial-put degradations, counted by ObjectStoreSink
+    def _count_hedge(self) -> None:
+        with self._stat_lock:
+            self.io.hedges += 1
+
+    def _count_hedge_win(self) -> None:
+        with self._stat_lock:
+            self.io.hedge_wins += 1
+
+    def _count_degradation(self) -> None:
+        with self._stat_lock:
+            self.io.degradations += 1
+
     def fallocate(self, offset: int, size: int) -> None:  # opt-1 hook
         with self._stat_lock:
             self.io.fallocate_calls += 1
@@ -162,6 +176,13 @@ class Sink:
     def fsync(self) -> None:
         with self._stat_lock:
             self.io.fsync_calls += 1
+
+    def flush(self) -> None:
+        """Push any sink-internal buffering toward durable storage without
+        the durability barrier of :meth:`fsync`.  Local sinks have no such
+        buffering — the base implementation is a no-op; the remote
+        :class:`~repro.core.remote.ObjectStoreSink` uploads every
+        completed-but-unsent part."""
 
     def close(self) -> None:
         pass
@@ -424,6 +445,54 @@ class MemorySink(Sink):
         return True
 
 
+class LatencyModel:
+    """Simulated shared-resource latency: busy-until charge + centered sleep.
+
+    The resource (a disk, a NIC) is modeled as a busy-until timestamp:
+    each operation charges ``nbytes / bw`` seconds to the window under a
+    lock — concurrent callers serialize at the resource, like a request
+    queue — and then sleeps until its own completion time.  A per-op
+    latency floor (an RTT) does NOT occupy the shared window: concurrent
+    round trips overlap, only bytes contend.  One implementation serves
+    both :class:`ThrottledSink` (device bandwidth, paper Figs. 3–4) and
+    the remote ``FakeTransport`` (network RTT + shared NIC bandwidth).
+    """
+
+    #: time.sleep() on this container overshoots by ~0.1-1 ms, which at
+    #: NVMe-class simulated bandwidths would make the modeled device
+    #: slower than its nominal bw (a 2 MB extent at 2 GB/s costs 1 ms).
+    #: Undershooting the target by half the typical overshoot centers the
+    #: per-completion error near zero without burning a core on a
+    #: spin-wait; aggregate occupancy stays exact either way — it is
+    #: carried by the busy-until timestamp, not by the sleeps.
+    SLEEP_SLOP = 0.0005
+
+    def __init__(self, bw: float = 0.0) -> None:
+        self.bw = bw  # bytes/second; 0 = unlimited
+        self._lock = threading.Lock()
+        self._busy_until = time.perf_counter()
+
+    def charge(self, nbytes: int, bw: Optional[float] = None,
+               floor_s: float = 0.0) -> float:
+        """Extend the busy window by this operation's byte cost; returns
+        the completion timestamp the caller must :meth:`settle` to.
+        ``floor_s`` is a per-op latency floor (RTT + injected slow-tail
+        delay) added *outside* the shared window."""
+        eff = self.bw if bw is None else bw
+        cost = nbytes / eff if eff else 0.0
+        with self._lock:
+            now = time.perf_counter()
+            start = max(now, self._busy_until)
+            done = start + cost
+            self._busy_until = done
+        return max(done, now + floor_s)
+
+    def settle(self, done: float) -> None:
+        delay = done - time.perf_counter()
+        if delay > self.SLEEP_SLOP:
+            time.sleep(delay - self.SLEEP_SLOP)
+
+
 class ThrottledSink(Sink):
     """Wraps another sink and enforces a byte bandwidth on writes.
 
@@ -431,6 +500,8 @@ class ThrottledSink(Sink):
     (771 / 1075 MB/s) and HDD (217 MB/s) on this container.  When
     ``fallocated`` extents are written, the effective bandwidth is
     ``bw_prealloc`` (the paper's Fig. 3 dashed line), otherwise ``bw``.
+    The busy-window timing itself lives in :class:`LatencyModel`, shared
+    with the remote transport simulator.
     """
 
     def __init__(self, inner: Sink, bw: float, bw_prealloc: Optional[float] = None):
@@ -438,8 +509,8 @@ class ThrottledSink(Sink):
         self.inner = inner
         self.bw = bw
         self.bw_prealloc = bw_prealloc if bw_prealloc is not None else bw
-        self._tlock = threading.Lock()
-        self._busy_until = time.perf_counter()
+        self._model = LatencyModel()
+        self._tlock = threading.Lock()  # guards _prealloc
         self._prealloc: list = []  # (start, end) fallocated extents
 
     def reserve(self, size: int) -> int:
@@ -450,38 +521,20 @@ class ThrottledSink(Sink):
         return self.inner.size
 
     def _is_prealloc(self, offset: int, size: int) -> bool:
-        for s, e in self._prealloc:
-            if offset >= s and offset + size <= e:
-                return True
+        with self._tlock:
+            for s, e in self._prealloc:
+                if offset >= s and offset + size <= e:
+                    return True
         return False
 
     def _charge(self, offset: int, nbytes: int) -> float:
-        """Extend the device busy window by this write's cost; returns the
-        completion timestamp the caller must sleep until."""
+        """Charge this write to the shared device window at the effective
+        bandwidth; returns the completion timestamp to settle to."""
         bw = self.bw_prealloc if self._is_prealloc(offset, nbytes) else self.bw
-        cost = nbytes / bw
-        # The device is a single shared resource: model it as a busy-until
-        # timestamp; each write extends it and the caller sleeps until its
-        # own completion time (writes from many threads serialize at the
-        # device, like a request queue).
-        with self._tlock:
-            now = time.perf_counter()
-            start = max(now, self._busy_until)
-            done = start + cost
-            self._busy_until = done
-        return done
+        return self._model.charge(nbytes, bw=bw)
 
     def _settle(self, done: float) -> None:
-        # time.sleep() on this container overshoots by ~0.1-1 ms, which at
-        # NVMe-class simulated bandwidths would make the modeled device
-        # slower than its nominal bw (a 2 MB extent at 2 GB/s costs 1 ms).
-        # Undershooting the target by half the typical overshoot centers
-        # the per-completion error near zero without burning a core on a
-        # spin-wait; aggregate device occupancy stays exact either way —
-        # it is carried by the _busy_until timestamp, not by the sleeps.
-        delay = done - time.perf_counter()
-        if delay > 0.0005:
-            time.sleep(delay - 0.0005)
+        self._model.settle(done)
 
     def pwrite(self, offset: int, data: bytes) -> None:
         done = self._charge(offset, len(data))
@@ -526,13 +579,20 @@ def open_sink(path, create: bool = True, async_io: bool = False) -> Sink:
     ``/dev/null``/``devnull``/``null:`` → :class:`DevNullSink`; ``mem:``
     → :class:`MemorySink`; an ``async:`` prefix (or ``async_io=True``)
     → :class:`AsyncFileSink`, which lets the I/O engine use io_uring
-    ring submission when available; anything else → :class:`FileSink`.
+    ring submission when available; a ``scheme://bucket/key`` URL (e.g.
+    ``mem-s3://bucket/file.rntj``, or ``s3://`` once a real transport is
+    registered) → :class:`~repro.core.remote.ObjectStoreSink` over the
+    scheme's registered transport (DESIGN.md §10); anything else →
+    :class:`FileSink`.
     """
     path = os.fspath(path)  # accept str and os.PathLike alike
     if path in ("/dev/null", "devnull", "null:"):
         return DevNullSink()
     if path == "mem:":
         return MemorySink()
+    if "://" in path:
+        from .remote import open_remote_sink  # local import: no cycle
+        return open_remote_sink(path, create=create)
     if path.startswith("async:"):
         return AsyncFileSink(path[len("async:"):], create=create)
     if async_io:

@@ -1,13 +1,13 @@
-"""Deterministic fault injection for the write path (DESIGN.md §8.1).
+"""Deterministic fault injection for the I/O paths (DESIGN.md §8.1, §10).
 
 :class:`FaultInjectingSink` wraps any :class:`~repro.core.container.Sink`
 and injects storage faults on the way through: transient/permanent
 ``EIO``/``ENOSPC`` errors, short (torn) writes that persist a prefix and
-then fail, fsync failures, latency spikes, and *process-kill points* that
-freeze the file at an exact byte count — the writer sees an unrecoverable
-exception and everything written after the kill point is lost, which is
-how tests and ``tools/chaos.py`` produce the torn files that
-:mod:`repro.core.recover` must salvage.
+then fail, torn reads, fsync failures, latency spikes, and *process-kill
+points* that freeze the file at an exact byte count — the writer sees an
+unrecoverable exception and everything written after the kill point is
+lost, which is how tests and ``tools/chaos.py`` produce the torn files
+that :mod:`repro.core.recover` must salvage.
 
 Faults come from two sources, combinable:
 
@@ -18,12 +18,24 @@ Faults come from two sources, combinable:
   errors at ``error_rate`` per matching call.  Same seed, same workload →
   same fault sequence, so chaos runs are reproducible.
 
+The decision core lives in :class:`FaultSchedule`, keyed by free-form op
+names — the sink keys it by ``"write"``/``"fsync"``/``"read"``; the
+remote :class:`~repro.core.remote.FakeTransport` reuses the same engine
+keyed by transport ops (``"put"``/``"part"``/``"get"``/``"create"``/
+``"complete"``/``"abort"``), so one fault-plan vocabulary covers local
+device chaos and simulated object-store chaos alike.
+
 Because the base :class:`Sink.pwritev` decomposes vectored writes into one
 ``pwrite`` per part (and every concrete sink falls back to it when
 ``pwrite`` is overridden), this wrapper observes *every byte* of every
 engine path — monolithic, striped, write-behind, and ring submission all
-funnel through here.  A wrapped sink never advertises ``native_ring``, so
-the engine cannot bypass it through the kernel.
+funnel through here.  The same holds on the read side: the base
+``pread_into`` copies through ``pread``, and :class:`FaultInjectingSink`
+additionally overrides ``pread_into`` itself so the reader's zero-copy
+staging path sees the schedule first-hand (torn reads fill a prefix into
+the caller's buffer before failing — exercising the stale-tail contract).
+A wrapped sink never advertises ``native_ring``, so the engine cannot
+bypass it through the kernel.
 
 Byte-count determinism: ``at_byte`` thresholds count bytes *persisted to
 the inner sink* (retried bytes count again).  With a single producer and
@@ -39,7 +51,7 @@ import os
 import random
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from .container import MemorySink, Sink
@@ -55,7 +67,8 @@ class ProcessKilled(RuntimeError):
 class FaultSpec:
     """One scripted fault rule.
 
-    op        -- "write", "fsync", or "read"
+    op        -- "write", "fsync", or "read" on a sink; a transport op
+                 name ("put", "part", "get", ...) on a FakeTransport
     kind      -- "error" | "short" | "latency" | "kill"
     err       -- errno for error/short kinds
     at_call   -- fire on the Nth matching call (0-based); None = any call
@@ -63,8 +76,9 @@ class FaultSpec:
     at_byte   -- fire when cumulative persisted write bytes cross this
                  threshold (write ops only); None = any
     count     -- times to fire (-1 = every matching call, i.e. permanent)
-    fraction  -- portion of the write persisted before a short/kill fault
-                 when at_byte does not pin the split point
+    fraction  -- portion of the write persisted (or of the read delivered)
+                 before a short/kill fault when at_byte does not pin the
+                 split point
     delay_s   -- sleep for latency faults
     """
 
@@ -101,6 +115,16 @@ class FaultSpec:
                          fraction=fraction, at_call=at_call, at_byte=at_byte)
 
     @staticmethod
+    def short_read(err: int = errno.EIO, fraction: float = 0.5,
+                   count: int = 1, at_call: Optional[int] = None,
+                   op: str = "read") -> "FaultSpec":
+        """A torn response: a prefix of the requested bytes arrives, then
+        the op fails with ``err`` (retryable — a fresh attempt may get the
+        whole range)."""
+        return FaultSpec(op=op, kind="short", err=err, count=count,
+                         fraction=fraction, at_call=at_call)
+
+    @staticmethod
     def fsync_error(err: int = errno.EIO, count: int = 1) -> "FaultSpec":
         return FaultSpec(op="fsync", kind="error", err=err, count=count)
 
@@ -109,17 +133,18 @@ class FaultSpec:
         return FaultSpec(op=op, kind="latency", delay_s=delay_s, count=count)
 
     @staticmethod
-    def kill_at(byte: int) -> "FaultSpec":
+    def kill_at(byte: int, op: str = "write") -> "FaultSpec":
         """Kill the process once cumulative persisted bytes reach ``byte``:
         the crossing write persists exactly up to the threshold, then every
         subsequent operation raises :class:`ProcessKilled`."""
-        return FaultSpec(op="write", kind="kill", at_byte=byte, count=1)
+        return FaultSpec(op=op, kind="kill", at_byte=byte, count=1)
 
 
 @dataclass
 class FaultStats:
     errors: int = 0
     short_writes: int = 0
+    short_reads: int = 0
     latencies: int = 0
     fsync_errors: int = 0
     kills: int = 0
@@ -127,20 +152,113 @@ class FaultStats:
 
     @property
     def injected(self) -> int:
-        return (self.errors + self.short_writes + self.latencies
-                + self.fsync_errors + self.kills)
+        return (self.errors + self.short_writes + self.short_reads
+                + self.latencies + self.fsync_errors + self.kills)
 
     def as_dict(self) -> dict:
         return {
             "errors": self.errors, "short_writes": self.short_writes,
+            "short_reads": self.short_reads,
             "latencies": self.latencies, "fsync_errors": self.fsync_errors,
             "kills": self.kills, "random_errors": self.random_errors,
             "injected": self.injected,
         }
 
 
+def injected_os_error(err: int) -> OSError:
+    return OSError(err, os.strerror(err) + " (injected)")
+
+
+class FaultSchedule:
+    """The scripted + seeded fault decision engine, keyed by op name.
+
+    Holds the rule list, per-op call counters, the cumulative
+    persisted-byte counter that ``at_byte`` rules trigger on, the
+    dead-after-kill flag, and the :class:`FaultStats`.  Thread-safe.
+    :class:`FaultInjectingSink` keys it by sink ops; the remote
+    :class:`~repro.core.remote.FakeTransport` keys the identical engine
+    by transport ops — one schedule, one vocabulary, two fault surfaces.
+    """
+
+    def __init__(
+        self,
+        faults: Sequence[FaultSpec] = (),
+        seed: Optional[int] = None,
+        error_rate: float = 0.0,
+        errnos: Sequence[int] = (errno.EIO,),
+        random_ops: Sequence[str] = ("write",),
+    ) -> None:
+        self._rules: List[FaultSpec] = list(faults)
+        self._fired = [0] * len(self._rules)
+        self._rng = random.Random(seed) if seed is not None else None
+        self._error_rate = float(error_rate)
+        self._errnos = tuple(errnos)
+        self._random_ops = frozenset(random_ops)
+        self._mu = threading.Lock()
+        self._calls: dict = {}
+        self.persisted_bytes = 0   # bytes actually persisted downstream
+        self.dead = False          # a kill point fired
+        self.killed_at: Optional[int] = None
+        self.stats = FaultStats()
+
+    def decide(self, op: str, offset: int = 0, nbytes: int = 0):
+        """Pick the fault (if any) for this call.  Returns (rule, persisted)
+        where ``persisted`` is the byte counter before this operation."""
+        with self._mu:
+            idx = self._calls.get(op, 0)
+            self._calls[op] = idx + 1
+            persisted = self.persisted_bytes
+            for i, r in enumerate(self._rules):
+                if r.op != op:
+                    continue
+                if r.count >= 0 and self._fired[i] >= r.count:
+                    continue
+                if r.at_call is not None and r.at_call != idx:
+                    continue
+                if r.at_offset is not None and not (
+                        offset < r.at_offset[1] and offset + max(nbytes, 1) > r.at_offset[0]):
+                    continue
+                if r.at_byte is not None:
+                    if not (persisted <= r.at_byte < persisted + nbytes or
+                            (persisted >= r.at_byte and r.kind == "kill")):
+                        continue
+                self._fired[i] += 1
+                return r, persisted
+            if (self._rng is not None and op in self._random_ops
+                    and self._error_rate > 0.0
+                    and self._rng.random() < self._error_rate):
+                self.stats.random_errors += 1
+                err = self._rng.choice(self._errnos)
+                return FaultSpec(op=op, kind="error", err=err), persisted
+        return None, persisted
+
+    def advance(self, n: int) -> None:
+        """Account ``n`` bytes as persisted (the ``at_byte`` clock)."""
+        with self._mu:
+            self.persisted_bytes += n
+
+    def note_kill(self, at_byte: int) -> None:
+        self.stats.kills += 1
+        self.dead = True
+        self.killed_at = at_byte
+
+    def check_dead(self) -> None:
+        if self.dead:
+            raise ProcessKilled(
+                f"process killed at byte {self.killed_at}; sink is dead")
+
+
 class FaultInjectingSink(Sink):
-    """Wrap ``inner`` and inject the given faults (see module docstring)."""
+    """Wrap ``inner`` and inject the given faults (see module docstring).
+
+    Covers every :class:`Sink` read/write entry point: ``pwrite`` and
+    ``fsync`` directly, ``pwritev`` through the base one-``pwrite``-per-
+    part decomposition (every concrete sink falls back to it when
+    ``pwrite`` is overridden — the vectored fast paths check
+    ``type(self).pwrite``), and both ``pread`` and ``pread_into`` — the
+    latter explicitly, so the reader's zero-copy staging reads cannot
+    bypass the schedule.
+    """
 
     def __init__(
         self,
@@ -153,18 +271,28 @@ class FaultInjectingSink(Sink):
     ) -> None:
         super().__init__()
         self.inner = inner
-        self._rules: List[FaultSpec] = list(faults)
-        self._fired = [0] * len(self._rules)
-        self._rng = random.Random(seed) if seed is not None else None
-        self._error_rate = float(error_rate)
-        self._errnos = tuple(errnos)
-        self._random_ops = frozenset(random_ops)
-        self._mu = threading.Lock()
-        self._calls = {"write": 0, "fsync": 0, "read": 0}
-        self.persisted_bytes = 0   # bytes actually handed to ``inner``
-        self.dead = False          # a kill point fired
-        self.killed_at: Optional[int] = None
-        self.faults = FaultStats()
+        self.schedule = FaultSchedule(
+            faults, seed=seed, error_rate=error_rate, errnos=errnos,
+            random_ops=random_ops,
+        )
+
+    # -- back-compat views onto the schedule --------------------------------
+
+    @property
+    def faults(self) -> FaultStats:
+        return self.schedule.stats
+
+    @property
+    def persisted_bytes(self) -> int:
+        return self.schedule.persisted_bytes
+
+    @property
+    def dead(self) -> bool:
+        return self.schedule.dead
+
+    @property
+    def killed_at(self) -> Optional[int]:
+        return self.schedule.killed_at
 
     # -- layout delegation (the wrapper owns no bytes) ----------------------
 
@@ -192,50 +320,17 @@ class FaultInjectingSink(Sink):
     # -- fault scheduling ---------------------------------------------------
 
     def _decide(self, op: str, offset: int, nbytes: int):
-        """Pick the fault (if any) for this call.  Returns (rule, persisted)
-        where ``persisted`` is the byte counter before this write."""
-        with self._mu:
-            idx = self._calls[op]
-            self._calls[op] = idx + 1
-            persisted = self.persisted_bytes
-            for i, r in enumerate(self._rules):
-                if r.op != op:
-                    continue
-                if r.count >= 0 and self._fired[i] >= r.count:
-                    continue
-                if r.at_call is not None and r.at_call != idx:
-                    continue
-                if r.at_offset is not None and not (
-                        offset < r.at_offset[1] and offset + max(nbytes, 1) > r.at_offset[0]):
-                    continue
-                if r.at_byte is not None:
-                    if op != "write":
-                        continue
-                    if not (persisted <= r.at_byte < persisted + nbytes or
-                            (persisted >= r.at_byte and r.kind == "kill")):
-                        continue
-                self._fired[i] += 1
-                return r, persisted
-            if (self._rng is not None and op in self._random_ops
-                    and self._error_rate > 0.0
-                    and self._rng.random() < self._error_rate):
-                self.faults.random_errors += 1
-                err = self._rng.choice(self._errnos)
-                return FaultSpec(op=op, kind="error", err=err), persisted
-        return None, persisted
+        return self.schedule.decide(op, offset, nbytes)
 
     def _advance(self, n: int) -> None:
-        with self._mu:
-            self.persisted_bytes += n
+        self.schedule.advance(n)
 
     def _check_dead(self) -> None:
-        if self.dead:
-            raise ProcessKilled(
-                f"process killed at byte {self.killed_at}; sink is dead")
+        self.schedule.check_dead()
 
     @staticmethod
     def _os_error(err: int) -> OSError:
-        return OSError(err, os.strerror(err) + " (injected)")
+        return injected_os_error(err)
 
     # -- faulted operations -------------------------------------------------
 
@@ -271,9 +366,7 @@ class FaultInjectingSink(Sink):
             self.faults.short_writes += 1
             raise self._os_error(rule.err)
         # kill
-        self.faults.kills += 1
-        self.dead = True
-        self.killed_at = persisted + keep
+        self.schedule.note_kill(persisted + keep)
         raise ProcessKilled(f"process killed at byte {self.killed_at}")
 
     def fsync(self) -> None:
@@ -284,9 +377,7 @@ class FaultInjectingSink(Sink):
                 self.faults.latencies += 1
                 time.sleep(rule.delay_s)
             elif rule.kind == "kill":
-                self.faults.kills += 1
-                self.dead = True
-                self.killed_at = self.persisted_bytes
+                self.schedule.note_kill(self.persisted_bytes)
                 raise ProcessKilled(f"process killed at byte {self.killed_at}")
             else:
                 self.faults.fsync_errors += 1
@@ -294,19 +385,57 @@ class FaultInjectingSink(Sink):
         super().fsync()
         self.inner.fsync()
 
+    def _read_fault(self, rule: FaultSpec) -> Optional[Tuple[int, float]]:
+        """Handle a read-op rule: sleeps for latency (returns None), raises
+        for plain errors, and returns ``(err, fraction)`` for torn reads so
+        the caller can deliver the prefix its path supports."""
+        if rule.kind == "latency":
+            self.faults.latencies += 1
+            time.sleep(rule.delay_s)
+            return None
+        if rule.kind == "short":
+            self.faults.short_reads += 1
+            return rule.err, rule.fraction
+        self.faults.errors += 1
+        raise self._os_error(rule.err)
+
     def pread(self, offset: int, size: int) -> bytes:
         self._check_dead()
         rule, _ = self._decide("read", offset, size)
         if rule is not None:
-            if rule.kind == "latency":
-                self.faults.latencies += 1
-                time.sleep(rule.delay_s)
-            else:
-                self.faults.errors += 1
-                raise self._os_error(rule.err)
+            torn = self._read_fault(rule)
+            if torn is not None:
+                # a bytes-returning pread has nowhere to leave a prefix:
+                # the torn response is just the error
+                raise self._os_error(torn[0])
         out = self.inner.pread(offset, size)
         self._count_read(1, len(out))
         return out
+
+    def pread_into(self, offset: int, buf) -> int:
+        """The zero-copy read path under the same schedule as ``pread``.
+
+        Without this override the base class would still funnel through
+        the faulted ``pread`` — but via an extra copy, and a torn read
+        could never exercise the caller's stale-prefix handling.  Torn
+        reads here fill ``fraction`` of the caller's buffer before
+        raising, exactly like a device delivering a partial DMA.
+        """
+        self._check_dead()
+        mv = memoryview(buf)
+        n = len(mv)
+        rule, _ = self._decide("read", offset, n)
+        if rule is not None:
+            torn = self._read_fault(rule)
+            if torn is not None:
+                err, fraction = torn
+                keep = int(n * fraction)
+                if keep:
+                    self.inner.pread_into(offset, mv[:keep])
+                raise self._os_error(err)
+        got = self.inner.pread_into(offset, mv)
+        self._count_read(1, got)
+        return got
 
 
 def crashed_file_bytes(fault_sink: FaultInjectingSink) -> bytes:

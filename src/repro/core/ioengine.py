@@ -126,6 +126,69 @@ class RetryPolicy:
         return delay
 
 
+class Retrier:
+    """The retry chokepoint as a standalone object: run any callable under
+    a :class:`RetryPolicy`.
+
+    Originally the loop lived inside :meth:`IOEngine._retrying` and covered
+    only engine-issued writes and fsyncs; it is factored out here so the
+    *read* paths — :class:`~repro.core.reader.RNTJReader` preads and the
+    remote :class:`~repro.core.remote.ObjectStoreSink` transport ops —
+    apply the identical semantics: retry ``retryable_errnos`` up to
+    ``max_attempts`` with exponential backoff + deterministic jitter,
+    honor the policy's per-logical-op ``deadline``, re-raise everything
+    else (non-``OSError`` failures such as
+    :class:`~repro.core.faults.ProcessKilled` are never retried).
+
+    Thread-safe: the jitter RNG is seeded (same backoff schedule every
+    run) and guarded by a lock; ``on_retry``/``on_giveup`` fire once per
+    retried / abandoned operation so callers can wire their own counters
+    (sink IOStats, ReaderStats, engine mirrors).
+    """
+
+    def __init__(self, policy: Optional[RetryPolicy],
+                 seed: int = 0x52455452,
+                 on_retry: Optional[Callable] = None,
+                 on_giveup: Optional[Callable] = None) -> None:
+        self.policy = policy
+        self._rng = random.Random(seed)
+        self._mu = threading.Lock()
+        self._on_retry = on_retry
+        self._on_giveup = on_giveup
+
+    def call(self, fn, *args):
+        """``fn(*args)`` under the policy; a plain call when policy is
+        ``None``."""
+        policy = self.policy
+        if policy is None:
+            return fn(*args)
+        deadline = (
+            time.monotonic() + policy.deadline if policy.deadline else None
+        )
+        attempt = 0
+        while True:
+            try:
+                return fn(*args)
+            except OSError as e:
+                attempt += 1
+                if not policy.retryable(e):
+                    raise
+                if attempt >= policy.max_attempts or (
+                        deadline is not None
+                        and time.monotonic() >= deadline):
+                    if self._on_giveup is not None:
+                        self._on_giveup()
+                    raise
+                if self._on_retry is not None:
+                    self._on_retry()
+                with self._mu:
+                    delay = policy.backoff(attempt, self._rng)
+                if deadline is not None:
+                    delay = min(delay, max(0.0, deadline - time.monotonic()))
+                if delay > 0:
+                    time.sleep(delay)
+
+
 class _ExtentGroup:
     """One logical extent (a cluster or page) split into 1..n stripe jobs."""
 
@@ -206,9 +269,14 @@ class EmulatedRing:
                     self._cv.wait()
                 if not self._ops:
                     return  # stopping and drained
+                # claim a share of the queue, not the whole head: with
+                # fewer ops than workers each claims one (a high-latency
+                # sink keeps every worker busy); only a queue deeper than
+                # the worker pool amortizes wakeups with bigger batches
+                share = max(1, len(self._ops) // self._workers)
                 batch = [
                     self._ops.popleft()
-                    for _ in range(min(len(self._ops), self.BATCH))
+                    for _ in range(min(len(self._ops), self.BATCH, share))
                 ]
             for op in batch:
                 self._engine._run_job(op.group, op.off, op.parts, op.nbytes)
@@ -621,9 +689,10 @@ class IOEngine:
         self._on_drain = on_drain
         # -- retry + degradation state (DESIGN.md §8.2) ---------------------
         self.retry = retry
-        # deterministic jitter source — seeded so fault-injection runs
-        # replay the same backoff schedule
-        self._retry_rng = random.Random(0x52455452)
+        # seeded Retrier: fault-injection runs replay the same backoff
+        # schedule; the counters mirror into the engine AND the sink
+        self._retrier = Retrier(retry, on_retry=self._count_retry,
+                                on_giveup=self._count_giveup)
         self._retry_mu = threading.Lock()
         self.retries = 0             # retried operations (mirror of IOStats)
         self.giveups = 0             # operations that exhausted the budget
@@ -729,33 +798,10 @@ class IOEngine:
         choke point every engine-issued write and fsync goes through:
         sync, striped, emulated-ring, and uring-resume paths all call it
         via :meth:`_pwritev`; CQE errors re-enter it via
-        :meth:`_pwritev`.  Without a policy it is a plain call."""
-        policy = self.retry
-        if policy is None:
-            return fn(*args)
-        deadline = (
-            time.monotonic() + policy.deadline if policy.deadline else None
-        )
-        attempt = 0
-        while True:
-            try:
-                return fn(*args)
-            except OSError as e:
-                attempt += 1
-                if not policy.retryable(e):
-                    raise
-                if attempt >= policy.max_attempts or (
-                        deadline is not None
-                        and time.monotonic() >= deadline):
-                    self._count_giveup()
-                    raise
-                self._count_retry()
-                with self._retry_mu:
-                    delay = policy.backoff(attempt, self._retry_rng)
-                if deadline is not None:
-                    delay = min(delay, max(0.0, deadline - time.monotonic()))
-                if delay > 0:
-                    time.sleep(delay)
+        :meth:`_pwritev`.  The loop itself lives in :class:`Retrier` —
+        shared with the reader's retrying preads and the remote sink's
+        transport ops.  Without a policy it is a plain call."""
+        return self._retrier.call(fn, *args)
 
     def _note_stripe_fallback(self) -> None:
         """A striped sub-extent failed even with retries: stop striping

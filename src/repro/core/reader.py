@@ -42,8 +42,9 @@ import numpy as np
 
 from . import compression as comp
 from .bufpool import make_pool as make_buffer_pool
-from .container import FileSink, Sink
+from .container import FileSink, Sink, open_sink
 from .encoding import unprecondition_pages_into
+from .ioengine import Retrier, RetryPolicy
 from .encoding import unprecondition_into
 from .metadata import (
     ANCHOR_SIZE,
@@ -119,6 +120,15 @@ class ReadOptions:
       disables the device path entirely (the device entry points raise).
       The host-path methods (``read_cluster``, ``iter_clusters``) never
       consult this knob.
+    * ``retry_policy`` — retry transient pread failures (retryable
+      ``OSError``: ``EIO``, ``ETIMEDOUT``, …) with exponential backoff
+      before giving up, through the same
+      :class:`~repro.core.ioengine.Retrier` chokepoint the write engine
+      uses.  Reader-level retries land in ``ReaderStats.retries`` /
+      ``giveups``, distinct from any retrying the sink does internally
+      (the remote sink's transport retries show up in ``io_retries``).
+      ``None`` (default) preserves the fail-fast behavior: the first
+      error raises.  Non-``OSError`` failures always raise.
     * ``tolerant`` — when the anchor/footer chain is missing or corrupt
       (a crashed writer), fall back to the journal scan of
       :mod:`repro.core.recover` and serve whatever clusters it salvages;
@@ -137,6 +147,7 @@ class ReadOptions:
     buffer_pool_bytes: int = 32 * 1024 * 1024
     recycle_buffers: bool = False
     device_decode: str = "auto"
+    retry_policy: Optional["RetryPolicy"] = None
     tolerant: bool = False
 
 
@@ -149,12 +160,25 @@ class RNTJReader:
     ):
         owns_sink = isinstance(sink_or_path, (str, os.PathLike))
         if owns_sink:
-            self.sink: Sink = FileSink(os.fspath(sink_or_path), create=False)
+            path = os.fspath(sink_or_path)
+            if "://" in path:
+                # remote URL: route through the scheme registry
+                # (ObjectStoreSink in read mode — DESIGN.md §10)
+                self.sink: Sink = open_sink(path, create=False)
+            else:
+                self.sink = FileSink(path, create=False)
         else:
             self.sink = sink_or_path
         self.verify = verify_checksums
         self.read_options = options or ReadOptions()
         self.stats = ReaderStats()
+        # reader-level pread retry chokepoint (ReadOptions.retry_policy;
+        # None = fail fast).  Counts land in ReaderStats.retries/giveups.
+        self._retrier = Retrier(
+            self.read_options.retry_policy,
+            on_retry=self.stats.add_retry,
+            on_giveup=self.stats.add_giveup,
+        )
         self._decode_pool = None
         self._prefetch_pool = None
         self._pool_lock = threading.Lock()
@@ -196,17 +220,25 @@ class RNTJReader:
                 self.sink.close()
             raise
 
+    def _pread(self, offset: int, size: int) -> bytes:
+        """Every reader pread funnels through here: the retry chokepoint
+        (ReadOptions.retry_policy; pass-through when None)."""
+        return self._retrier.call(self.sink.pread, offset, size)
+
+    def _pread_into(self, offset: int, buf) -> int:
+        return self._retrier.call(self.sink.pread_into, offset, buf)
+
     def _load_footer_metadata(self) -> None:
         """The normal open path: anchor → header → footer → page list."""
         size = self.sink.size
-        anchor = parse_anchor(self.sink.pread(size - ANCHOR_SIZE, ANCHOR_SIZE))
+        anchor = parse_anchor(self._pread(size - ANCHOR_SIZE, ANCHOR_SIZE))
         hoff, hsize = anchor["header"]
         foff, fsize = anchor["footer"]
-        self.schema, self.options = parse_header(self.sink.pread(hoff, hsize))
-        footer = parse_footer(self.sink.pread(foff, fsize))
+        self.schema, self.options = parse_header(self._pread(hoff, hsize))
+        footer = parse_footer(self._pread(foff, fsize))
         pl_off, pl_size = footer["pagelist"]
         self.clusters: List[ClusterMeta] = parse_pagelist(
-            self.sink.pread(pl_off, pl_size)
+            self._pread(pl_off, pl_size)
         )
         # optional framed-member side-car: attach member layouts so
         # chunked pages can decompress as parallel pool jobs.  Old
@@ -214,7 +246,7 @@ class RNTJReader:
         mc_loc = (footer.get("extra") or {}).get("members")
         if mc_loc:
             parse_member_sidecar(
-                self.sink.pread(mc_loc[0], mc_loc[1]), self.clusters
+                self._pread(mc_loc[0], mc_loc[1]), self.clusters
             )
         self.n_entries = int(footer["n_entries"])
 
@@ -327,7 +359,7 @@ class RNTJReader:
         # coalesced I/O
         ranges = self._coalesce(descs)
         t0 = _ns()
-        bufs = [self.sink.pread(start, end - start) for start, end, _ in ranges]
+        bufs = [self._pread(start, end - start) for start, end, _ in ranges]
         io_ns = _ns() - t0
         loc = {}         # id(desc) -> (range index, zero-copy payload view)
         for ri, ((start, _end, group), buf) in enumerate(zip(ranges, bufs)):
@@ -647,11 +679,11 @@ class RNTJReader:
         t0 = _ns()
         for p in direct:
             nbytes = sum(d.size for d in p["descs"])
-            self.sink.pread_into(
+            self._pread_into(
                 p["descs"][0].offset, smv[p["base"] : p["base"] + nbytes]
             )
         ranges = self._coalesce(rest)
-        bufs = [self.sink.pread(start, end - start) for start, end, _ in ranges]
+        bufs = [self._pread(start, end - start) for start, end, _ in ranges]
         io_ns = _ns() - t0
         if self.verify:
             for p in direct:

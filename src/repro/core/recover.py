@@ -87,6 +87,9 @@ class RecoveryReport:
     # multi-writer salvage (side-car reservation log present): per-writer
     # attribution, fenced/done sets, orphaned reservations (DESIGN.md §8.6)
     multiwriter: Optional[dict] = None
+    # remote salvage (object-store source): which case ran — final object
+    # repaired, or interrupted multipart reassembled (DESIGN.md §10)
+    remote: Optional[dict] = None
 
     def as_dict(self) -> dict:
         return {
@@ -105,6 +108,7 @@ class RecoveryReport:
             "rebuilt": self.rebuilt,
             "output": self.output,
             "multiwriter": self.multiwriter,
+            "remote": self.remote,
         }
 
 
@@ -444,6 +448,15 @@ def recover_container(
     xlog_state, xlog_stale = None, False
     if isinstance(source, (str, os.PathLike)):
         path = os.fspath(source)
+        if "://" in path:
+            # remote container: salvage the final object or an interrupted
+            # multipart upload, journal-scan in memory, put the rebuilt
+            # container back (DESIGN.md §10).  The object IS the output.
+            if output is not None:
+                raise ValueError("output= is not supported for remote URLs")
+            from .remote import salvage_remote_url  # local import: no cycle
+            return salvage_remote_url(path, dry_run=dry_run,
+                                      verify_pages=verify_pages, force=force)
         xlog_state, xlog_stale = _load_xlog_state(path)
         if output is not None:
             if not dry_run:

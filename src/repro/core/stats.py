@@ -121,6 +121,11 @@ class IOStats:
     retries: int = 0
     giveups: int = 0
     fsync_failures: int = 0
+    # remote transport (DESIGN.md §10): hedged ranged reads launched, races
+    # the hedge won, and multipart→serial-put degradations
+    hedges: int = 0
+    hedge_wins: int = 0
+    degradations: int = 0
 
     def merge(self, other: "IOStats") -> None:
         self.write_calls += other.write_calls
@@ -133,6 +138,9 @@ class IOStats:
         self.retries += other.retries
         self.giveups += other.giveups
         self.fsync_failures += other.fsync_failures
+        self.hedges += other.hedges
+        self.hedge_wins += other.hedge_wins
+        self.degradations += other.degradations
 
     def snapshot(self) -> "IOStats":
         return replace(self)
@@ -316,6 +324,9 @@ class WriterStats:
             "io_retries": self.io.retries,
             "io_giveups": self.io.giveups,
             "io_fsync_failures": self.io.fsync_failures,
+            "io_hedges": self.io.hedges,
+            "io_hedge_wins": self.io.hedge_wins,
+            "io_degradations": self.io.degradations,
             "io_stripe_fallbacks": self.io_stripe_fallbacks,
             "io_ring_fallbacks": self.io_ring_fallbacks,
         }
@@ -356,6 +367,12 @@ class ReaderStats:
     pool_misses: int = 0      # reader buffer-pool takes that allocated
     pool_returns: int = 0
     pool_drops: int = 0
+    # read-path retry accounting (DESIGN.md §8.2/§10): preads retried by
+    # the reader's RetryPolicy and preads that exhausted their budget.
+    # Sink-internal retries (the remote sink's transport loop) live in
+    # ``io.retries`` instead, merged at close.
+    retries: int = 0
+    giveups: int = 0
     # codec id -> [pages, bytes_in (stored), bytes_out (decoded),
     # decompress_ns]: the read-side mirror of WriterStats.per_codec
     per_codec: Dict[int, List[int]] = field(default_factory=dict)
@@ -399,6 +416,14 @@ class ReaderStats:
     def add_decode_ns(self, ns: int) -> None:
         with self._mu:
             self.decode_ns += ns
+
+    def add_retry(self) -> None:
+        with self._mu:
+            self.retries += 1
+
+    def add_giveup(self) -> None:
+        with self._mu:
+            self.giveups += 1
 
     def merge_io(self, snapshot: IOStats) -> None:
         with self._mu:
@@ -444,4 +469,10 @@ class ReaderStats:
             "per_codec": _codec_stats_dict(self.per_codec),
             "read_calls": self.io.read_calls,
             "bytes_read": self.io.bytes_read,
+            "retries": self.retries,
+            "giveups": self.giveups,
+            "io_retries": self.io.retries,
+            "io_giveups": self.io.giveups,
+            "io_hedges": self.io.hedges,
+            "io_hedge_wins": self.io.hedge_wins,
         }

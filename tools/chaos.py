@@ -21,6 +21,13 @@ asserts the robustness contract that DESIGN.md §8 promises for it:
 * ``kill``          — a matrix of process-kill points across the file:
                       each torn file is salvaged by ``recover_container``
                       and every salvaged entry reads back byte-identical.
+* ``remote``        — the object-store sink cell matrix (DESIGN.md §10):
+                      clean multipart byte-identity, transient transport
+                      faults retried, seeded random faults, torn ranged
+                      GETs, hedged slow tails, multipart→serial-put
+                      degradation, and a writer killed mid-multipart
+                      whose interrupted upload ``recover_container``
+                      salvages back into a readable object.
 
 Run:
     python tools/chaos.py                      # all scenarios
@@ -67,7 +74,15 @@ from repro.core import (  # noqa: E402
     recover_container,
     RecoveryError,
 )
+from repro.core import FaultSchedule, ReadOptions  # noqa: E402
 from repro.core.faults import crashed_file_bytes, memory_sink_from_bytes  # noqa: E402
+from repro.core.remote import (  # noqa: E402
+    FakeTransport,
+    ObjectBucket,
+    ObjectStoreSink,
+    RemoteOptions,
+    salvage_remote,
+)
 
 SCHEMA = Schema([
     Leaf("id", "int64"),
@@ -474,6 +489,137 @@ def scenario_mprecover(entries, seed):
                 "clusters": rep.clusters_salvaged}
 
 
+def scenario_remote(entries, seed):
+    """The object-store cell matrix: every remote failure mode in one run."""
+    ROPTS = RemoteOptions(part_bytes=1024, retry_policy=POLICY)
+
+    def remote_write(transport, entries, **kw):
+        s = ObjectStoreSink(transport, "chaos.rntj", ROPTS)
+        return s, write_through(s, entries, **kw)
+
+    def remote_verify(bucket, entries, label):
+        verify_lossless(
+            ObjectStoreSink(FakeTransport(bucket), "chaos.rntj",
+                            create=False),
+            entries, label)
+
+    info = {}
+
+    # cell: clean multipart is byte-identical to the local reference
+    ms = MemorySink()
+    write_through(ms, entries)
+    ref = bytes(ms.buf[: ms.size])
+    ms.close()
+    t = FakeTransport(ObjectBucket())
+    s, w = remote_write(t, entries)
+    s.close()
+    assert t.bucket.objects["chaos.rntj"] == ref, "remote bytes differ"
+    assert w.stats.as_dict()["io_retries"] == 0
+    info["object_bytes"] = len(ref)
+
+    # cell: scripted transient part/put faults are retried, zero loss
+    sched = FaultSchedule([
+        FaultSpec.transient_error(op="part", count=3),
+        FaultSpec(op="part", kind="short", count=1, fraction=0.5),
+    ])
+    t = FakeTransport(ObjectBucket(), schedule=sched)
+    s, w = remote_write(t, entries)
+    s.close()
+    d = w.stats.as_dict()
+    assert d["io_retries"] >= 4, f"transport retries: {d['io_retries']}"
+    assert d["io_degradations"] == 0
+    assert t.bucket.objects["chaos.rntj"] == ref
+    info["transient_retries"] = d["io_retries"]
+
+    # cell: seeded random transport faults — same seed, same schedule.
+    # Transport ops are per-part (far fewer than per-pwrite), so a tiny
+    # --entries workload is padded and the rate is high enough that the
+    # schedule fires for any seed with near certainty.
+    seeded_entries = entries
+    if len(seeded_entries) < 2000:
+        seeded_entries = entries + make_entries(2000 - len(entries),
+                                                seed + 1)
+    sched = FaultSchedule(seed=seed, error_rate=0.35,
+                          errnos=(errno.EIO, errno.ETIMEDOUT),
+                          random_ops=("put", "part", "get"))
+    t = FakeTransport(ObjectBucket(), schedule=sched)
+    s, w = remote_write(t, seeded_entries)
+    s.close()
+    d = w.stats.as_dict()
+    assert sched.stats.random_errors >= 1, "seeded schedule injected nothing"
+    assert d["io_retries"] + d["io_degradations"] >= 1
+    remote_verify(t.bucket, seeded_entries, "remote-seeded")
+    info["seeded_injected"] = sched.stats.random_errors
+
+    # cell: torn ranged GETs + reader-level retry policy
+    sched = FaultSchedule([
+        FaultSpec.short_read(op="get", count=2, fraction=0.5),
+        FaultSpec.transient_error(op="get", count=2),
+    ])
+    bkt = ObjectBucket()
+    bkt.objects["chaos.rntj"] = ref
+    rs = ObjectStoreSink(FakeTransport(bkt, schedule=sched), "chaos.rntj",
+                         RemoteOptions(retry_policy=POLICY), create=False)
+    r = RNTJReader(rs, options=ReadOptions(retry_policy=POLICY))
+    got = list(r.iter_entries())
+    r.close()
+    assert got == entries, "torn/faulty GETs lost entries"
+    d = r.stats.as_dict()
+    assert d["io_retries"] >= 2, "transport-level read retries not counted"
+    info["read_retries"] = d["io_retries"]
+
+    # cell: hedged slow tail — scripted latency on the first GET only
+    sched = FaultSchedule([FaultSpec.latency(0.2, op="get", count=1)])
+    bkt = ObjectBucket()
+    bkt.objects["chaos.rntj"] = ref
+    rs = ObjectStoreSink(FakeTransport(bkt, schedule=sched), "chaos.rntj",
+                         RemoteOptions(retry_policy=POLICY, hedge_ms=10),
+                         create=False)
+    r = RNTJReader(rs)
+    got = list(r.iter_entries())
+    r.close()
+    assert got == entries
+    d = r.stats.as_dict()
+    assert d["io_hedges"] >= 1 and d["io_hedge_wins"] >= 1, (
+        f"hedge did not win the race: {d['io_hedges']}/{d['io_hedge_wins']}")
+    info["hedge_wins"] = d["io_hedge_wins"]
+
+    # cell: permanent part failure degrades multipart -> serial put
+    sched = FaultSchedule([FaultSpec.permanent_error(op="part")])
+    t = FakeTransport(ObjectBucket(), schedule=sched)
+    s, w = remote_write(t, entries)
+    s.close()
+    d = w.stats.as_dict()
+    assert d["io_degradations"] >= 1, "degradation not counted"
+    assert t.bucket.objects["chaos.rntj"] == ref, "degraded put lost bytes"
+    info["degradations"] = d["io_degradations"]
+
+    # cell: writer killed mid-multipart -> salvage the interrupted upload
+    sched = FaultSchedule([FaultSpec(op="part", kind="kill", at_call=4)])
+    bkt = ObjectBucket()
+    s = ObjectStoreSink(FakeTransport(bkt, schedule=sched), "chaos.rntj",
+                        ROPTS)
+    killed = False
+    try:
+        write_through(s, entries, cluster_bytes=2048)
+    except (ProcessKilled, RuntimeError):
+        killed = True
+    s.close()
+    assert killed, "kill point never fired"
+    assert "chaos.rntj" not in bkt.objects
+    rep = salvage_remote(FakeTransport(bkt), "chaos.rntj")
+    assert rep.remote["mode"] == "multipart"
+    assert rep.rebuilt and rep.entries_salvaged > 0
+    r = RNTJReader(ObjectStoreSink(FakeTransport(bkt), "chaos.rntj",
+                                   create=False))
+    got = list(r.iter_entries())
+    r.close()
+    assert got == entries[: len(got)], "salvaged entries differ"
+    assert len(got) == rep.entries_salvaged
+    info["salvaged_entries"] = rep.entries_salvaged
+    return info
+
+
 SCENARIOS = {
     "transient": scenario_transient,
     "seeded": scenario_seeded,
@@ -485,6 +631,7 @@ SCENARIOS = {
     "kill": scenario_kill,
     "mpkill": scenario_mpkill,
     "mprecover": scenario_mprecover,
+    "remote": scenario_remote,
 }
 
 
