@@ -1,0 +1,240 @@
+"""Zone-map pruning benchmark — the selective-read trajectory (DESIGN.md §11).
+
+A selectivity sweep over the paper's synthetic nested-event workload
+(``{id: int64, vals: float32[k]}``, monotonic ``id``): a deterministic
+single-threaded **filtered-copy job** (read the entries matching
+``F("id").between(...)``, refill them into an output file) runs twice
+per cell — once with zone-map pruning, once with ``prune=False`` (the
+full scan) — at selectivities 0.1%/1%/10%/50% and unfiltered, for codec
+none and zlib.  Three invariants per cell, asserted not just reported:
+
+ * the pruned and unpruned output files are **byte-identical** — the
+   prune plan changes when bytes are read, never what is written;
+ * the output stays readable by the vendored **seed reader**
+   (``_legacy_seed_reader.py``) with identical arrays — zone maps ride
+   in ``footer.extra``, invisible to pre-zone-map readers;
+ * the pruned run reads **no more pages** than the unpruned run.
+
+The headline metric is the pruned/unpruned speedup at ≤1% selectivity
+(the acceptance floor is 3×; the sweep reports every cell).
+
+Emits ``BENCH_skim.json`` (repo root by default).  Scratch files live in
+``benchmarks/_scratch_skim/`` (gitignored) and are removed on exit.
+
+Run:  PYTHONPATH=src python benchmarks/bench_skim.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import shutil
+import time
+from pathlib import Path
+
+import numpy as np
+
+from _harness import REPO_ROOT  # noqa: F401
+
+from repro.core import (  # noqa: E402
+    Collection,
+    ColumnBatch,
+    F,
+    KIND_OFFSET,
+    Leaf,
+    RNTJReader,
+    ReadOptions,
+    Schema,
+    SequentialWriter,
+    WriteOptions,
+)
+from repro.core.encoding import offsets_to_sizes  # noqa: E402
+
+from _legacy_seed_reader import SeedRNTJReader  # noqa: E402
+
+SCRATCH = REPO_ROOT / "benchmarks" / "_scratch_skim"
+
+SCHEMA = Schema([
+    Leaf("id", "int64"),
+    Collection("vals", Leaf("_0", "float32")),
+])
+
+# many pages per column and many clusters per file, so sub-file pruning
+# has real granularity to work with
+WRITE_KW = dict(page_size=4096, cluster_bytes=256 * 1024, level=1)
+
+SELECTIVITIES = (0.001, 0.01, 0.1, 0.5, None)
+CODECS = ("none", "zlib")
+
+
+def build_input(path: Path, n: int, codec: str) -> None:
+    rng = np.random.default_rng(12)
+    opts = WriteOptions(codec=codec, **WRITE_KW)
+    with SequentialWriter(SCHEMA, str(path), opts) as w:
+        step = 8192
+        for a in range(0, n, step):
+            b = min(a + step, n)
+            sizes = rng.poisson(5, b - a).astype(np.int64)
+            w.fill_batch(ColumnBatch.from_arrays(SCHEMA, b - a, {
+                "id": np.arange(a, b, dtype=np.int64),
+                "vals": sizes,
+                "vals._0": rng.uniform(0, 100, int(sizes.sum()))
+                              .astype(np.float32),
+            }))
+
+
+def filtered_copy(in_path: Path, out_path: Path, expr, prune: bool,
+                  codec: str):
+    """The deterministic single-threaded copy job: read matching entries,
+    refill them into ``out_path``.  Returns (wall seconds, reader stats,
+    matched entries)."""
+    ropts = ReadOptions(filter=expr, prune=prune)
+    r = RNTJReader(str(in_path), options=ropts)
+    w = SequentialWriter(SCHEMA, str(out_path),
+                         WriteOptions(codec=codec, **WRITE_KW))
+    matched = 0
+    t0 = time.perf_counter()
+    try:
+        if expr is None:
+            seg_iter = ((cols, n) for _i, segs in r.iter_cluster_segments()
+                        for _e0, cols, n in segs)
+        else:
+            seg_iter = ((cols, n) for _i, _a0, cols, n in r.iter_filtered())
+        for cols, n in seg_iter:
+            data = {
+                ci: (offsets_to_sizes(arr)
+                     if r.schema.columns[ci].kind == KIND_OFFSET else arr)
+                for ci, arr in cols.items()
+            }
+            w.fill_batch(ColumnBatch(r.schema, n, data))
+            matched += n
+    finally:
+        w.close()
+        wall = time.perf_counter() - t0
+        stats = r.stats
+        r.close()
+    return wall, stats, matched
+
+
+def _sha(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def seed_reader_ok(path: Path) -> bool:
+    """The vendored pre-zone-map reader must see identical arrays."""
+    new, old = RNTJReader(str(path)), SeedRNTJReader(str(path))
+    try:
+        if old.n_clusters != len(new.clusters):
+            return False
+        for i in range(old.n_clusters):
+            a, b = new.read_cluster(i), old.read_cluster(i)
+            for ci in a:
+                if not np.array_equal(a[ci], b[ci]):
+                    return False
+        return True
+    finally:
+        new.close()
+        old.close()
+
+
+def run_cell(in_path: Path, n: int, sel, codec: str, repeats: int) -> dict:
+    if sel is None:
+        expr = None
+    else:
+        hi = max(int(n * sel) - 1, 0)
+        expr = F("id").between(0, hi)
+    best = {True: float("inf"), False: float("inf")}
+    stats = {}
+    matched = {}
+    for _ in range(repeats):
+        for prune in (True, False):
+            out = SCRATCH / f"out_{'p' if prune else 'f'}.rntj"
+            wall, st, m = filtered_copy(in_path, out, expr, prune, codec)
+            if wall < best[prune]:
+                best[prune] = wall
+                stats[prune] = st
+                matched[prune] = m
+    p_out = SCRATCH / "out_p.rntj"
+    f_out = SCRATCH / "out_f.rntj"
+    identical = _sha(p_out) == _sha(f_out)
+    seed_ok = seed_reader_ok(p_out)
+    cell = {
+        "selectivity": sel,
+        "codec": codec,
+        "matched": matched[True],
+        "pruned_s": round(best[True], 4),
+        "unpruned_s": round(best[False], 4),
+        "speedup": round(best[False] / best[True], 2) if best[True] else None,
+        "byte_identical": identical,
+        "seed_reader_ok": seed_ok,
+        "pages_read_pruned": stats[True].pages,
+        "pages_read_unpruned": stats[False].pages,
+        "clusters_pruned": stats[True].clusters_pruned,
+    }
+    assert matched[True] == matched[False], f"match counts differ: {cell}"
+    assert identical, f"outputs not byte-identical: {cell}"
+    assert seed_ok, f"seed reader disagrees on the output: {cell}"
+    assert stats[True].pages <= stats[False].pages, (
+        f"pruned path read more pages: {cell}")
+    return cell
+
+
+def run(n: int, repeats: int, quick: bool, out_path: Path) -> dict:
+    SCRATCH.mkdir(parents=True, exist_ok=True)
+    try:
+        cells = []
+        for codec in CODECS:
+            in_path = SCRATCH / f"input_{codec}.rntj"
+            build_input(in_path, n, codec)
+            for sel in SELECTIVITIES:
+                cell = run_cell(in_path, n, sel, codec, repeats)
+                cells.append(cell)
+                print(f"  sel={str(sel):6s} codec={codec:4s} "
+                      f"pruned={cell['pruned_s']:.4f}s "
+                      f"unpruned={cell['unpruned_s']:.4f}s "
+                      f"speedup={cell['speedup']}x "
+                      f"identical={cell['byte_identical']}")
+        low_sel = [c for c in cells if c["selectivity"] is not None
+                   and c["selectivity"] <= 0.01]
+        floor = min(c["speedup"] for c in low_sel)
+        ok = floor >= 3.0
+        out = {
+            "workload": {"events": n, "schema": "id:int64, vals:float32[k]",
+                         **WRITE_KW, "repeats": repeats, "quick": quick},
+            "cells": cells,
+            "acceptance": {
+                "min_speedup_at_le_1pct": floor,
+                "floor": 3.0,
+                "ok": ok,
+                "byte_identical_all": all(c["byte_identical"] for c in cells),
+                "seed_reader_ok_all": all(c["seed_reader_ok"] for c in cells),
+            },
+        }
+        out_path.write_text(json.dumps(out, indent=1))
+        print(f"wrote {out_path}  (>=3x at <=1%: {ok}, floor {floor}x)")
+        if not quick:
+            assert ok, f"speedup floor not met: {floor}x < 3x"
+        return out
+    finally:
+        shutil.rmtree(SCRATCH, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload, single repeat (CI smoke)")
+    ap.add_argument("--events", type=int, default=0)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_skim.json"))
+    args = ap.parse_args()
+    n = args.events or (60_000 if args.quick else 400_000)
+    repeats = 1 if args.quick else 2
+    run(n, repeats, args.quick, Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ BENCHMARKS = [
      "BENCH_pipeline.json"),
     ("bench_remote", "python benchmarks/bench_remote.py",
      "BENCH_remote.json"),
+    ("bench_skim", "python benchmarks/bench_skim.py", "BENCH_skim.json"),
     ("fig2_devnull", "python -m benchmarks.run", "stdout CSV row"),
     ("fig3_ssd", "python -m benchmarks.run", "stdout CSV row"),
     ("fig4_hdd", "python -m benchmarks.run", "stdout CSV row"),

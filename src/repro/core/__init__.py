@@ -27,7 +27,16 @@ from .writer import (
     FillContext,
     write_entries,
 )
-from .reader import ReadOptions, RNTJReader
+from .reader import ReadOptions, RNTJReader, slice_entry_range
+from .filter import (
+    F,
+    Expr,
+    Zone,
+    T_FALSE,
+    T_MAYBE,
+    T_TRUE,
+    required_columns,
+)
 from .merge import BufferMerger, merge_files
 from .container import (
     Sink,
@@ -85,6 +94,8 @@ __all__ = [
     "ColumnBatch", "KIND_LEAF", "KIND_OFFSET", "decompose_entry",
     "recompose_entries", "WriteOptions", "SequentialWriter", "ParallelWriter",
     "FillContext", "write_entries", "RNTJReader", "ReadOptions",
+    "slice_entry_range",
+    "F", "Expr", "Zone", "T_FALSE", "T_MAYBE", "T_TRUE", "required_columns",
     "BufferMerger", "merge_files", "Sink", "FileSink", "AsyncFileSink",
     "DevNullSink", "LatencyModel", "MemorySink", "ThrottledSink",
     "close_all", "open_sink",

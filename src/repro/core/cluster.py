@@ -97,6 +97,9 @@ class SealedCluster:
     # write lands (this object and its iovecs must not be read after
     # that point — DESIGN.md §6.8)
     recycle: Optional[List] = None
+    # per-page zone maps (DESIGN.md §11): column index -> parallel page
+    # lists {"fe","le"[,"lo","hi","nn"]}, cluster-relative entry indices
+    zonemaps: Optional[Dict[int, Dict[str, list]]] = None
 
     @property
     def size(self) -> int:
@@ -149,7 +152,8 @@ class ClusterBuilder:
                  policy: Optional[comp.CodecPolicy] = None,
                  precondition: bool = True,
                  scatter: bool = False,
-                 buffer_pool=None):
+                 buffer_pool=None,
+                 zone_maps: bool = True):
         self.schema = schema
         self.page_size = page_size
         self.codec = codec
@@ -157,6 +161,7 @@ class ClusterBuilder:
         self.checksum = checksum
         self.chunk_bytes = chunk_bytes
         self.scatter = scatter
+        self.zone_maps = zone_maps
         # writer-shared BufferPool (DESIGN.md §6.8): column storage and
         # preconditioning scratch draw from it, and seal() hands detached
         # buffers to the sealed cluster for completion-time recycling
@@ -185,6 +190,8 @@ class ClusterBuilder:
         self.uncompressed_bytes = 0
         # unbuffered mode: elements already drained into standalone pages
         self._drained: List[int] = [0] * schema.n_columns
+        # unbuffered mode: zone-map rows accumulated as pages drain
+        self._zm_acc: Dict[int, Dict[str, list]] = {}
         # seal() runs on one thread at a time; the scratch amortizes the
         # column-wide preconditioning temporaries across clusters (and
         # recycles them through the pool when one is attached)
@@ -250,6 +257,85 @@ class ClusterBuilder:
             codec = self._policy.effective_codec(column, codec)
         return codec, level
 
+    # -- zone maps (DESIGN.md §11) ------------------------------------------
+
+    def _entries_of(self, ci: int, pos: np.ndarray) -> np.ndarray:
+        """Cluster-relative entry index of each element position of
+        column ``ci``, walking positions up the offset-column chain
+        (offset columns hold cluster-relative *end* offsets, so the
+        parent element of child position j is the first i with
+        ends[i] > j)."""
+        p = self.schema.parent[ci]
+        while p != -1:
+            pos = np.searchsorted(self._cols[p].view(), pos, side="right")
+            p = self.schema.parent[p]
+        return pos
+
+    def _zone_page_row(self, col, elems: np.ndarray, start: int,
+                       stop: int) -> None:
+        """Accumulate one page's zone-map row (unbuffered drain path)."""
+        d = self._zm_acc.setdefault(
+            col.index,
+            {"fe": [], "le": []} if col.kind == KIND_OFFSET
+            else {"fe": [], "le": [], "lo": [], "hi": [], "nn": []},
+        )
+        fe, le = self._entries_of(
+            col.index, np.array([start, stop - 1], dtype=np.int64)
+        ).tolist()
+        d["fe"].append(fe)
+        d["le"].append(le)
+        if col.kind == KIND_OFFSET:
+            return
+        if elems.dtype.kind == "f":
+            d["lo"].append(float(np.fmin.reduce(elems)))
+            d["hi"].append(float(np.fmax.reduce(elems)))
+            d["nn"].append(int(np.count_nonzero(np.isnan(elems))))
+        else:
+            d["lo"].append(elems.min().item())
+            d["hi"].append(elems.max().item())
+            d["nn"].append(0)
+
+    def _zone_maps(self) -> Optional[Dict[int, Dict[str, list]]]:
+        """Per-page zone maps for every non-empty column.
+
+        For each page: first/last cluster-relative entry index (element
+        positions walked up the offset chain), plus — for leaf columns —
+        min/max over non-NaN elements and the NaN ("null") count.  One
+        vectorized ``reduceat`` pass per column over the still-contiguous
+        column buffers; an all-NaN page records NaN bounds.
+        """
+        if not self.zone_maps:
+            return None
+        zm: Dict[int, Dict[str, list]] = {}
+        for col in self.schema.columns:
+            n = len(self._cols[col.index])
+            if n == 0:
+                continue
+            per = self._page_elems[col.index]
+            starts = np.arange(0, n, per, dtype=np.int64)
+            fe = self._entries_of(col.index, starts)
+            le = self._entries_of(
+                col.index, np.minimum(starts + per, n) - 1
+            )
+            entry = {"fe": fe.tolist(), "le": le.tolist()}
+            if col.kind != KIND_OFFSET:
+                elems = self._cols[col.index].view()
+                if elems.dtype.kind == "f":
+                    lo = np.fmin.reduceat(elems, starts)
+                    hi = np.fmax.reduceat(elems, starts)
+                    nn = np.add.reduceat(
+                        np.isnan(elems).astype(np.int64), starts
+                    )
+                else:
+                    lo = np.minimum.reduceat(elems, starts)
+                    hi = np.maximum.reduceat(elems, starts)
+                    nn = np.zeros(len(starts), dtype=np.int64)
+                entry["lo"] = lo.tolist()
+                entry["hi"] = hi.tolist()
+                entry["nn"] = nn.tolist()
+            zm[col.index] = entry
+        return zm
+
     def seal(self, pool=None) -> SealedCluster:
         """Serialize + compress all pages.  No lock required (paper §4.1).
 
@@ -268,6 +354,9 @@ class ClusterBuilder:
         sample on its first cluster.
         """
         t0 = _ns()
+        # zone maps come first: the column views are still contiguous and
+        # untouched (gathering may detach raw-aliased buffers later)
+        zonemaps = self._zone_maps()
         # pass 1: column-batched preconditioning -> per-page plan
         # [column, n_elements, raw_u8_view, codec, level] (mutable: the
         # codec slot of _PENDING pages is resolved in pass 2).  Each
@@ -335,6 +424,7 @@ class ClusterBuilder:
             iovecs=iovecs,
             nbytes=total,
             recycle=recycle,
+            zonemaps=zonemaps,
         )
         self._reset()
         return sealed
@@ -614,6 +704,8 @@ class ClusterBuilder:
     def _drain_one(self, col, start, stop, pool):
         codec, level = self._page_codec(col.index)
         elems = self._cols[col.index].view(start, stop)
+        if self.zone_maps:
+            self._zone_page_row(col, elems, start, start + len(elems))
         t0 = _ns()
         payload, desc = build_page(
             col, elems, codec, level, self.checksum, self.chunk_bytes, pool,
@@ -633,6 +725,15 @@ class ClusterBuilder:
         self._reset()
         return res
 
+    def take_zonemaps(self) -> Optional[Dict[int, Dict[str, list]]]:
+        """Zone-map rows accumulated by page draining (unbuffered mode).
+        Must be called before :meth:`finish_unbuffered`'s reset."""
+        if not self.zone_maps or not self._zm_acc:
+            return None
+        zm = self._zm_acc
+        self._zm_acc = {}
+        return zm
+
     def _reset(self) -> None:
         # keep the ColumnBuffer storage: steady-state refills are
         # allocation-free (and pipelined sealing hands builders back
@@ -641,5 +742,6 @@ class ClusterBuilder:
             c.reset()
         self._acc_offset = [0] * self.schema.n_columns
         self._drained = [0] * self.schema.n_columns
+        self._zm_acc = {}
         self.n_entries = 0
         self.uncompressed_bytes = 0

@@ -72,9 +72,12 @@ def _copy_clusters(reader: RNTJReader, writer: _WriterBase) -> None:
             base = 0
         # reserve + metadata + envelope/journal framing + submit: the same
         # critical section every direct commit uses, so merged outputs are
-        # crash-recoverable exactly like directly written ones
+        # crash-recoverable exactly like directly written ones.  Zone maps
+        # travel verbatim: their entry indices are cluster-relative, so a
+        # byte-verbatim cluster copy keeps them valid without a rebase.
         writer._commit_raw_cluster(blob, cm.n_entries, cm.n_elements,
-                                   cm.pages, base, owner=owner)
+                                   cm.pages, base, owner=owner,
+                                   zonemaps=reader.zonemaps[idx])
 
 
 def _reencode_clusters(reader: RNTJReader, writer: ParallelWriter) -> None:

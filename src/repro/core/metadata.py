@@ -422,6 +422,70 @@ def parse_member_sidecar(buf: bytes, clusters: List[ClusterMeta]) -> None:
 
 
 # ---------------------------------------------------------------------------
+# zone maps (footer.extra["zonemaps"], DESIGN.md §11)
+#
+# Per cluster, per column: parallel per-page lists in page-list order —
+# first/last entry index (cluster-relative, so raw cluster copies stay
+# valid across merge/rebase) plus, for leaf columns, min/max over non-NaN
+# elements and the NaN count.  Stored as plain JSON inside the footer:
+# readers that predate the key (including the vendored seed reader)
+# ignore unknown ``extra`` entries, and Python's json round-trips the
+# NaN/±Infinity bounds of float pages.
+
+
+def encode_zonemaps(per_cluster) -> Optional[dict]:
+    """``footer.extra["zonemaps"]`` value from per-cluster zone-map dicts
+    (``None`` per cluster = no stats, e.g. a raw-copied cluster from an
+    old file).  Returns ``None`` when no cluster carries stats."""
+    if not any(per_cluster):
+        return None
+    clusters = []
+    for zm in per_cluster:
+        if not zm:
+            clusters.append(None)
+        else:
+            clusters.append({str(ci): d for ci, d in zm.items()})
+    return {"v": 1, "clusters": clusters}
+
+
+def decode_zonemaps(value, n_clusters: int):
+    """Parse ``footer.extra["zonemaps"]`` back to per-cluster dicts keyed
+    by column index.  Defensive: an unknown version, a cluster-count
+    mismatch, or inconsistent per-column page lists degrade to "no
+    stats" (``None``) — pruning is an optimization, never a correctness
+    dependency."""
+    if not isinstance(value, dict) or value.get("v") != 1:
+        return None
+    clusters = value.get("clusters")
+    if not isinstance(clusters, list) or len(clusters) != n_clusters:
+        return None
+    out = []
+    for zm in clusters:
+        if not isinstance(zm, dict):
+            out.append(None)
+            continue
+        cols = {}
+        for key, d in zm.items():
+            try:
+                ci = int(key)
+            except (TypeError, ValueError):
+                continue
+            if not isinstance(d, dict) or "fe" not in d or "le" not in d:
+                continue
+            n = len(d["fe"])
+            if len(d["le"]) != n:
+                continue
+            if "lo" in d and not (
+                len(d.get("lo", ())) == len(d.get("hi", ()))
+                == len(d.get("nn", ())) == n
+            ):
+                continue
+            cols[ci] = d
+        out.append(cols or None)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # footer + anchor
 
 

@@ -29,6 +29,7 @@ phases, mirroring ``WriterStats`` on the write side.
 
 from __future__ import annotations
 
+import math
 import os
 import struct
 import threading
@@ -44,11 +45,20 @@ from . import compression as comp
 from .bufpool import make_pool as make_buffer_pool
 from .container import FileSink, Sink, open_sink
 from .encoding import unprecondition_pages_into
+from .filter import (
+    EvalContext,
+    Expr,
+    T_FALSE,
+    Zone,
+    filter_paths,
+    required_columns,
+)
 from .ioengine import Retrier, RetryPolicy
 from .encoding import unprecondition_into
 from .metadata import (
     ANCHOR_SIZE,
     ClusterMeta,
+    decode_zonemaps,
     parse_anchor,
     parse_footer,
     parse_header,
@@ -129,6 +139,17 @@ class ReadOptions:
       (the remote sink's transport retries show up in ``io_retries``).
       ``None`` (default) preserves the fail-fast behavior: the first
       error raises.  Non-``OSError`` failures always raise.
+    * ``filter`` — a :mod:`repro.core.filter` predicate (built from
+      ``F("path")`` comparisons).  ``iter_filtered`` evaluates it
+      exactly; with ``prune`` on, the footer's zone maps compile into a
+      per-cluster/per-page prune plan first, so clusters and pages that
+      cannot satisfy the predicate are skipped before a single pread
+      (DESIGN.md §11).  ``iter_clusters`` only *skips whole clusters*
+      the plan proves empty — it still yields full clusters otherwise.
+    * ``prune`` — consult zone maps for ``filter`` (on by default).
+      Off, or on a file without the ``zonemaps`` footer extra, every
+      path degrades to the exact unpruned scan — pruning is an
+      optimization, never a correctness dependency.
     * ``tolerant`` — when the anchor/footer chain is missing or corrupt
       (a crashed writer), fall back to the journal scan of
       :mod:`repro.core.recover` and serve whatever clusters it salvages;
@@ -149,6 +170,33 @@ class ReadOptions:
     device_decode: str = "auto"
     retry_policy: Optional["RetryPolicy"] = None
     tolerant: bool = False
+    filter: Optional["Expr"] = None
+    prune: bool = True
+
+
+def slice_entry_range(
+    schema: Schema, cols: Dict[int, np.ndarray], e0: int, e1: int
+) -> Dict[int, np.ndarray]:
+    """Subset a range-local column dict to entries ``[e0, e1)``.
+
+    Pure array math (no I/O): offset columns are walked parent-first to
+    locate each column's element range and rebased so the result is
+    again range-local.  ``cols`` must contain every ancestor offset
+    column of every column it contains (readers always decode them)."""
+    out: Dict[int, np.ndarray] = {}
+    crng: Dict[int, Tuple[int, int]] = {}
+    for ci in sorted(cols):
+        p = schema.parent[ci]
+        a, b = (e0, e1) if p == -1 else crng[p]
+        arr = cols[ci]
+        if schema.columns[ci].kind == KIND_OFFSET:
+            base = int(arr[a - 1]) if a > 0 else 0
+            end = int(arr[b - 1]) if b > a else base
+            crng[ci] = (base, end)
+            out[ci] = arr[a:b] - base
+        else:
+            out[ci] = arr[a:b]
+    return out
 
 
 class RNTJReader:
@@ -187,6 +235,7 @@ class RNTJReader:
         # recycle_buffers is on (DESIGN.md §6.8)
         self._bufpool = make_buffer_pool(self.read_options.buffer_pool_bytes)
         self._closed = False
+        self._plan_cache = None  # compiled prune plan (ReadOptions.filter)
         self.salvage = None  # RecoveryReport when a tolerant open salvaged
         try:
             if not self.sink.readable():
@@ -203,6 +252,9 @@ class RNTJReader:
                     scan_container(self.sink)
                 )
                 self.n_entries = self.salvage.entries_salvaged
+                # the journal never carries zone maps (finalization
+                # metadata): a salvaged open serves no stale bounds
+                self.zonemaps = [None] * len(self.clusters)
             # column ranges: first element index of each column per cluster
             # (paper §3) — the running sums of per-cluster element counts.
             self.column_ranges = np.zeros(
@@ -249,6 +301,12 @@ class RNTJReader:
                 self._pread(mc_loc[0], mc_loc[1]), self.clusters
             )
         self.n_entries = int(footer["n_entries"])
+        # optional per-page zone maps (DESIGN.md §11).  Old files have
+        # no "zonemaps" extra and simply never prune; malformed stats
+        # decode to None per cluster (decode_zonemaps is defensive).
+        self.zonemaps = decode_zonemaps(
+            (footer.get("extra") or {}).get("zonemaps"), len(self.clusters)
+        ) or [None] * len(self.clusters)
 
     # -- worker pools --------------------------------------------------------
 
@@ -543,6 +601,447 @@ class RNTJReader:
     def cluster_entry_range(self, cluster_index: int) -> Tuple[int, int]:
         cm = self.clusters[cluster_index]
         return cm.first_entry, cm.first_entry + cm.n_entries
+
+    # -- zone-map pruning (DESIGN.md §11) ------------------------------------
+
+    def _fold_zone(self, i: int, ci: int) -> Optional[Zone]:
+        """Cluster-level :class:`Zone` of leaf column ``ci`` in cluster
+        ``i`` — the fold of its page rows — or ``None`` when the cluster
+        carries no stats for it."""
+        cm = self.clusters[i]
+        nested = self.schema.parent[ci] != -1
+        count = int(cm.n_elements[ci])
+        if count == 0:
+            return Zone.empty(nested)
+        zm = self.zonemaps[i]
+        d = None if zm is None else zm.get(ci)
+        if d is None or "lo" not in d:
+            return None
+        lo = hi = None
+        for v, w in zip(d["lo"], d["hi"]):
+            if isinstance(v, float) and math.isnan(v):
+                continue  # all-NaN page: contributes no bounds
+            if lo is None or v < lo:
+                lo = v
+            if hi is None or w > hi:
+                hi = w
+        return Zone(lo, hi, int(sum(d.get("nn", ()))), count, nested)
+
+    def _page_counts(self, cm: ClusterMeta) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for d in cm.pages:
+            out.setdefault(d.column, []).append(d.n_elements)
+        return out
+
+    def _prune_plan(self):
+        """Compile ``ReadOptions.filter`` against the footer zone maps.
+
+        Returns one slot per cluster: ``None`` — no pruning possible,
+        read the whole cluster; ``[]`` — the zone maps prove no entry
+        can match, skip the cluster entirely; else the surviving
+        half-open entry ranges ``[(e0, e1), ...]`` (cluster-relative).
+        Returns ``None`` overall when no filter is set or pruning is
+        disabled.  The plan is conservative: ranges are a *superset* of
+        the matching entries; exactness comes from re-evaluating the
+        predicate on what they decode.
+        """
+        o = self.read_options
+        expr = o.filter
+        if expr is None or not o.prune:
+            return None
+        if self._plan_cache is not None:
+            return self._plan_cache
+        expr.validate(self.schema)
+        paths = filter_paths(self.schema, expr)
+        plan: List[Optional[List[Tuple[int, int]]]] = []
+        for i, cm in enumerate(self.clusters):
+            plan.append(self._plan_cluster(i, cm, expr, paths))
+        self._plan_cache = plan
+        return plan
+
+    def _plan_cluster(self, i, cm, expr, paths):
+        n = cm.n_entries
+        zm = self.zonemaps[i]
+        if zm is None or n == 0:
+            return None
+        # cluster-scope zones: one fold per filter column.  A column
+        # without stats stays out of the dict (= unconstrained).
+        zones: Dict[str, Zone] = {}
+        for path, ci in paths.items():
+            z = self._fold_zone(i, ci)
+            if z is not None:
+                zones[path] = z
+        if expr.zone_eval(zones) == T_FALSE:
+            return []
+        # per-page refinement: restrict one filter column at a time to a
+        # single page's zone (the others stay at cluster scope) and keep
+        # the page's entry range unless the verdict is T_FALSE.
+        page_counts = self._page_counts(cm)
+        cand = np.ones(n, dtype=bool)
+        for path, ci in paths.items():
+            d = zm.get(ci)
+            if d is None or "lo" not in d:
+                continue
+            fe, le = d["fe"], d["le"]
+            counts = page_counts.get(ci)
+            if counts is None or len(counts) != len(fe):
+                continue  # inconsistent stats: no refinement from ci
+            nested = self.schema.parent[ci] != -1
+            nn = d.get("nn") or [0] * len(fe)
+            keep = np.zeros(n, dtype=bool)
+            covered = np.zeros(n, dtype=bool)
+            ok = True
+            for k in range(len(fe)):
+                a, b = int(fe[k]), int(le[k])
+                if a < 0 or b >= n or b < a or (k and a < int(fe[k - 1])):
+                    ok = False  # corrupt row: refine nothing from ci
+                    break
+                covered[a : b + 1] = True
+                pz = Zone(d["lo"][k], d["hi"][k], int(nn[k]),
+                          int(counts[k]), nested)
+                if expr.zone_eval({**zones, path: pz}) != T_FALSE:
+                    keep[a : b + 1] = True
+            if not ok:
+                continue
+            # an entry whose elements STRADDLE pages is only soundly
+            # judged by a zone covering all of them: re-judge every
+            # boundary-shared entry against the fold of its pages
+            for k in range(1, len(fe)):
+                e = int(fe[k])
+                if e > int(le[k - 1]) or keep[e]:
+                    continue
+                span = [j for j in range(len(fe))
+                        if int(fe[j]) <= e <= int(le[j])]
+                lo = hi = None
+                nnn = cnt = 0
+                for j in span:
+                    v, w = d["lo"][j], d["hi"][j]
+                    if not (isinstance(v, float) and math.isnan(v)):
+                        lo = v if lo is None or v < lo else lo
+                        hi = w if hi is None or w > hi else hi
+                    nnn += int(nn[j])
+                    cnt += int(counts[j])
+                fz = Zone(lo, hi, nnn, cnt, nested)
+                if expr.zone_eval({**zones, path: fz}) != T_FALSE:
+                    keep[e] = True
+            if not covered.all():
+                # entries with no element in this column (empty
+                # collections in page-boundary gaps): judge them
+                # against an empty zone
+                if expr.zone_eval(
+                    {**zones, path: Zone.empty(nested)}
+                ) != T_FALSE:
+                    keep |= ~covered
+            cand &= keep
+        if cand.all():
+            return None
+        if not cand.any():
+            return []
+        d8 = np.diff(cand.astype(np.int8), prepend=0, append=0)
+        starts = np.nonzero(d8 == 1)[0]
+        ends = np.nonzero(d8 == -1)[0]
+        return list(zip(starts.tolist(), ends.tolist()))
+
+    def _pages_of(self, cm: ClusterMeta,
+                  columns: Optional[Sequence[int]]) -> int:
+        if columns is None:
+            return len(cm.pages)
+        want = set(columns)
+        return sum(1 for d in cm.pages if d.column in want)
+
+    def _expand_ancestors(
+        self, columns: Optional[Sequence[int]]
+    ) -> Optional[set]:
+        """Requested columns plus every ancestor offset column (which
+        locate the element ranges), or ``None`` for "all columns"."""
+        if columns is None:
+            return None
+        want = set(columns)
+        for ci in list(want):
+            p = self.schema.parent[ci]
+            while p != -1:
+                want.add(p)
+                p = self.schema.parent[p]
+        return want
+
+    def read_entry_range(
+        self,
+        cluster_index: int,
+        e0: int,
+        e1: int,
+        columns: Optional[Sequence[int]] = None,
+        _page_cache: Optional[Dict[int, np.ndarray]] = None,
+    ) -> Dict[int, np.ndarray]:
+        """Decode one entry range ``[e0, e1)`` of a cluster (entries are
+        cluster-relative), reading only the pages that overlap it.
+
+        Returns ``{column: array}`` where offset columns hold
+        **range-local** end offsets (rebased so the range recomposes
+        like a miniature cluster).  Ancestor offset columns of every
+        requested column ride along — they locate the element ranges.
+        Pages the range skips are counted in ``ReaderStats.pages_pruned``
+        (``clusters`` is not bumped: range reads are sub-cluster).
+
+        ``_page_cache`` (one dict per cluster, shared across the ranges
+        of a prune plan) memoizes decoded pages so adjacent ranges that
+        straddle a page boundary never pread or decode that page twice —
+        the pruned path can only ever read *fewer* pages than a full
+        cluster scan, never more.  The caller owns pruned-page
+        accounting in that mode (distinct pages are ``len(cache)``).
+        """
+        cm = self.clusters[cluster_index]
+        want = self._expand_ancestors(columns)
+        if want is None:
+            want = set(range(self.schema.n_columns))
+        targets = sorted(want)  # schema order: parents precede children
+        by_col: Dict[int, List[PageDesc]] = {ci: [] for ci in targets}
+        for dsc in cm.pages:
+            if dsc.column in want:
+                by_col[dsc.column].append(dsc)
+
+        out: Dict[int, np.ndarray] = {}
+        child_range: Dict[int, Tuple[int, int]] = {}
+        pages_total = sum(len(v) for v in by_col.values())
+        pages_read = reads = cbytes = ubytes = 0
+        io_ns = deco_ns = dec_ns = 0
+        for ci in targets:
+            col = self.schema.columns[ci]
+            is_off = col.kind == KIND_OFFSET
+            p = self.schema.parent[ci]
+            a, b = (e0, e1) if p == -1 else child_range[p]
+            # offset columns fetch one extra leading element: the end of
+            # the previous collection is the range's rebase base
+            fa = max(a - 1, 0) if is_off else a
+            ds = by_col[ci]
+            if b <= fa or not ds:
+                out[ci] = np.empty(0, dtype=col.dtype)
+                if is_off:
+                    child_range[ci] = (0, 0)
+                continue
+            starts = [0]
+            for dsc in ds:
+                starts.append(starts[-1] + dsc.n_elements)
+            k0 = np.searchsorted(starts, fa, side="right") - 1
+            kl = np.searchsorted(starts, b - 1, side="right") - 1
+            picked = ds[k0 : kl + 1]
+            fetch = (picked if _page_cache is None else
+                     [dsc for dsc in picked if id(dsc) not in _page_cache])
+            if fetch:
+                ranges = self._coalesce(fetch)
+                t0 = _ns()
+                bufs = [self._pread(s, e - s) for s, e, _ in ranges]
+                io_ns += _ns() - t0
+                loc = {}
+                for (s, _e, group), raw in zip(ranges, bufs):
+                    mv = memoryview(raw)
+                    for dsc in group:
+                        rel = dsc.offset - s
+                        loc[id(dsc)] = mv[rel : rel + dsc.size]
+                pages_read += len(fetch)
+                reads += len(ranges)
+                cbytes += sum(dsc.size for dsc in fetch)
+                ubytes += sum(dsc.uncompressed_size for dsc in fetch)
+            if _page_cache is None:
+                buf = np.empty(starts[kl + 1] - starts[k0], dtype=col.dtype)
+                off = 0
+                for dsc in picked:
+                    da, db = decode_page_into(
+                        loc[id(dsc)], dsc, col,
+                        buf[off : off + dsc.n_elements], self.verify,
+                    )
+                    dec_ns += da
+                    deco_ns += db
+                    off += dsc.n_elements
+            else:
+                for dsc in fetch:
+                    pb = np.empty(dsc.n_elements, dtype=col.dtype)
+                    da, db = decode_page_into(
+                        loc[id(dsc)], dsc, col, pb, self.verify,
+                    )
+                    dec_ns += da
+                    deco_ns += db
+                    _page_cache[id(dsc)] = pb
+                arrs = [_page_cache[id(dsc)] for dsc in picked]
+                buf = arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+            sl = buf[fa - starts[k0] : b - starts[k0]]
+            if is_off:
+                base = int(sl[0]) if a > 0 else 0
+                vals = sl[1:] if a > 0 else sl
+                child_range[ci] = (
+                    base, int(vals[-1]) if len(vals) else base
+                )
+                out[ci] = vals - base
+            else:
+                out[ci] = sl
+        self.stats.add_cluster_read(
+            pages=pages_read, reads=reads, compressed_bytes=cbytes,
+            uncompressed_bytes=ubytes, io_ns=io_ns, decompress_ns=dec_ns,
+            decode_ns=deco_ns, clusters=0,
+        )
+        if _page_cache is None:
+            self.stats.add_pruned(pages=pages_total - pages_read)
+        return out
+
+    def iter_cluster_segments(
+        self,
+        columns: Optional[Sequence[int]] = None,
+        start: int = 0,
+        stop: Optional[int] = None,
+    ) -> Iterator[Tuple[int, List[Tuple[int, Dict[int, np.ndarray], int]]]]:
+        """The shared entry-range-selection helper (skim engine +
+        :meth:`iter_filtered`).
+
+        Yields ``(cluster_index, segments)`` for EVERY cluster in entry
+        order, ``segments`` being ``[(first_entry, cols, n_entries),
+        ...]`` with cluster-relative ``first_entry`` and range-local
+        arrays.  Without an applicable filter each cluster yields one
+        full-cluster segment (the arrays of :meth:`iter_clusters`); with
+        one, only zone-surviving entry ranges are decoded and fully
+        pruned clusters yield ``(i, [])`` — so pruned and unpruned
+        consumers see identical per-cluster grouping (the skim engine's
+        byte-identity contract).
+        """
+        plan = self._prune_plan()
+        n = self.n_clusters
+        if stop is None or stop > n:
+            stop = n
+        if plan is None:
+            for i, cols in self.iter_clusters(columns, start, stop,
+                                              recycle=False):
+                yield i, [(0, cols, self.clusters[i].n_entries)]
+            return
+
+        def read_segments(i):
+            p = plan[i]
+            if p is None:
+                return [(0, self.read_cluster(i, columns),
+                         self.clusters[i].n_entries)]
+            # one decoded-page cache per cluster: ranges that straddle a
+            # page boundary share the decode, so the pruned path never
+            # reads more pages than the full-cluster scan would
+            cache: Dict[int, np.ndarray] = {}
+            segs = [(a, self.read_entry_range(i, a, b, columns,
+                                              _page_cache=cache), b - a)
+                    for a, b in p]
+            want = self._expand_ancestors(columns)
+            total = self._pages_of(
+                self.clusters[i], None if want is None else sorted(want))
+            self.stats.add_pruned(pages=max(total - len(cache), 0))
+            return segs
+
+        depth = self.read_options.prefetch_clusters
+        pool = self._get_prefetch_pool() if depth > 0 else None
+        live = [i for i in range(start, stop) if plan[i] != []]
+        skipped = [i for i in range(start, stop) if plan[i] == []]
+        for i in skipped:
+            self.stats.add_pruned(
+                clusters=1, pages=self._pages_of(self.clusters[i], columns)
+            )
+        if pool is None:
+            for i in range(start, stop):
+                yield i, ([] if plan[i] == [] else read_segments(i))
+            return
+        # double-buffered like iter_clusters: only live clusters occupy
+        # prefetch slots; skipped ones yield [] inline (no I/O at all)
+        pending: deque = deque()
+        live_iter = iter(live)
+
+        def top_up():
+            while len(pending) < depth:
+                j = next(live_iter, None)
+                if j is None:
+                    return
+                pending.append((j, pool.submit(read_segments, j)))
+
+        top_up()
+        try:
+            for i in range(start, stop):
+                if plan[i] == []:
+                    yield i, []
+                    continue
+                _j, fut = pending.popleft()
+                t0 = _ns()
+                got = fut.result()
+                self.stats.add_wait_ns(_ns() - t0)
+                top_up()
+                yield i, got
+        finally:
+            for _, fut in pending:
+                fut.cancel()
+
+    def _live_clusters(
+        self, start: int, stop: Optional[int],
+        columns: Optional[Sequence[int]]
+    ) -> List[int]:
+        """Cluster indices to iterate after the cluster-level prune skip
+        (``ReadOptions.filter``): clusters whose zone maps prove no
+        entry can match drop out before any pread is issued for them
+        (counted in ``ReaderStats.clusters_pruned``)."""
+        n = self.n_clusters
+        if stop is None or stop > n:
+            stop = n
+        plan = self._prune_plan()
+        if plan is None:
+            return list(range(start, stop))
+        out = []
+        for i in range(start, stop):
+            if plan[i] == []:
+                self.stats.add_pruned(
+                    clusters=1,
+                    pages=self._pages_of(self.clusters[i], columns),
+                )
+            else:
+                out.append(i)
+        return out
+
+    def iter_filtered(
+        self,
+        columns: Optional[Sequence[int]] = None,
+        start: int = 0,
+        stop: Optional[int] = None,
+    ) -> Iterator[Tuple[int, int, Dict[int, np.ndarray], int]]:
+        """Exact filtered iteration over ``ReadOptions.filter``.
+
+        Yields ``(cluster_index, absolute_first_entry, cols, n_entries)``
+        for every maximal run of entries matching the predicate.  Two
+        phases per zone-surviving segment: the filter's columns decode
+        first and the predicate is evaluated exactly; the remaining
+        requested columns are then **late-materialized** only for the
+        matching runs.  ``cols`` carries the requested columns plus the
+        filter's columns and any ancestor offsets, all range-local.
+        """
+        expr = self.read_options.filter
+        if expr is None:
+            raise ValueError("iter_filtered requires ReadOptions.filter")
+        expr.validate(self.schema)
+        freq = required_columns(self.schema, expr)
+        want = (set(columns) if columns is not None
+                else set(range(self.schema.n_columns)))
+        phase1 = sorted(set(freq))
+        rest = sorted(want - set(phase1))
+        for i, segs in self.iter_cluster_segments(columns=phase1,
+                                                  start=start, stop=stop):
+            abs0 = self.clusters[i].first_entry
+            for e0, cols, n in segs:
+                if n == 0:
+                    continue
+                mask = expr.evaluate(EvalContext(self.schema, cols, n))
+                if not mask.any():
+                    continue
+                d8 = np.diff(mask.astype(np.int8), prepend=0, append=0)
+                rs = np.nonzero(d8 == 1)[0].tolist()
+                re_ = np.nonzero(d8 == -1)[0].tolist()
+                for r0, r1 in zip(rs, re_):
+                    out: Dict[int, np.ndarray] = {}
+                    if rest:
+                        out.update(self.read_entry_range(
+                            i, e0 + r0, e0 + r1, rest
+                        ))
+                    # the filter columns slice straight out of phase 1
+                    out.update(
+                        slice_entry_range(self.schema, cols, r0, r1)
+                    )
+                    yield i, abs0 + e0 + r0, out, r1 - r0
 
     # -- the device decode path (DESIGN.md §9) -------------------------------
 
@@ -852,24 +1351,23 @@ class RNTJReader:
             raise RuntimeError(
                 "device decode disabled (ReadOptions.device_decode='off')"
             )
-        n = self.n_clusters
-        if stop is None or stop > n:
-            stop = n
+        order = self._live_clusters(start, stop, columns)
         depth = self.read_options.prefetch_clusters
         pool = self._get_prefetch_pool() if depth > 0 else None
         if pool is None:
-            for i in range(start, stop):
+            for i in order:
                 yield i, self._finish_staged(
                     self._stage_cluster_device(i, columns), i
                 )
             return
         pending: deque = deque()
-        nxt = start
+        nxt = 0
         try:
-            while pending or nxt < stop:
-                while nxt < stop and len(pending) < depth:
+            while pending or nxt < len(order):
+                while nxt < len(order) and len(pending) < depth:
+                    j = order[nxt]
                     pending.append(
-                        (nxt, pool.submit(self._stage_cluster_device, nxt, columns))
+                        (j, pool.submit(self._stage_cluster_device, j, columns))
                     )
                     nxt += 1
                 i, fut = pending.popleft()
@@ -879,9 +1377,10 @@ class RNTJReader:
                 # top up BEFORE the device half + yield: the next
                 # cluster's host half makes progress while this one
                 # decodes on device and the consumer packs it
-                while nxt < stop and len(pending) < depth:
+                while nxt < len(order) and len(pending) < depth:
+                    j = order[nxt]
                     pending.append(
-                        (nxt, pool.submit(self._stage_cluster_device, nxt, columns))
+                        (j, pool.submit(self._stage_cluster_device, j, columns))
                     )
                     nxt += 1
                 yield i, self._finish_staged(staged, i)
@@ -911,28 +1410,32 @@ class RNTJReader:
         valid until the next iteration.  ``iter_entries`` and
         ``read_column`` always pass ``False``: they may hold views of a
         cluster's arrays beyond the iteration that produced them.
+
+        With ``ReadOptions.filter`` set (and ``prune`` on), clusters the
+        zone maps prove empty are skipped before any pread; surviving
+        clusters still yield in full — re-evaluate the predicate (or use
+        :meth:`iter_filtered`) for exact per-entry selection.
         """
-        n = self.n_clusters
-        if stop is None or stop > n:
-            stop = n
+        order = self._live_clusters(start, stop, columns)
         if recycle is None:
             recycle = self.read_options.recycle_buffers
         recycle = recycle and self._bufpool is not None
         depth = self.read_options.prefetch_clusters
         pool = self._get_prefetch_pool() if depth > 0 else None
         if pool is None:
-            for i in range(start, stop):
+            for i in order:
                 cols = self.read_cluster(i, columns)
                 yield i, cols
                 if recycle:
                     self.recycle(cols)
             return
         pending: deque = deque()
-        nxt = start
+        nxt = 0
         try:
-            while pending or nxt < stop:
-                while nxt < stop and len(pending) < depth:
-                    pending.append((nxt, pool.submit(self.read_cluster, nxt, columns)))
+            while pending or nxt < len(order):
+                while nxt < len(order) and len(pending) < depth:
+                    j = order[nxt]
+                    pending.append((j, pool.submit(self.read_cluster, j, columns)))
                     nxt += 1
                 i, fut = pending.popleft()
                 t0 = _ns()
@@ -940,8 +1443,9 @@ class RNTJReader:
                 self.stats.add_wait_ns(_ns() - t0)
                 # top up BEFORE yielding: the next clusters make progress
                 # while the consumer processes this one
-                while nxt < stop and len(pending) < depth:
-                    pending.append((nxt, pool.submit(self.read_cluster, nxt, columns)))
+                while nxt < len(order) and len(pending) < depth:
+                    j = order[nxt]
+                    pending.append((j, pool.submit(self.read_cluster, j, columns)))
                     nxt += 1
                 yield i, cols
                 if recycle:
@@ -981,6 +1485,23 @@ class RNTJReader:
             idx = file_idx if file_idx is not None else range(self.schema.n_columns)
             arrays = [cols[j] for j in idx]
             yield from recompose_entries(schema, arrays, self.clusters[i].n_entries)
+
+    def iter_filtered_entries(
+        self, fields: Optional[Sequence[str]] = None
+    ) -> Iterator[Dict]:
+        """Entries matching ``ReadOptions.filter``, recomposed like
+        :meth:`iter_entries` — the pruned equivalent of a full scan
+        followed by an exact predicate filter (DESIGN.md §11)."""
+        schema = self.schema if fields is None else self.schema.project(fields)
+        file_idx = (
+            None
+            if fields is None
+            else [self.schema.column_of_path[c.path] for c in schema.columns]
+        )
+        for _i, _e0, cols, n in self.iter_filtered(columns=file_idx):
+            idx = file_idx if file_idx is not None else range(self.schema.n_columns)
+            arrays = [cols[j] for j in idx]
+            yield from recompose_entries(schema, arrays, n)
 
     # -- whole-column access (analysis-style reads) ------------------------------
 

@@ -90,6 +90,10 @@ class RecoveryReport:
     # remote salvage (object-store source): which case ran — final object
     # repaired, or interrupted multipart reassembled (DESIGN.md §10)
     remote: Optional[dict] = None
+    # zone-map disposition (DESIGN.md §11): the journal cannot attest
+    # page statistics, so a rebuild drops them rather than serve
+    # possibly-stale bounds; the reason is recorded here
+    zonemaps: Optional[dict] = None
 
     def as_dict(self) -> dict:
         return {
@@ -109,6 +113,7 @@ class RecoveryReport:
             "output": self.output,
             "multiwriter": self.multiwriter,
             "remote": self.remote,
+            "zonemaps": self.zonemaps,
         }
 
 
@@ -504,11 +509,24 @@ def _rebuild_footer(sink: Sink, schema, clusters: List[ClusterMeta],
     pl = build_pagelist(clusters, schema.n_columns)
     pl_off = sink.reserve(len(pl))
     sink.pwrite(pl_off, pl)
+    # Zone maps are finalization metadata (like the framed-member
+    # side-car): the journal records the scan trusts never carry them,
+    # so a rebuilt footer cannot attest any bounds a previous footer
+    # claimed.  Drop them — pruning degrades to a full scan, which is
+    # always correct — and say why in the report.  They are recomputed
+    # whenever the salvaged clusters re-encode through a merge.
+    report.zonemaps = {
+        "preserved": False,
+        "reason": "journal records carry no page statistics; "
+                  "rebuilt footer omits zone maps instead of serving "
+                  "unattested bounds",
+    }
     extra = {
         "recovered": {
             "clusters_salvaged": report.clusters_salvaged,
             "clusters_dropped": len(report.clusters_dropped),
             "scanned_bytes": report.scan_bytes,
+            "zonemaps_dropped": True,
         }
     }
     ftr = build_footer(n_entries, len(clusters), (pl_off, len(pl)), extra=extra)

@@ -373,6 +373,10 @@ class ReaderStats:
     # ``io.retries`` instead, merged at close.
     retries: int = 0
     giveups: int = 0
+    # zone-map pruning (DESIGN.md §11): clusters/pages the prune plan
+    # skipped before any pread was issued for them
+    clusters_pruned: int = 0
+    pages_pruned: int = 0
     # codec id -> [pages, bytes_in (stored), bytes_out (decoded),
     # decompress_ns]: the read-side mirror of WriterStats.per_codec
     per_codec: Dict[int, List[int]] = field(default_factory=dict)
@@ -392,9 +396,10 @@ class ReaderStats:
         decompress_ns: int,
         decode_ns: int,
         per_codec: Optional[Dict[int, List[int]]] = None,
+        clusters: int = 1,
     ) -> None:
         with self._mu:
-            self.clusters += 1
+            self.clusters += clusters
             self.pages += pages
             self.coalesced_reads += reads
             self.compressed_bytes += compressed_bytes
@@ -424,6 +429,11 @@ class ReaderStats:
     def add_giveup(self) -> None:
         with self._mu:
             self.giveups += 1
+
+    def add_pruned(self, clusters: int = 0, pages: int = 0) -> None:
+        with self._mu:
+            self.clusters_pruned += clusters
+            self.pages_pruned += pages
 
     def merge_io(self, snapshot: IOStats) -> None:
         with self._mu:
@@ -471,6 +481,8 @@ class ReaderStats:
             "bytes_read": self.io.bytes_read,
             "retries": self.retries,
             "giveups": self.giveups,
+            "clusters_pruned": self.clusters_pruned,
+            "pages_pruned": self.pages_pruned,
             "io_retries": self.io.retries,
             "io_giveups": self.io.giveups,
             "io_hedges": self.io.hedges,

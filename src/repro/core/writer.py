@@ -71,6 +71,7 @@ from .metadata import (
     build_journal_body,
     build_member_sidecar,
     build_pagelist,
+    encode_zonemaps,
     finish_journal_record,
     journal_record_size,
 )
@@ -150,6 +151,10 @@ class WriteOptions:
     # the footer of a torn file from the data region alone; False writes
     # the exact pre-journal (v1-shaped) data region
     journal: bool = True
+    # record per-page zone maps (min/max/null-count + entry ranges,
+    # DESIGN.md §11) at seal time and persist them in
+    # footer.extra["zonemaps"]; False writes a pre-PR-10-shaped footer
+    zone_maps: bool = True
     # bounded-retry policy applied by the I/O engine to every write and
     # fsync (None = fail fast, the pre-PR-6 behavior)
     retry_policy: Optional[RetryPolicy] = None
@@ -199,6 +204,8 @@ class _WriterBase:
         self.lock = CountingLock()
         self.stats = WriterStats()
         self._clusters: List[ClusterMeta] = []
+        # per-cluster zone maps, parallel to _clusters (None = no stats)
+        self._zonemaps: List[Optional[dict]] = []
         self._n_entries = 0
         self._closed = False
         # first seal/commit failure: once set, close() releases resources
@@ -311,7 +318,8 @@ class _WriterBase:
                               policy=self._policy,
                               precondition=o.precondition,
                               scatter=o.scatter_commit,
-                              buffer_pool=self._bufpool)
+                              buffer_pool=self._bufpool,
+                              zone_maps=o.zone_maps)
 
     # -- commit protocol ----------------------------------------------------
 
@@ -382,6 +390,7 @@ class _WriterBase:
                     byte_size=sealed.size,
                 )
             )
+            self._zonemaps.append(sealed.zonemaps)
             if self._journal:
                 jrec, desc_crc = self._finish_jrec(
                     seq, JREC_BUFFERED, off, sealed.size, first_entry,
@@ -456,7 +465,7 @@ class _WriterBase:
 
     def _commit_cluster_meta_unbuffered(
         self, n_entries: int, n_elements: List[int], pages: List[PageDesc],
-        uncompressed: int,
+        uncompressed: int, zonemaps: Optional[dict] = None,
     ) -> None:
         # Unbuffered clusters have no contiguous payload to frame, so the
         # journal contribution is a record alone (flags=0: absolute page
@@ -472,6 +481,7 @@ class _WriterBase:
             self._clusters.append(
                 ClusterMeta(first_entry, n_entries, n_elements, list(pages))
             )
+            self._zonemaps.append(zonemaps)
             if jlen:
                 jrec, _ = self._finish_jrec(
                     len(self._clusters) - 1, 0, 0, 0, first_entry, n_entries,
@@ -489,12 +499,16 @@ class _WriterBase:
         pages: List[PageDesc],
         base: int,
         owner=None,
+        zonemaps: Optional[dict] = None,
     ) -> None:
         """Commit an already-assembled cluster payload byte-verbatim — the
         merge fast path's critical section.  ``pages`` carry offsets
         relative to ``base`` (the payload's offset in its source file);
         the output gets a fresh envelope + journal record, so merged
-        files are as recoverable as directly written ones."""
+        files are as recoverable as directly written ones.  ``zonemaps``
+        rides the source cluster's zone maps through unchanged (entry
+        indices are cluster-relative, so a byte-verbatim copy keeps them
+        valid)."""
         nbytes = len(blob)
         rel = [p.rebase(-base) for p in pages] if base else list(pages)
         env_len = CLUSTER_ENV_SIZE if self._journal else 0
@@ -521,6 +535,7 @@ class _WriterBase:
                     byte_size=nbytes,
                 )
             )
+            self._zonemaps.append(zonemaps)
             if self._journal:
                 jrec, desc_crc = self._finish_jrec(
                     seq, JREC_BUFFERED, off, nbytes, first_entry, n_entries,
@@ -566,6 +581,10 @@ class _WriterBase:
                 sc_off = self.sink.reserve(len(sc))
                 self._meta_pwrite(sc_off, sc)
                 extra = {"members": [sc_off, len(sc)]}
+            zm = encode_zonemaps(self._zonemaps)
+            if zm is not None:
+                extra = dict(extra or {})
+                extra["zonemaps"] = zm
             pl = build_pagelist(self._clusters, self.schema.n_columns)
             pl_off = self.sink.reserve(len(pl))
             self._meta_pwrite(pl_off, pl)
@@ -609,10 +628,16 @@ class _WriterBase:
                 self._io.close()
             finally:
                 self.stats.merge_lock(self.lock.snapshot())
-                self.stats.merge_io(self.sink.io.snapshot())
                 if self._bufpool is not None:
                     self.stats.merge_pool(self._bufpool.snapshot())
-                self.sink.close()
+                # the io-stats snapshot must FOLLOW sink.close(): remote
+                # sinks finalize there (multipart complete, tail part
+                # uploads), and retries fired inside that window would
+                # otherwise vanish from WriterStats
+                try:
+                    self.sink.close()
+                finally:
+                    self.stats.merge_io(self.sink.io.snapshot())
         if self._commit_error is not None:
             raise RuntimeError(
                 "writer aborted: a cluster failed to seal or commit; the "
@@ -810,9 +835,10 @@ class FillContext:
         else:
             for payload, desc, ns in self.builder.drain_rest(self.writer._pool):
                 self._page_buf.append(self.writer._commit_page(payload, desc, ns))
+            zm = self.builder.take_zonemaps()
             n_entries, n_elements, unc = self.builder.finish_unbuffered()
             self.writer._commit_cluster_meta_unbuffered(
-                n_entries, n_elements, self._page_buf, unc
+                n_entries, n_elements, self._page_buf, unc, zonemaps=zm
             )
             self._page_buf = []
 

@@ -22,16 +22,18 @@ from __future__ import annotations
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import (
-    BufferMerger, Collection, ColumnBatch, Leaf, ParallelWriter, ReadOptions,
-    RNTJReader, Schema, SequentialWriter, WriteOptions, close_all, merge_files,
+    BufferMerger, Collection, ColumnBatch, F, Leaf, ParallelWriter,
+    ReadOptions, RNTJReader, Schema, SequentialWriter, WriteOptions,
+    close_all, merge_files,
 )
+from repro.core.filter import Expr
 
 EVENT_SCHEMA = Schema([
     Leaf("event_id", "int64"),
@@ -53,6 +55,19 @@ class Cuts:
     min_electrons: int = 1
     min_muons: int = 1
     min_jets: int = 4
+
+
+def cuts_expr(cuts: Cuts) -> Expr:
+    """The zone-map pushdown predicate IMPLIED by the vertical skim.
+
+    Conservative by construction: an event passing the cuts necessarily
+    has at least one electron, muon and jet above ``pt_cut`` (the
+    count thresholds cannot be expressed over zone bounds), so pruning
+    by this expression never drops an event the kernel would keep —
+    the kernel re-applies the exact cuts on whatever survives."""
+    return ((F("electrons_pt._0") > float(cuts.pt_cut))
+            & (F("muons_pt._0") > float(cuts.pt_cut))
+            & (F("jets_pt._0") > float(cuts.pt_cut)))
 
 
 # ---------------------------------------------------------------------------
@@ -164,22 +179,52 @@ def _skim_cluster_arrays(
     })
 
 
+def _concat_batches(schema: Schema, batches: List[ColumnBatch]) -> ColumnBatch:
+    """Concatenate kept sub-batches of ONE input cluster into the single
+    batch the unpruned path would have filled (offset columns carry
+    per-collection sizes, so concatenation is plain per column)."""
+    if len(batches) == 1:
+        return batches[0]
+    data = {
+        c.index: np.concatenate([b.data[c.index] for b in batches])
+        for c in schema.columns
+    }
+    return ColumnBatch(schema, sum(b.n_entries for b in batches), data)
+
+
 def skim_file(
-    in_path: str, fill, cuts: Cuts, read_options: Optional[ReadOptions] = None
+    in_path: str,
+    fill,
+    cuts: Cuts,
+    read_options: Optional[ReadOptions] = None,
+    pushdown: bool = True,
 ) -> int:
     """Skim one input file into ``fill(batch)``; returns kept events.
 
-    Streams through the read engine's prefetching cluster iterator: the
-    next cluster's I/O + decode overlaps the skim kernel and the fill.
+    Streams through the read engine's shared entry-range-selection
+    helper (``iter_cluster_segments``), so the pruned and unpruned paths
+    share partition boundaries: exactly ONE output batch is filled per
+    surviving input cluster in both modes, which keeps output files
+    byte-identical (DESIGN.md §11).  With ``pushdown`` (default) and no
+    explicit ``ReadOptions.filter``, the predicate implied by ``cuts``
+    is pushed down; zone-map pruning then skips clusters/pages that
+    cannot contain a passing event before any pread.  Files without
+    zone maps (or ``prune=False``) degrade to the full scan.
     """
-    r = RNTJReader(in_path, options=read_options or DEFAULT_READ_OPTIONS)
+    ropts = read_options or DEFAULT_READ_OPTIONS
+    if pushdown and ropts.filter is None:
+        ropts = replace(ropts, filter=cuts_expr(cuts))
+    r = RNTJReader(in_path, options=ropts)
     kept = 0
     try:
-        for ci, cols in r.iter_clusters():
-            batch = _skim_cluster_arrays(
-                r.schema, cols, r.clusters[ci].n_entries, cuts
-            )
-            if batch is not None:
+        for _ci, segments in r.iter_cluster_segments():
+            parts = []
+            for _e0, cols, n in segments:
+                b = _skim_cluster_arrays(r.schema, cols, n, cuts)
+                if b is not None:
+                    parts.append(b)
+            if parts:
+                batch = _concat_batches(OUT_SCHEMA, parts)
                 fill(batch)
                 kept += batch.n_entries
     finally:
@@ -200,8 +245,13 @@ def skim_partitions(
     options: Optional[WriteOptions] = None,
     imt_workers: Optional[int] = None,
     read_options: Optional[ReadOptions] = None,
+    pushdown: bool = True,
 ) -> Dict:
     """Skim all partitions with the given strategy; returns stats.
+
+    ``pushdown`` (default on) pushes the predicate implied by ``cuts``
+    into every strategy's readers (see :func:`skim_file`): zone-mapped
+    inputs prune, legacy inputs full-scan, outputs stay byte-identical.
 
     Every resource (the thread pool, per-worker writers, merger files) is
     released on the error path too: a worker raising propagates the
@@ -238,7 +288,7 @@ def skim_partitions(
                                      opts)
                 try:
                     for f in files:
-                        add_kept(skim_file(f, w.fill_batch, cuts, ropts))
+                        add_kept(skim_file(f, w.fill_batch, cuts, ropts, pushdown))
                 finally:
                     w.close()
             futs = [pool.submit(run_part, p, fs) for p, fs in partitions.items()]
@@ -252,7 +302,7 @@ def skim_partitions(
                        else str(out / f"tmp_{part}_{i}.rntj"))
                 w = SequentialWriter(OUT_SCHEMA, dst, options)
                 try:
-                    add_kept(skim_file(f, w.fill_batch, cuts, ropts))
+                    add_kept(skim_file(f, w.fill_batch, cuts, ropts, pushdown))
                 finally:
                     w.close()
                 if strategy == "separate":
@@ -276,7 +326,7 @@ def skim_partitions(
                 def run_file(part, f):
                     bmf = mergers[part].get_file()
                     try:
-                        add_kept(skim_file(f, bmf.fill_batch, cuts, ropts))
+                        add_kept(skim_file(f, bmf.fill_batch, cuts, ropts, pushdown))
                     finally:
                         bmf.close()
                 futs = [pool.submit(run_file, p, f)
@@ -293,7 +343,7 @@ def skim_partitions(
                 def run_file(part, f):
                     ctx = writers[part].create_fill_context()
                     try:
-                        add_kept(skim_file(f, ctx.fill_batch, cuts, ropts))
+                        add_kept(skim_file(f, ctx.fill_batch, cuts, ropts, pushdown))
                     finally:
                         ctx.close()
                 futs = [pool.submit(run_file, p, f)

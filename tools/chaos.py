@@ -21,6 +21,10 @@ asserts the robustness contract that DESIGN.md §8 promises for it:
 * ``kill``          — a matrix of process-kill points across the file:
                       each torn file is salvaged by ``recover_container``
                       and every salvaged entry reads back byte-identical.
+* ``skim``          — selective (zone-map pruned) filtered reads under
+                      transient pread faults (retried, results equal the
+                      clean run) and after a kill+recover (zone maps
+                      dropped with a reason, filtered results exact).
 * ``remote``        — the object-store sink cell matrix (DESIGN.md §10):
                       clean multipart byte-identity, transient transport
                       faults retried, seeded random faults, torn ranged
@@ -56,6 +60,7 @@ import numpy as np  # noqa: E402
 
 from repro.core import (  # noqa: E402
     Collection,
+    F,
     FaultInjectingSink,
     FaultSpec,
     FencedError,
@@ -277,6 +282,63 @@ def scenario_kill(entries, seed):
         salvaged_total += len(got)
         results.append((K, len(got)))
     return {"kill_points": len(kills), "salvage": results}
+
+
+def scenario_skim(entries, seed):
+    """Selective (zone-map pruned) reads under the §8.2 fault schedule.
+
+    Three invariants: (a) a pruned filtered read through a faulty sink
+    equals the clean pruned read (transient pread errors retried, not
+    surfaced); (b) pruned ≡ unpruned on the same faulty sink; (c) a file
+    torn by a mid-write kill recovers with its zone maps DROPPED (the
+    journal cannot attest them) and the filtered read over the salvaged
+    file is exact — stale bounds are never served.
+    """
+    pred = (F("vals._0") > 0.8) | (F("id") < 10)
+
+    def filtered(sink, prune, retry=None):
+        r = RNTJReader(sink, options=ReadOptions(filter=pred, prune=prune,
+                                                 retry_policy=retry))
+        try:
+            return list(r.iter_filtered_entries()), r.stats
+        finally:
+            r.close()
+
+    clean = MemorySink()
+    write_through(clean, entries, cluster_bytes=2048,
+                  page_size=512, codec="none")
+    ref, ref_stats = filtered(clean, prune=True)
+    full, _ = filtered(clean, prune=False)
+    assert ref == full, "pruned filtered read differs from full scan"
+
+    # (a)+(b) transient pread faults under the reader's retry policy
+    fs = FaultInjectingSink(memory_sink_from_bytes(bytes(clean.buf[:clean.size])), [
+        FaultSpec.transient_error(count=3, op="read"),
+        FaultSpec.transient_error(err=errno.EAGAIN, count=2, op="read",
+                                  at_call=5),
+    ])
+    got, stats = filtered(fs, prune=True, retry=POLICY)
+    assert got == ref, "faulty-sink pruned read differs from clean read"
+    assert stats.retries >= 1, "transient pread faults were not retried"
+
+    # (c) kill mid-write, recover, re-filter: zone maps dropped, results exact
+    fs = FaultInjectingSink(MemorySink(), [FaultSpec.kill_at(clean.size // 2)])
+    try:
+        write_through(fs, entries, cluster_bytes=2048,
+                      page_size=512, codec="none")
+    except (ProcessKilled, OSError, RuntimeError):
+        pass
+    ms = memory_sink_from_bytes(crashed_file_bytes(fs))
+    rep = recover_container(ms)
+    assert rep.rebuilt, "kill point did not tear the footer"
+    assert rep.zonemaps is not None and not rep.zonemaps["preserved"], (
+        "recovery must drop unattested zone maps with a reason")
+    pruned, _ = filtered(ms, prune=True)
+    unpruned, _ = filtered(ms, prune=False)
+    assert pruned == unpruned, "salvaged file: pruned differs from full scan"
+    n_match = len(pruned)
+    return {"matched": len(ref), "retries": stats.retries,
+            "salvaged_matches": n_match}
 
 
 # -- multi-process crash matrix (DESIGN.md §8.6) -----------------------------
@@ -629,6 +691,7 @@ SCENARIOS = {
     "ring": scenario_ring,
     "latency": scenario_latency,
     "kill": scenario_kill,
+    "skim": scenario_skim,
     "mpkill": scenario_mpkill,
     "mprecover": scenario_mprecover,
     "remote": scenario_remote,
