@@ -779,15 +779,20 @@ class RNTJReader:
         **range-local** end offsets (rebased so the range recomposes
         like a miniature cluster).  Ancestor offset columns of every
         requested column ride along — they locate the element ranges.
-        Pages the range skips are counted in ``ReaderStats.pages_pruned``
-        (``clusters`` is not bumped: range reads are sub-cluster).
 
         ``_page_cache`` (one dict per cluster, shared across the ranges
         of a prune plan) memoizes decoded pages so adjacent ranges that
         straddle a page boundary never pread or decode that page twice —
         the pruned path can only ever read *fewer* pages than a full
-        cluster scan, never more.  The caller owns pruned-page
-        accounting in that mode (distinct pages are ``len(cache)``).
+        cluster scan, never more.
+
+        ``ReaderStats.pages_pruned`` accounting is owned by the CALLER:
+        a plan-driven iterator counts each cluster exactly once, as its
+        page total minus the distinct pages decoded (``len(cache)``).
+        Per-call accounting here would re-count the same unread pages
+        for every range issued against one cluster, so a standalone
+        range read contributes nothing to ``pages_pruned`` (``clusters``
+        is likewise not bumped: range reads are sub-cluster).
         """
         cm = self.clusters[cluster_index]
         want = self._expand_ancestors(columns)
@@ -801,7 +806,6 @@ class RNTJReader:
 
         out: Dict[int, np.ndarray] = {}
         child_range: Dict[int, Tuple[int, int]] = {}
-        pages_total = sum(len(v) for v in by_col.values())
         pages_read = reads = cbytes = ubytes = 0
         io_ns = deco_ns = dec_ns = 0
         for ci in targets:
@@ -878,8 +882,6 @@ class RNTJReader:
             uncompressed_bytes=ubytes, io_ns=io_ns, decompress_ns=dec_ns,
             decode_ns=deco_ns, clusters=0,
         )
-        if _page_cache is None:
-            self.stats.add_pruned(pages=pages_total - pages_read)
         return out
 
     def iter_cluster_segments(
@@ -1009,6 +1011,14 @@ class RNTJReader:
         requested columns are then **late-materialized** only for the
         matching runs.  ``cols`` carries the requested columns plus the
         filter's columns and any ancestor offsets, all range-local.
+
+        The matching runs of one cluster late-materialize through ONE
+        shared decoded-page cache (mirroring the phase-1 reads inside
+        :meth:`iter_cluster_segments`), so adjacent runs never pread or
+        decode a shared page twice — the pruned read touches no more
+        pages than the unpruned scan here too.  Skipped pages of the
+        late-materialized columns are counted in
+        ``ReaderStats.pages_pruned`` once per cluster.
         """
         expr = self.read_options.filter
         if expr is None:
@@ -1019,9 +1029,12 @@ class RNTJReader:
                 else set(range(self.schema.n_columns)))
         phase1 = sorted(set(freq))
         rest = sorted(want - set(phase1))
+        rest_want = (sorted(self._expand_ancestors(rest))
+                     if rest else None)
         for i, segs in self.iter_cluster_segments(columns=phase1,
                                                   start=start, stop=stop):
             abs0 = self.clusters[i].first_entry
+            cache: Dict[int, np.ndarray] = {}
             for e0, cols, n in segs:
                 if n == 0:
                     continue
@@ -1035,13 +1048,19 @@ class RNTJReader:
                     out: Dict[int, np.ndarray] = {}
                     if rest:
                         out.update(self.read_entry_range(
-                            i, e0 + r0, e0 + r1, rest
+                            i, e0 + r0, e0 + r1, rest, _page_cache=cache
                         ))
                     # the filter columns slice straight out of phase 1
                     out.update(
                         slice_entry_range(self.schema, cols, r0, r1)
                     )
                     yield i, abs0 + e0 + r0, out, r1 - r0
+            if rest and segs:
+                # zone-skipped clusters (segs == []) are accounted inside
+                # iter_cluster_segments; surviving ones account their
+                # late-materialization columns here, once per cluster
+                total = self._pages_of(self.clusters[i], rest_want)
+                self.stats.add_pruned(pages=max(total - len(cache), 0))
 
     # -- the device decode path (DESIGN.md §9) -------------------------------
 
@@ -1396,6 +1415,7 @@ class RNTJReader:
         start: int = 0,
         stop: Optional[int] = None,
         recycle: Optional[bool] = None,
+        prune: bool = True,
     ) -> Iterator[Tuple[int, Dict[int, np.ndarray]]]:
         """Yield ``(cluster_index, {column: elements})`` in entry order.
 
@@ -1415,8 +1435,17 @@ class RNTJReader:
         zone maps prove empty are skipped before any pread; surviving
         clusters still yield in full — re-evaluate the predicate (or use
         :meth:`iter_filtered`) for exact per-entry selection.
+        ``prune=False`` ignores the filter entirely (every cluster
+        yields, no pruned-stats recorded) — the full-scan mode the
+        whole-file accessors :meth:`iter_entries` / :meth:`read_column`
+        use so their results never depend on ``ReadOptions.filter``.
         """
-        order = self._live_clusters(start, stop, columns)
+        if prune:
+            order = self._live_clusters(start, stop, columns)
+        else:
+            n = self.n_clusters
+            order = list(range(start, n if stop is None or stop > n
+                               else stop))
         if recycle is None:
             recycle = self.read_options.recycle_buffers
         recycle = recycle and self._bufpool is not None
@@ -1474,6 +1503,14 @@ class RNTJReader:
         return recompose_entries(schema, arrays, cm.n_entries)
 
     def iter_entries(self, fields: Optional[Sequence[str]] = None) -> Iterator[Dict]:
+        """EVERY entry of the file, recomposed in entry order.
+
+        A full scan regardless of ``ReadOptions.filter`` (``prune=False``
+        below bypasses the plan): the filter belongs to
+        :meth:`iter_filtered` / :meth:`iter_filtered_entries`, and a
+        whole-file accessor silently dropping zone-pruned-but-unfiltered
+        clusters would be a trap.
+        """
         schema = self.schema if fields is None else self.schema.project(fields)
         file_idx = (
             None
@@ -1481,7 +1518,8 @@ class RNTJReader:
             else [self.schema.column_of_path[c.path] for c in schema.columns]
         )
         # recycle=False: recomposed entries may hold views of the arrays
-        for i, cols in self.iter_clusters(columns=file_idx, recycle=False):
+        for i, cols in self.iter_clusters(columns=file_idx, recycle=False,
+                                          prune=False):
             idx = file_idx if file_idx is not None else range(self.schema.n_columns)
             arrays = [cols[j] for j in idx]
             yield from recompose_entries(schema, arrays, self.clusters[i].n_entries)
@@ -1506,11 +1544,15 @@ class RNTJReader:
     # -- whole-column access (analysis-style reads) ------------------------------
 
     def read_column(self, path: str) -> np.ndarray:
-        """Concatenate a column across clusters (prefetched).
+        """Concatenate a column across ALL clusters (prefetched).
 
         Offset columns are globalized: cluster-relative offsets are shifted
         by the running element count of their *child* column — giving the
         usual global offsets array.
+
+        Like :meth:`iter_entries`, a full scan regardless of
+        ``ReadOptions.filter``: the result always has exactly
+        ``n_entries`` top-level elements, zone maps or not.
         """
         ci = self.schema.column_of_path[path]
         col = self.schema.columns[ci]
@@ -1523,7 +1565,8 @@ class RNTJReader:
             base = 0
             # recycle=False on both paths: chunks holds every cluster's
             # array until the final concatenate
-            for i, cols in self.iter_clusters(columns=[ci], recycle=False):
+            for i, cols in self.iter_clusters(columns=[ci], recycle=False,
+                                              prune=False):
                 arr = cols[ci].astype(np.int64)
                 chunks.append(arr + base)
                 if child is not None:
@@ -1531,7 +1574,8 @@ class RNTJReader:
                 elif len(arr):
                     base += int(arr[-1])
         else:
-            for _i, cols in self.iter_clusters(columns=[ci], recycle=False):
+            for _i, cols in self.iter_clusters(columns=[ci], recycle=False,
+                                               prune=False):
                 chunks.append(cols[ci])
         return (
             np.concatenate(chunks)

@@ -57,17 +57,29 @@ class Cuts:
     min_jets: int = 4
 
 
-def cuts_expr(cuts: Cuts) -> Expr:
+def cuts_expr(cuts: Cuts) -> Optional[Expr]:
     """The zone-map pushdown predicate IMPLIED by the vertical skim.
 
     Conservative by construction: an event passing the cuts necessarily
-    has at least one electron, muon and jet above ``pt_cut`` (the
-    count thresholds cannot be expressed over zone bounds), so pruning
-    by this expression never drops an event the kernel would keep —
-    the kernel re-applies the exact cuts on whatever survives."""
-    return ((F("electrons_pt._0") > float(cuts.pt_cut))
-            & (F("muons_pt._0") > float(cuts.pt_cut))
-            & (F("jets_pt._0") > float(cuts.pt_cut)))
+    has at least one above-``pt_cut`` element in every collection whose
+    ``min_*`` is >= 1 (the count thresholds themselves cannot be
+    expressed over zone bounds), so pruning by this expression never
+    drops an event the kernel would keep — the kernel re-applies the
+    exact cuts on whatever survives.  A collection with ``min_* == 0``
+    imposes no existential requirement and contributes no atom (an
+    electron-only channel must not prune on muons); with every min at
+    zero there is nothing to push down and this returns ``None``."""
+    atoms = [F(path) > float(cuts.pt_cut)
+             for path, need in (("electrons_pt._0", cuts.min_electrons),
+                                ("muons_pt._0", cuts.min_muons),
+                                ("jets_pt._0", cuts.min_jets))
+             if need >= 1]
+    if not atoms:
+        return None
+    expr = atoms[0]
+    for a in atoms[1:]:
+        expr = expr & a
+    return expr
 
 
 # ---------------------------------------------------------------------------
@@ -208,12 +220,15 @@ def skim_file(
     byte-identical (DESIGN.md §11).  With ``pushdown`` (default) and no
     explicit ``ReadOptions.filter``, the predicate implied by ``cuts``
     is pushed down; zone-map pruning then skips clusters/pages that
-    cannot contain a passing event before any pread.  Files without
-    zone maps (or ``prune=False``) degrade to the full scan.
+    cannot contain a passing event before any pread.  Cuts that imply
+    no predicate (every ``min_*`` at zero), files without zone maps,
+    and ``prune=False`` all degrade to the full scan.
     """
     ropts = read_options or DEFAULT_READ_OPTIONS
     if pushdown and ropts.filter is None:
-        ropts = replace(ropts, filter=cuts_expr(cuts))
+        expr = cuts_expr(cuts)
+        if expr is not None:
+            ropts = replace(ropts, filter=expr)
     r = RNTJReader(in_path, options=ropts)
     kept = 0
     try:

@@ -679,3 +679,118 @@ def test_skim_segments_match_unpruned_partitioning(tmp_path):
     finally:
         rp.close()
         rf.close()
+
+
+# ---------------------------------------------------------------------------
+# review regressions: zero-min cuts, full-scan accessors, run-shared pages
+
+
+def test_cuts_expr_drops_zero_min_collections():
+    # a collection with min_* == 0 imposes no existential requirement:
+    # its atom must not appear in the pushdown predicate, and all-zero
+    # mins imply no predicate at all
+    from repro.skim.engine import EVENT_SCHEMA, Cuts, cuts_expr
+
+    assert cuts_expr(Cuts(min_electrons=0, min_muons=0, min_jets=0)) is None
+    expr = cuts_expr(Cuts(min_muons=0))
+    assert expr is not None
+    paths = {EVENT_SCHEMA.columns[ci].path
+             for ci in required_columns(EVENT_SCHEMA, expr)}
+    assert "muons_pt._0" not in paths
+    assert {"electrons_pt._0", "jets_pt._0"} <= paths
+    # defaults (every min >= 1): all three atoms present
+    full = {EVENT_SCHEMA.columns[ci].path
+            for ci in required_columns(EVENT_SCHEMA, cuts_expr(Cuts()))}
+    assert {"electrons_pt._0", "muons_pt._0", "jets_pt._0"} <= full
+
+
+def test_skim_pushdown_zero_min_channel_no_loss(tmp_path):
+    # an electron+jet channel (min_muons=0) over a file whose muons are
+    # ALL below the cut: an unconditional muon atom would zone-prune
+    # every cluster (silent total loss); the cuts-implied predicate must
+    # skip the muon atom so pruned ≡ unpruned
+    from repro.skim.engine import Cuts, EVENT_SCHEMA, skim_file
+
+    rng = np.random.default_rng(3)
+    n = 3000
+    ne = rng.poisson(1.5, n).astype(np.int64)
+    nm = rng.poisson(1.0, n).astype(np.int64)
+    nj = rng.poisson(6.0, n).astype(np.int64)
+    hot = lambda k: (rng.exponential(18.0, int(k)) + 15.0).astype(np.float32)
+    src = str(tmp_path / "mu_cold.rntj")
+    with SequentialWriter(EVENT_SCHEMA, src,
+                          WriteOptions(page_size=1024,
+                                       cluster_bytes=32 * 1024,
+                                       codec="none")) as w:
+        w.fill_batch(ColumnBatch.from_arrays(EVENT_SCHEMA, n, {
+            "event_id": np.arange(n, dtype=np.int64),
+            "met": rng.exponential(30.0, n).astype(np.float32),
+            "electrons_pt": ne, "electrons_pt._0": hot(ne.sum()),
+            "muons_pt": nm,
+            "muons_pt._0": rng.uniform(1.0, 10.0, int(nm.sum()))
+                              .astype(np.float32),
+            "jets_pt": nj, "jets_pt._0": hot(nj.sum()),
+        }))
+    cuts = Cuts(pt_cut=20.0, min_electrons=1, min_muons=0, min_jets=2)
+    got = {}
+    for mode in (True, False):
+        ids = []
+
+        def fill(b, ids=ids):
+            ci = b.schema.column_of_path["event_id"]
+            ids.extend(np.asarray(b.data[ci]).tolist())
+
+        kept = skim_file(src, fill, cuts, pushdown=mode)
+        assert kept == len(ids)
+        got[mode] = ids
+    assert got[True] == got[False]
+    assert len(got[True]) > 0
+
+
+def test_full_scan_accessors_ignore_filter():
+    # iter_entries / read_column are whole-file APIs: with a filter set
+    # they must not silently drop zone-pruned clusters
+    sink = MemorySink()
+    _flat_file(sink)
+    expr = F("id").between(0, 50)
+    ref = RNTJReader(sink)
+    r = RNTJReader(sink, options=ReadOptions(filter=expr))
+    try:
+        n = len(list(ref.iter_entries()))
+        assert len(list(r.iter_entries())) == n
+        np.testing.assert_array_equal(r.read_column("id"),
+                                      ref.read_column("id"))
+        np.testing.assert_array_equal(r.read_column("val"),
+                                      ref.read_column("val"))
+        assert r.stats.clusters_pruned == 0
+    finally:
+        r.close()
+        ref.close()
+
+
+def test_iter_filtered_run_shared_pages_counted_once():
+    # many short matching runs inside one cluster: late-materialization
+    # pages shared by adjacent runs decode once, and skipped pages are
+    # accounted once per cluster — so neither pages nor pages_pruned can
+    # exceed the file's total page count (the old per-run accounting did)
+    schema = Schema([Leaf("id", "int64"), Leaf("val", "float64")])
+    n = 128
+    sink = MemorySink()
+    opts = WriteOptions(page_size=256, cluster_bytes=1 << 20, codec="none")
+    with SequentialWriter(schema, sink, opts) as w:
+        w.fill_batch(ColumnBatch.from_arrays(schema, n, {
+            "id": np.arange(n, dtype=np.int64),
+            "val": np.arange(n, dtype=np.float64) * 0.5,
+        }))
+    expr = F("id").between(0, 1)
+    for a in range(4, n, 4):
+        expr = expr | F("id").between(a, a + 1)
+    r = RNTJReader(sink, options=ReadOptions(filter=expr))
+    try:
+        got = [e["id"] for e in r.iter_filtered_entries()]
+        assert got == [i for i in range(n) if i % 4 in (0, 1)]
+        total_pages = sum(len(cm.pages) for cm in r.clusters)
+        assert r.stats.pages <= total_pages
+        assert r.stats.pages_pruned <= total_pages
+    finally:
+        r.close()
